@@ -1,0 +1,33 @@
+"""Shared benchmark utilities, incl. the paper's M^g generator (App. C.1)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+
+def generate_group_sizes(m: int, g: int, seed: int = 0) -> np.ndarray:
+    """Paper appendix C.1: random group dims summing exactly to M."""
+    rng = np.random.default_rng(seed)
+    v = rng.integers(0, 2 * (m // g) + 1, g).astype(np.float64)
+    if v.sum() == 0:
+        v[:] = 1.0
+    v = np.floor(v * (m / v.sum())).astype(np.int64)
+    v[-1] += m - v.sum()
+    assert v.sum() == m and (v >= 0).all()
+    return v.astype(np.int32)
+
+
+def time_fn(fn, *args, iters: int = 5, warmup: int = 2):
+    """Median wall time (seconds) of a jitted callable."""
+    for _ in range(warmup):
+        out = fn(*args)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))

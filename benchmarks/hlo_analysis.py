@@ -1,0 +1,2 @@
+"""Shim: the loop-aware HLO analyzer lives in repro.launch.hlo_analysis."""
+from repro.launch.hlo_analysis import analyze, parse_module  # noqa: F401

@@ -1,0 +1,97 @@
+"""Aggregate dry-run JSONs into the §Dry-run / §Roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline [--dir benchmarks/results/dryrun]
+
+Emits a markdown table per mesh: the three roofline terms, the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, and per-device memory.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import ARCHS
+from repro.configs.base import SHAPES, cell_is_runnable
+
+HBM_PER_CHIP = 16e9  # v5e
+
+
+def load(dirname):
+    recs = {}
+    variants = []
+    for path in glob.glob(os.path.join(dirname, "*.json")):
+        r = json.load(open(path))
+        name = os.path.basename(path)[:-5]
+        if name.endswith(("_single", "_multi")):
+            key = (r["arch"], r["shape"], r.get("mesh", "?"), "bf16")
+            recs[key] = r
+        else:
+            variants.append((name, r))
+    return recs, sorted(variants)
+
+
+def fmt_table(recs, mesh, out):
+    out.append(f"\n### Mesh {mesh}\n")
+    out.append("| arch | shape | compute s | memory s | collective s | "
+               "dominant | useful flops | mem/chip GB | fits |")
+    out.append("|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCHS:
+        for shape in SHAPES:
+            if not cell_is_runnable(arch, shape):
+                out.append(f"| {arch} | {shape} | — | — | — | skipped "
+                           f"(O(S²) full attention @512k, DESIGN §5) | — | — | — |")
+                continue
+            r = recs.get((arch, shape, mesh, "bf16"))
+            if r is None:
+                out.append(f"| {arch} | {shape} | MISSING | | | | | | |")
+                continue
+            if not r.get("ok"):
+                out.append(f"| {arch} | {shape} | FAILED: "
+                           f"{r.get('error','?')[:60]} | | | | | | |")
+                continue
+            rf = r["roofline"]
+            m = r["memory"]
+            dev_bytes = (m.get("argument_bytes") or 0) + \
+                (m.get("temp_bytes") or 0)
+            fits = "Y" if dev_bytes < HBM_PER_CHIP else "NO"
+            out.append(
+                f"| {arch} | {shape} | {rf['compute_s']:.4f} | "
+                f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+                f"{rf['dominant'].replace('_s','')} | "
+                f"{rf['useful_flops_ratio']:.2f} | "
+                f"{dev_bytes/1e9:.2f} | {fits} |")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="benchmarks/results/dryrun")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    recs, variants = load(args.dir)
+    out = ["## Roofline (derived from compiled dry-run artifacts)"]
+    for mesh in ("16x16", "2x16x16"):
+        if any(k[2] == mesh for k in recs):
+            fmt_table(recs, mesh, out)
+    if variants:
+        out.append("\n### §Perf variants (non-default configs)\n")
+        out.append("| artifact | compute s | memory s | collective s | "
+                   "useful |")
+        out.append("|---|---|---|---|---|")
+        for name, r in variants:
+            if not r.get("ok"):
+                continue
+            rf = r["roofline"]
+            out.append(f"| {name} | {rf['compute_s']:.4f} | "
+                       f"{rf['memory_s']:.4f} | {rf['collective_s']:.4f} | "
+                       f"{rf['useful_flops_ratio']:.2f} |")
+    text = "\n".join(out)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+    print(text)
+
+
+if __name__ == "__main__":
+    main()

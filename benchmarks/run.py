@@ -1,0 +1,38 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+  PYTHONPATH=src python -m benchmarks.run [--only fig2a,...]
+"""
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma list: fig2a,fig2b,equivalence,moe_layer")
+    args = ap.parse_args()
+
+    from benchmarks import (bench_equivalence, bench_grouped_gemm,
+                            bench_memory, bench_moe_layer)
+    suites = {
+        "fig2a": bench_grouped_gemm.run,
+        "fig2b": bench_memory.run,
+        "equivalence": bench_equivalence.run,
+        "moe_layer": bench_moe_layer.run,
+    }
+    wanted = (args.only.split(",") if args.only else list(suites))
+
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    for key in wanted:
+        suites[key](report)
+
+
+if __name__ == "__main__":
+    main()

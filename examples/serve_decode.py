@@ -1,0 +1,40 @@
+"""Batched serving: prefill a batch of prompts, decode with per-request
+sampling; exercises the KV-cache (and recurrent-state) serving path.
+
+  PYTHONPATH=src python examples/serve_decode.py --arch recurrentgemma-2b
+"""
+import argparse
+
+import jax
+
+from repro.configs import smoke_config
+from repro.models.model_zoo import make_model, synthetic_batch
+from repro.serve.engine import Engine
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="recurrentgemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=64)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.8)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config(args.arch)
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = Engine(model, params, max_new_tokens=args.max_new,
+                    temperature=args.temperature)
+
+    batch = synthetic_batch(jax.random.PRNGKey(1), cfg, args.prompt_len,
+                            args.batch)
+    res = engine.generate(batch, key=jax.random.PRNGKey(42))
+    for i in range(args.batch):
+        print(f"request {i}: {res.tokens[i].tolist()}")
+    print(f"{int(res.num_generated.sum())} tokens generated "
+          f"({cfg.name}, {'recurrent' if cfg.family in ('ssm', 'hybrid') else 'KV-cache'} decode)")
+
+
+if __name__ == "__main__":
+    main()

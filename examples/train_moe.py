@@ -1,0 +1,70 @@
+"""End-to-end MoE training with the paper's padding-free fp8 grouped GEMM.
+
+  PYTHONPATH=src python examples/train_moe.py --steps 40 --precision fp8
+
+Trains a reduced deepseek-moe (fine-grained experts — the paper's target
+workload) and reports the padding the grouped GEMM avoided each step.
+"""
+import argparse
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import smoke_config
+from repro.data.pipeline import DataConfig, SyntheticLM
+from repro.models.model_zoo import make_model
+from repro.optim import adamw
+from repro.train.trainer import make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=40)
+    ap.add_argument("--precision", default="bf16", choices=["bf16", "fp8"])
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=128)
+    args = ap.parse_args(argv)
+
+    cfg = smoke_config("deepseek-moe-16b")
+    cfg = dataclasses.replace(cfg, precision=args.precision,
+                              dtype=jnp.float32,
+                              gemm_backend="xla_exact"
+                              if args.precision == "fp8" else None)
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+
+    opt_cfg = adamw.OptConfig(lr=1e-3, total_steps=args.steps,
+                              warmup_steps=5, use_master=False)
+    opt_state = adamw.init_opt_state(params, opt_cfg)
+    step_fn = jax.jit(make_train_step(model.loss, opt_cfg),
+                      donate_argnums=(0, 1))
+    data = SyntheticLM(DataConfig(seed=0, batch_size=args.batch,
+                                  seq_len=args.seq), cfg)
+
+    # padding the baseline WOULD have added (per MoE layer, per step):
+    e = cfg.moe.num_experts
+    tokens = args.batch * args.seq * cfg.moe.top_k
+    exp_pad_rows = e * (128 - 1) / 2          # expected pad rows @ block 128
+    print(f"precision={args.precision}  experts={e} top_k={cfg.moe.top_k}")
+    print(f"grouped GEMM rows/step/layer: {tokens} "
+          f"(padding baseline would add ~{exp_pad_rows:.0f} rows "
+          f"= {exp_pad_rows / tokens * 100:.1f}% waste)")
+
+    first = last = None
+    for step in range(args.steps):
+        params, opt_state, m = step_fn(params, opt_state,
+                                       data.batch_at(step))
+        if step == 0:
+            first = float(m["loss"])
+        last = float(m["loss"])
+        if step % 10 == 0:
+            print(f"step {step:3d}  loss {float(m['loss']):.4f}  "
+                  f"gnorm {float(m['grad_norm']):.2f}")
+    print(f"loss: {first:.3f} -> {last:.3f}")
+    assert last < first, "training did not reduce loss"
+
+
+if __name__ == "__main__":
+    main()

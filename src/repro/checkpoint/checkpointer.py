@@ -1,0 +1,110 @@
+"""Fault-tolerant checkpointing: atomic, versioned, auto-resume.
+
+Layout:  <dir>/step_<n>/{arrays.npz, meta.json}  written to a tmp dir and
+``os.rename``d into place (atomic on POSIX), then ``latest`` rewritten.
+A crash mid-write leaves at most an orphan tmp dir; ``latest_step`` only
+ever sees complete checkpoints.  ``keep_last`` bounds disk usage.
+
+On a real multi-host fleet each host writes its own param shards (the tree
+structure is identical); here arrays are gathered (single-process).
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+from typing import Any, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(ckpt_dir: str, step: int, tree: Any, *, keep_last: int = 3,
+         extra_meta: Optional[dict] = None) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    tmp = os.path.join(ckpt_dir, f".tmp_step_{step}")
+    final = os.path.join(ckpt_dir, f"step_{step}")
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    leaves, treedef = _flatten(tree)
+    arrays = {f"a{i}": np.asarray(jax.device_get(x)) for i, x in
+              enumerate(leaves)}
+    np.savez(os.path.join(tmp, "arrays.npz"), **arrays)
+    meta = {"step": step, "num_leaves": len(leaves),
+            "treedef": str(treedef), **(extra_meta or {})}
+    with open(os.path.join(tmp, "meta.json"), "w") as f:
+        json.dump(meta, f)
+
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)                       # atomic publish
+    with open(os.path.join(ckpt_dir, ".latest_tmp"), "w") as f:
+        f.write(str(step))
+    os.rename(os.path.join(ckpt_dir, ".latest_tmp"),
+              os.path.join(ckpt_dir, "latest"))
+
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: str, keep_last: int):
+    steps = sorted(all_steps(ckpt_dir))
+    for s in steps[:-keep_last] if keep_last else []:
+        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s}"),
+                      ignore_errors=True)
+
+
+def all_steps(ckpt_dir: str):
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for name in os.listdir(ckpt_dir):
+        if name.startswith("step_"):
+            try:
+                out.append(int(name.split("_", 1)[1]))
+            except ValueError:
+                pass
+    return out
+
+
+def latest_step(ckpt_dir: str) -> Optional[int]:
+    path = os.path.join(ckpt_dir, "latest")
+    if os.path.exists(path):
+        with open(path) as f:
+            s = int(f.read().strip())
+        if os.path.isdir(os.path.join(ckpt_dir, f"step_{s}")):
+            return s
+    steps = all_steps(ckpt_dir)     # fall back to scan (torn 'latest')
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str, step: int, like: Any) -> Tuple[Any, dict]:
+    """Restore into the structure (and shardings) of `like`."""
+    path = os.path.join(ckpt_dir, f"step_{step}")
+    with open(os.path.join(path, "meta.json")) as f:
+        meta = json.load(f)
+    data = np.load(os.path.join(path, "arrays.npz"))
+    leaves, treedef = _flatten(like)
+    assert meta["num_leaves"] == len(leaves), "checkpoint/model mismatch"
+    new_leaves = []
+    for i, ref in enumerate(leaves):
+        arr = data[f"a{i}"]
+        if hasattr(ref, "sharding"):
+            arr = jax.device_put(arr.astype(ref.dtype), ref.sharding)
+        new_leaves.append(arr)
+    return jax.tree.unflatten(treedef, new_leaves), meta
+
+
+def restore_latest(ckpt_dir: str, like: Any):
+    s = latest_step(ckpt_dir)
+    if s is None:
+        return None, None, None
+    tree, meta = restore(ckpt_dir, s, like)
+    return tree, meta, s

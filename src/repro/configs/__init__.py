@@ -1,0 +1,51 @@
+"""Architecture registry — one module per assigned architecture.
+
+``get_config(name)`` returns the full (paper-exact) ModelConfig;
+``smoke_config(name)`` returns a reduced same-family config for CPU tests.
+"""
+from __future__ import annotations
+
+import importlib
+
+from repro.configs.base import (ModelConfig, MoESpec, ShapeConfig, SHAPES,
+                                cell_is_runnable, FULL_ATTENTION_ARCHS)
+
+ARCHS = (
+    "yi-9b",
+    "minitron-8b",
+    "qwen3-1.7b",
+    "qwen1.5-110b",
+    "whisper-tiny",
+    "xlstm-350m",
+    "qwen2-moe-a2.7b",
+    "deepseek-moe-16b",
+    "pixtral-12b",
+    "recurrentgemma-2b",
+)
+
+_MODULES = {a: "repro.configs." + a.replace("-", "_").replace(".", "_")
+            for a in ARCHS}
+
+
+def _mod(name: str):
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; choose from {ARCHS}")
+    return importlib.import_module(_MODULES[name])
+
+
+def get_config(name: str) -> ModelConfig:
+    return _mod(name).CONFIG
+
+
+def smoke_config(name: str) -> ModelConfig:
+    return _mod(name).smoke_config()
+
+
+def run_hints(name: str) -> dict:
+    """Per-arch launcher hints (microbatching etc.)."""
+    m = _mod(name)
+    return getattr(m, "RUN_HINTS", {})
+
+
+def list_archs():
+    return ARCHS

@@ -1,0 +1,153 @@
+"""Model / run configuration dataclasses shared by all architectures."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class MoESpec:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    norm_topk_prob: bool = False
+    capacity_factor: float = 2.0
+    first_dense_layers: int = 0        # deepseek-moe: layer 0 is dense FFN
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                        # dense|moe|ssm|hybrid|audio|vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: Optional[int] = None
+    qk_norm: bool = False              # qwen3
+    qkv_bias: bool = False             # qwen1.5
+    rope_theta: float = 1e4
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    # block layout: cycled pattern; "attn" = attn+ffn block,
+    # "rglru" = recurrent block + ffn, "mlstm"/"slstm" = xLSTM blocks
+    block_pattern: Tuple[str, ...] = ("attn",)
+    window: Optional[int] = None       # sliding-window size for local attn
+    moe: Optional[MoESpec] = None
+    # recurrent dims
+    lru_width: Optional[int] = None
+    conv_width: int = 4
+    # encoder-decoder (whisper): encoder frames are a precomputed stub
+    encoder_layers: int = 0
+    encoder_seq: int = 1500
+    cross_attention: bool = False
+    # vlm stub: precomputed patch embeddings projected + prepended
+    num_patches: int = 0
+    patch_embed_dim: int = 1024
+    # numerics / execution
+    dtype: Any = jnp.bfloat16
+    precision: str = "bf16"            # "bf16" | "fp8" for grouped/linear GEMMs
+    gemm_backend: Optional[str] = None
+    remat: bool = True
+    attn_chunk: int = 512
+    scan_layers: bool = True
+    moe_dispatch: str = "ragged"       # "ragged" (paper) | "dense" (GShard)
+    seq_shard: bool = False            # Megatron-SP: residual stream
+                                       # seq-sharded over `model` (§Perf I2)
+    moe_reduce_bf16: bool = False      # bf16 MoE psum (§Perf I3)
+    attn_backend: str = "chunked"      # "chunked" (XLA) | "flash"
+                                       # (fused Pallas kernel; TPU, or
+                                       # interpret mode for tests)
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def param_count(self) -> int:
+        """Approximate parameter count (for 6ND roofline math)."""
+        d, l = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        attn = d * hd * self.num_heads + 2 * d * hd * self.num_kv_heads \
+            + hd * self.num_heads * d
+        if self.moe is not None:
+            ff_moe = 3 * d * self.moe.d_ff_expert * (
+                self.moe.num_experts + self.moe.num_shared_experts)
+            ff_dense = 3 * d * self.d_ff if self.d_ff else 3 * d * self.moe.d_ff_expert
+            n_moe = l - self.moe.first_dense_layers
+            ff = n_moe * ff_moe + self.moe.first_dense_layers * ff_dense
+            blocks = l * attn + ff
+        else:
+            per = attn + (3 * d * self.d_ff if self.d_ff else 0)
+            if self.family == "ssm":
+                per = self._xlstm_block_params()
+                blocks = l * per
+            elif self.family == "hybrid":
+                blocks = self._hybrid_block_params()
+            else:
+                blocks = l * per
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return blocks + emb
+
+    def _xlstm_block_params(self) -> int:
+        d = self.d_model
+        return 8 * d * d  # qkv+gates+out projections (approx)
+
+    def _hybrid_block_params(self) -> int:
+        d, l = self.d_model, self.num_layers
+        w = self.lru_width or d
+        rec = 2 * d * w + w * d + 3 * w  # in/out proj + gates
+        hd = self.resolved_head_dim
+        attn = d * hd * self.num_heads + 2 * d * hd * self.num_kv_heads \
+            + hd * self.num_heads * d
+        ff = 3 * d * self.d_ff
+        n_attn = sum(1 for i in range(l)
+                     if self.block_pattern[i % len(self.block_pattern)] == "attn")
+        return n_attn * attn + (l - n_attn) * rec + l * ff
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE counts only routed top-k + shared)."""
+        if self.moe is None:
+            return self.param_count()
+        d, l = self.d_model, self.num_layers
+        hd = self.resolved_head_dim
+        attn = d * hd * (self.num_heads + 2 * self.num_kv_heads) \
+            + hd * self.num_heads * d
+        ff_active = 3 * d * self.moe.d_ff_expert * (
+            self.moe.top_k + self.moe.num_shared_experts)
+        emb = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        return l * (attn + ff_active) + emb
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                  # "train" | "prefill" | "decode"
+    grad_accum: int = 1        # microbatch count for train shapes
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+# architectures whose attention is strictly O(S^2) full attention — the
+# long_500k cell is skipped for these (DESIGN.md §5)
+FULL_ATTENTION_ARCHS = frozenset({
+    "yi-9b", "minitron-8b", "qwen3-1.7b", "qwen1.5-110b", "whisper-tiny",
+    "qwen2-moe-a2.7b", "deepseek-moe-16b", "pixtral-12b",
+})
+
+
+def cell_is_runnable(arch: str, shape: str) -> bool:
+    if shape == "long_500k" and arch in FULL_ATTENTION_ARCHS:
+        return False
+    return True

@@ -1,0 +1,21 @@
+"""qwen1.5-110b — large dense LM with QKV bias [hf:Qwen/Qwen1.5-110B]."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="qwen1.5-110b", family="dense",
+    num_layers=80, d_model=8192, num_heads=64, num_kv_heads=8,
+    d_ff=49152, vocab_size=152064, head_dim=128, rope_theta=1e6,
+    qkv_bias=True,
+    attn_chunk=1024,   # §Perf I6: halves online-softmax rescale steps
+)
+
+# biggest model: 1 sample per data shard per microbatch
+RUN_HINTS = {"train_microbatch": 16, "prefill_microbatch": 16}
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=512, vocab_size=512, attn_chunk=64)

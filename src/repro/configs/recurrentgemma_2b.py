@@ -1,0 +1,26 @@
+"""recurrentgemma-2b — RG-LRU + local attention hybrid, 1 attn : 2 recurrent
+[arXiv:2402.19427].
+
+Sub-quadratic (RG-LRU state + 2048-token sliding-window attention) -> runs
+the long_500k cell.  MQA (kv=1) for the attention blocks.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="recurrentgemma-2b", family="hybrid",
+    num_layers=26, d_model=2560, num_heads=10, num_kv_heads=1,
+    d_ff=7680, vocab_size=256000, head_dim=256,
+    block_pattern=("rglru", "rglru", "attn"),
+    window=2048, lru_width=2560, conv_width=4,
+)
+
+RUN_HINTS = {"train_microbatch": 32, "prefill_microbatch": 16}
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, num_layers=3, d_model=128, num_heads=2, num_kv_heads=1,
+        head_dim=64, d_ff=256, vocab_size=512, window=32, lru_width=128,
+        attn_chunk=64)

@@ -1,0 +1,26 @@
+"""whisper-tiny — encoder-decoder audio backbone [arXiv:2212.04356].
+
+The conv/mel frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, encoder_seq, d_model]; this module
+implements the transformer backbone (4L encoder + 4L decoder, cross-attn).
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny", family="audio",
+    num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+    d_ff=1536, vocab_size=51865, head_dim=64,
+    encoder_layers=4, encoder_seq=1500, cross_attention=True,
+    rope_theta=1e4,  # backbone uses RoPE in this framework (stub frontend)
+)
+
+RUN_HINTS = {"train_microbatch": 64, "prefill_microbatch": 32}
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, encoder_layers=2, d_model=128, num_heads=4,
+        num_kv_heads=4, head_dim=32, d_ff=256, vocab_size=512,
+        encoder_seq=64, attn_chunk=64)

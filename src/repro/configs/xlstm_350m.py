@@ -1,0 +1,27 @@
+"""xlstm-350m — sLSTM + mLSTM recurrent LM [arXiv:2405.04517].
+
+Block pattern: 5 mLSTM : 1 sLSTM cycles (the xLSTM paper's sparse-sLSTM
+placement), 24 layers = 4 cycles.  No separate FFN (d_ff=0): the up/down
+projections live inside the xLSTM blocks, as in the paper.
+Sub-quadratic: runs the long_500k cell with O(1) recurrent state.
+"""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="xlstm-350m", family="ssm",
+    num_layers=24, d_model=1024, num_heads=4, num_kv_heads=4,
+    d_ff=0, vocab_size=50304, head_dim=256,
+    block_pattern=("mlstm", "mlstm", "mlstm", "mlstm", "mlstm", "slstm"),
+)
+
+RUN_HINTS = {"train_microbatch": 32, "prefill_microbatch": 16,
+             "mlstm_chunk": 256}
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, num_layers=4, d_model=128, num_heads=2, num_kv_heads=2,
+        head_dim=64, vocab_size=512,
+        block_pattern=("mlstm", "slstm"))

@@ -1,0 +1,19 @@
+"""yi-9b — llama-arch dense LM with GQA [arXiv:2403.04652]."""
+import dataclasses
+
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-9b", family="dense",
+    num_layers=48, d_model=4096, num_heads=32, num_kv_heads=4,
+    d_ff=11008, vocab_size=64000, head_dim=128, rope_theta=5e6,
+)
+
+# train_4k: 256 global batch -> 16 microbatches of 16 (1 per data shard)
+RUN_HINTS = {"train_microbatch": 16, "prefill_microbatch": 8}
+
+
+def smoke_config():
+    return dataclasses.replace(
+        CONFIG, num_layers=2, d_model=256, num_heads=4, num_kv_heads=2,
+        head_dim=64, d_ff=512, vocab_size=512, attn_chunk=64)

@@ -1,0 +1,144 @@
+"""Differentiable padding-free FP8 grouped GEMM — the paper's contribution
+as a composable JAX module.
+
+``grouped_linear(x, w, group_sizes)`` computes ``y[rows of group g] =
+x[rows of g] @ w[g]`` over the *unpadded* concatenated token buffer.
+
+Precision modes
+  * ``fp8``  — forward:  x -> 1x128-tile fp8, w -> 128x128-block fp8,
+               padding-free grouped GEMM kernel (paper);
+               backward: dgrad in fp8 through the same kernel
+               (dy quantized 1x128, w^T re-quantized 128x128),
+               wgrad in bf16 via ``ragged_dot_general`` over the ragged
+               contracting dim.  This mirrors the DeepSeek-V3 recipe the
+               paper builds on (wgrad highest precision).
+  * ``bf16`` — ragged_dot in bf16 both ways (numerics baseline; also the
+               portable GSPMD path the multi-pod dry-run lowers).
+
+The group structure (``group_sizes``) is data-dependent and never padded —
+that is the paper's whole point.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.core import quantization as q
+
+
+# ---------------------------------------------------------------------------
+# bf16 ragged path (portable; GSPMD-partitionable)
+# ---------------------------------------------------------------------------
+
+def _ragged_dot(x, w, group_sizes, out_dtype):
+    return jax.lax.ragged_dot(
+        x, w, group_sizes.astype(jnp.int32),
+        preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def _ragged_wgrad(x, dy, group_sizes, num_groups):
+    """dw[g] = x_g^T @ dy_g  — ragged contracting dim."""
+    dn = jax.lax.RaggedDotDimensionNumbers(
+        dot_dimension_numbers=(((0,), (0,)), ((), ())),
+        lhs_ragged_dimensions=[0],
+        rhs_group_dimensions=[])
+    return jax.lax.ragged_dot_general(
+        x, dy, group_sizes.astype(jnp.int32), dn,
+        preferred_element_type=jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# fp8 path with custom VJP
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _grouped_linear_fp8(x, w, group_sizes, backend, out_dtype):
+    y, _ = _fp8_fwd(x, w, group_sizes, backend, out_dtype)
+    return y
+
+
+def _fp8_fwd(x, w, group_sizes, backend, out_dtype):
+    a8, sa = q.quantize_tilewise(x.astype(jnp.float32), backend=backend)
+    b8, sb = q.quantize_blockwise_batched(w.astype(jnp.float32))
+    y = kops.grouped_gemm_fp8(a8, sa, b8, sb, group_sizes,
+                              backend=backend, out_dtype=out_dtype)
+    return y, (x, w, group_sizes)
+
+
+def _fp8_bwd(backend, out_dtype, res, dy):
+    x, w, group_sizes = res
+    num_groups = w.shape[0]
+    # dgrad: dx = dy @ w^T  (fp8 through the padding-free kernel)
+    d8, sd = q.quantize_tilewise(dy.astype(jnp.float32), backend=backend)
+    wt = jnp.swapaxes(w, 1, 2)                       # [G, N, K]
+    bt8, sbt = q.quantize_blockwise_batched(wt.astype(jnp.float32))
+    dx = kops.grouped_gemm_fp8(d8, sd, bt8, sbt, group_sizes,
+                               backend=backend, out_dtype=jnp.float32)
+    # wgrad: bf16 ragged contraction (highest-precision operand, DeepSeek
+    # keeps wgrad un-quantized on the K axis)
+    dw = _ragged_wgrad(x.astype(jnp.bfloat16), dy.astype(jnp.bfloat16),
+                       group_sizes, num_groups)
+    return dx.astype(x.dtype), dw.astype(w.dtype), None
+
+
+_grouped_linear_fp8.defvjp(_fp8_fwd, _fp8_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _grouped_linear_bf16(x, w, group_sizes, out_dtype):
+    y, _ = _bf16_fwd(x, w, group_sizes, out_dtype)
+    return y
+
+
+def _bf16_fwd(x, w, group_sizes, out_dtype):
+    y = _ragged_dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                    group_sizes, out_dtype)
+    return y, (x, w, group_sizes)
+
+
+def _bf16_bwd(out_dtype, res, dy):
+    x, w, group_sizes = res
+    wt = jnp.swapaxes(w, 1, 2)
+    dx = _ragged_dot(dy.astype(jnp.bfloat16), wt.astype(jnp.bfloat16),
+                     group_sizes, jnp.float32)
+    dw = _ragged_wgrad(x.astype(jnp.bfloat16), dy.astype(jnp.bfloat16),
+                       group_sizes, w.shape[0])
+    return dx.astype(x.dtype), dw.astype(w.dtype), None
+
+
+_grouped_linear_bf16.defvjp(_bf16_fwd, _bf16_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Public API
+# ---------------------------------------------------------------------------
+
+def grouped_linear(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+                   precision: str = "bf16", backend: str | None = None,
+                   out_dtype: Any = None) -> jax.Array:
+    """Padding-free grouped linear: rows of ``x`` are grouped by
+    ``group_sizes`` (concatenated, ragged); group g matmuls ``w[g]``.
+
+    x: [M, K]; w: [G, K, N]; group_sizes: [G] (sum <= M; rows beyond the
+    last group are left undefined — callers mask them).
+    """
+    out_dtype = out_dtype or x.dtype
+    if precision == "fp8":
+        return _grouped_linear_fp8(x, w, group_sizes, backend, out_dtype)
+    if precision == "bf16":
+        return _grouped_linear_bf16(x, w, group_sizes, out_dtype)
+    raise ValueError(f"unknown precision {precision!r}")
+
+
+def dense_linear_fp8(x: jax.Array, w: jax.Array, *,
+                     backend: str | None = None) -> jax.Array:
+    """The G=1 degenerate case — DeepSeek-style fp8 linear for dense layers
+    (optional beyond-paper feature for the dense architectures)."""
+    m = x.shape[0]
+    gs = jnp.array([m], jnp.int32)
+    return grouped_linear(x, w[None], gs, precision="fp8",
+                          backend=backend)

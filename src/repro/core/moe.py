@@ -1,0 +1,216 @@
+"""Padding-free Mixture-of-Experts layer built on the grouped GEMM.
+
+This is the paper's target workload: top-k routing produces *dynamic* group
+sizes per expert; the expert FFNs run as one padding-free fp8 grouped GEMM
+over the concatenated, ragged token buffer.
+
+Distribution (DESIGN.md §4): the layer runs inside ``shard_map`` over the
+``model`` mesh axis with tokens replicated on that axis.
+
+  * **EP mode** (``num_experts % ep_size == 0``): each shard owns
+    ``E/ep_size`` experts, packs only the rows routed to its local experts
+    into a static *capacity* buffer (ragged inside — the grouped GEMM never
+    pads group-to-group), and contributes a partial output; one ``psum``
+    over the axis combines routed + shared-expert partials.
+  * **TP mode** (fallback, e.g. qwen2-moe's 60 experts on a 16-way axis):
+    experts replicated, every weight's ``d_ff`` dim sharded; all rows are
+    processed on every shard against its ``d_ff`` slice; same single
+    ``psum``.
+
+Routing is computed redundantly on each shard (router weights are tiny);
+this avoids a second collective.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grouped_gemm import grouped_linear
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_model: int
+    d_ff_expert: int
+    num_shared_experts: int = 0
+    norm_topk_prob: bool = False
+    capacity_factor: float = 2.0
+    precision: str = "bf16"           # "bf16" | "fp8"
+    backend: Optional[str] = None     # kernel backend override
+    router_dtype: Any = jnp.float32
+    # expert-compute dispatch:
+    #   "ragged" — padding-free grouped GEMM (the paper; on TPU this is the
+    #              Pallas kernel, on other backends jax.lax.ragged_dot —
+    #              NOTE: XLA's ragged_dot lowering one-hot-expands the LHS
+    #              to [rows, G_local*K], a G_local x flop/memory blow-up)
+    #   "dense"  — GShard-style per-expert capacity buckets + batched
+    #              einsum (the padding regime the paper eliminates; on the
+    #              XLA path it avoids the expansion artifact)
+    dispatch: str = "ragged"
+    # dtype of the cross-shard expert-output reduction (§Perf I3):
+    # bf16 halves psum wire bytes; partial sums are few-term adds
+    reduce_dtype: Any = jnp.float32
+
+
+def ep_size_for(cfg: MoEConfig, model_axis_size: int) -> int:
+    """EP when experts divide the axis, else TP-on-d_ff (DESIGN.md §4)."""
+    if model_axis_size > 1 and cfg.num_experts % model_axis_size == 0:
+        return model_axis_size
+    return 1
+
+
+def init_moe_params(key, cfg: MoEConfig, dtype=jnp.float32):
+    d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
+    ks = jax.random.split(key, 6)
+    scale_in = d ** -0.5
+    scale_mid = f ** -0.5
+    p = {
+        "router": jax.random.normal(ks[0], (d, e), jnp.float32) * scale_in,
+        "w_gate": jax.random.normal(ks[1], (e, d, f), dtype) * scale_in,
+        "w_up": jax.random.normal(ks[2], (e, d, f), dtype) * scale_in,
+        "w_down": jax.random.normal(ks[3], (e, f, d), dtype) * scale_mid,
+    }
+    if cfg.num_shared_experts:
+        fs = f * cfg.num_shared_experts
+        p["shared_gate"] = jax.random.normal(ks[4], (d, fs), dtype) * scale_in
+        p["shared_up"] = jax.random.normal(ks[5], (d, fs), dtype) * scale_in
+        p["shared_down"] = (jax.random.normal(key, (fs, d), dtype)
+                            * fs ** -0.5)
+    return p
+
+
+def _capacity(num_slots: int, ep_size: int, cf: float) -> int:
+    if ep_size == 1:
+        return num_slots
+    c = (int(num_slots / ep_size * cf) + 127) // 128 * 128
+    return min(num_slots, max(c, 128))
+
+
+def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
+              axis_name: Optional[str] = None):
+    """x: [T, d_model] (tokens local to this shard's data slice, replicated
+    over the model axis).  Returns (y [T, d_model], aux dict).
+
+    When ``axis_name`` is given the caller is inside shard_map and the
+    params carry this shard's slice (experts sliced in EP mode, d_ff sliced
+    in TP mode); output is psum'd over the axis.
+    """
+    t, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    e_loc = e // ep_size
+    lo = ep_rank * e_loc
+
+    # ---- routing (replicated) ------------------------------------------
+    logits = x.astype(cfg.router_dtype) @ params["router"].astype(
+        cfg.router_dtype)
+    probs = jax.nn.softmax(logits, axis=-1)
+    weights, ids = jax.lax.top_k(probs, k)                  # [T, k]
+    if cfg.norm_topk_prob:
+        weights = weights / jnp.sum(weights, -1, keepdims=True)
+
+    # ---- pack rows routed to local experts into the capacity buffer ----
+    num_slots = t * k
+    cap = _capacity(num_slots, ep_size, cfg.capacity_factor)
+    flat_ids = ids.reshape(-1)                              # [T*k]
+    local_id = flat_ids - lo
+    is_local = (local_id >= 0) & (local_id < e_loc)
+    sort_key = jnp.where(is_local, local_id, e_loc)         # dead rows last
+    order = jnp.argsort(sort_key)                           # stable
+    sel = order[:cap]                                       # packed slots
+
+    gs_full = jnp.bincount(jnp.where(is_local, local_id, e_loc),
+                           length=e_loc + 1)[:e_loc]
+    # clip group sizes to the capacity prefix (drops bias to high ids)
+    starts = jnp.concatenate([jnp.zeros(1, gs_full.dtype),
+                              jnp.cumsum(gs_full)[:-1]])
+    gs = jnp.clip(jnp.minimum(gs_full, cap - starts), 0)
+    total = jnp.sum(gs)
+
+    token_of = sel // k
+    xs = jnp.take(x, token_of, axis=0)                      # [cap, d]
+
+    if cfg.dispatch == "dense":
+        # GShard-style capacity buckets: [E_loc, cap_e, d] batched einsum
+        cap_e = -(-num_slots // e) * max(int(cfg.capacity_factor), 1)
+        cap_e = (cap_e + 7) // 8 * 8
+        ends = jnp.cumsum(gs)
+        row = jnp.arange(cap)
+        gid = jnp.searchsorted(ends, row, side="right")
+        gid = jnp.minimum(gid, e_loc - 1)
+        pos = row - jnp.concatenate([jnp.zeros(1, ends.dtype),
+                                     ends[:-1]])[gid]
+        keep = (row < jnp.sum(gs)) & (pos < cap_e)
+        xe = jnp.zeros((e_loc, cap_e, d), x.dtype).at[
+            jnp.where(keep, gid, e_loc - 1),
+            jnp.where(keep, pos, cap_e - 1)].set(
+            jnp.where(keep[:, None], xs, 0), mode="drop")
+        ge = jnp.einsum("ecd,edf->ecf", xe, params["w_gate"])
+        ue = jnp.einsum("ecd,edf->ecf", xe, params["w_up"])
+        he = jax.nn.silu(ge) * ue                       # bf16 act (§Perf I5)
+        ye = jnp.einsum("ecf,efd->ecd", he, params["w_down"])
+        y = jnp.where(keep[:, None],
+                      ye[gid, jnp.minimum(pos, cap_e - 1)], 0.0)
+    else:
+        # ---- padding-free ragged expert FFN (the paper's kernel) -------
+        glin = functools.partial(grouped_linear, precision=cfg.precision,
+                                 backend=cfg.backend)
+        g = glin(xs, params["w_gate"], gs)                  # [cap, f_loc]
+        u = glin(xs, params["w_up"], gs)
+        h = jax.nn.silu(g) * u                              # bf16 act (I5)
+        y = glin(h, params["w_down"], gs)                   # [cap, d]
+
+    # ---- combine (rows beyond `total` hold garbage -> hard-masked) -----
+    valid = jnp.arange(cap) < total
+    w_flat = jnp.take(weights.reshape(-1), sel)
+    contrib = jnp.where(valid[:, None],
+                        y.astype(jnp.float32) * w_flat[:, None], 0.0)
+    out = jnp.zeros((t, d), jnp.float32).at[token_of].add(
+        contrib, mode="drop")
+
+    # ---- shared experts (TP over the axis in both modes) ---------------
+    if cfg.num_shared_experts:
+        sg = x @ params["shared_gate"]
+        su = x @ params["shared_up"]
+        sh = jax.nn.silu(sg) * su                           # bf16 act (I5)
+        out = out + (sh @ params["shared_down"]).astype(jnp.float32)
+
+    if axis_name is not None:
+        out = jax.lax.psum(out.astype(cfg.reduce_dtype), axis_name) \
+            .astype(jnp.float32)
+
+    # ---- aux: load-balance loss + drop stats (replicated math) ---------
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(jax.nn.one_hot(ids, e,
+                                 dtype=jnp.float32).sum(1), axis=0)
+    if axis_name is not None and ep_size > 1:
+        kept = jax.lax.psum(total, axis_name)   # shards own disjoint experts
+    else:
+        kept = total                            # TP/local: every slot local
+    aux = {
+        "load_balance_loss": e * jnp.sum(me * ce) / k,
+        "dropped_fraction": 1.0 - kept / num_slots,
+    }
+    return out.astype(x.dtype), aux
+
+
+def shard_moe_params(params, cfg: MoEConfig, ep_size: int):
+    """PartitionSpec tree for the params under shard_map over `model`."""
+    from jax.sharding import PartitionSpec as P
+    if ep_size > 1:
+        spec = {"router": P(), "w_gate": P("model"), "w_up": P("model"),
+                "w_down": P("model")}
+    else:
+        spec = {"router": P(), "w_gate": P(None, None, "model"),
+                "w_up": P(None, None, "model"),
+                "w_down": P(None, "model", None)}
+    if cfg.num_shared_experts:
+        spec.update({"shared_gate": P(None, "model"),
+                     "shared_up": P(None, "model"),
+                     "shared_down": P("model", None)})
+    return spec

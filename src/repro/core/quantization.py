@@ -1,0 +1,51 @@
+"""FP8 quantization with straight-through gradients.
+
+1x128 per-tile activation quant + 128x128 per-block weight quant — the
+paper's (= DeepSeek-V3's) scheme.  ``quantize_*_ste`` are the autodiff-safe
+entry points used by the training path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+QUANT_BLOCK = kref.QUANT_BLOCK
+FP8_MAX = kref.FP8_MAX
+
+
+@jax.custom_vjp
+def quantize_dequantize_tilewise(x):
+    """fake-quant (quant->dequant) with straight-through gradient; used to
+    inject fp8 noise into reference paths when validating training."""
+    q, s = kref.quantize_tilewise_ref(x)
+    return kref.dequantize_tilewise_ref(q, s).astype(x.dtype)
+
+
+def _qdq_fwd(x):
+    return quantize_dequantize_tilewise(x), None
+
+
+def _qdq_bwd(_, g):
+    return (g,)
+
+
+quantize_dequantize_tilewise.defvjp(_qdq_fwd, _qdq_bwd)
+
+
+def quantize_tilewise(x, *, backend=None):
+    """[M, K] -> (fp8[M, K], f32[M, K/128]).  Not differentiable — use
+    inside custom_vjp boundaries (see core.grouped_gemm)."""
+    return kops.quantize_tilewise(x, backend=backend)
+
+
+def quantize_blockwise(w):
+    """[K, N] -> (fp8[K, N], f32[K/128, N/128])."""
+    return kops.quantize_blockwise(w)
+
+
+def quantize_blockwise_batched(w):
+    """[G, K, N] -> (fp8[G, K, N], f32[G, K/128, N/128])."""
+    return jax.vmap(kref.quantize_blockwise_ref)(w)

@@ -1,0 +1,76 @@
+"""Deterministic, stateless synthetic token pipeline.
+
+Every batch is a pure function of (seed, step) — restart-safe by
+construction: after a crash the loop resumes from the checkpointed step and
+regenerates identical batches (no iterator state to persist beyond the step
+counter).  Batches are placed with the train step's input sharding so the
+host->device transfer is per-shard.
+
+The "dataset" is a mixture of structured sequences (ngram-ish repeats) so
+tiny models show a real, decreasing loss rather than ln(V) noise.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    batch_size: int = 8
+    seq_len: int = 128
+    repeat_period: int = 16      # structure the stream so loss can fall
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig, model_cfg: ModelConfig,
+                 sharding: Optional[Any] = None):
+        self.cfg = cfg
+        self.mcfg = model_cfg
+        self.sharding = sharding
+
+    def batch_at(self, step: int) -> dict:
+        c = self.cfg
+        rng = np.random.default_rng((c.seed, step))
+        v = self.mcfg.vocab_size
+        # one fixed cyclic pattern per dataset seed (memorizable: the
+        # bigram token->successor map is deterministic), sampled at random
+        # phases per row, with 5% token noise
+        base_rng = np.random.default_rng(c.seed)
+        base = base_rng.permutation(v)[:c.repeat_period]
+        reps = int(np.ceil(c.seq_len / c.repeat_period)) + 1
+        stream = np.tile(base, reps)
+        phase = rng.integers(0, c.repeat_period, c.batch_size)
+        tokens = np.stack([stream[p:p + c.seq_len] for p in phase])
+        noise_mask = rng.random(tokens.shape) < 0.05
+        tokens = np.where(noise_mask,
+                          rng.integers(0, v, tokens.shape), tokens)
+        batch = {"tokens": tokens.astype(np.int32),
+                 "labels": tokens.astype(np.int32)}
+        if self.mcfg.family == "audio":
+            batch["frames"] = rng.standard_normal(
+                (c.batch_size, self.mcfg.encoder_seq, self.mcfg.d_model)
+            ).astype(np.float32)
+        if self.mcfg.family == "vlm":
+            batch["patch_embeds"] = rng.standard_normal(
+                (c.batch_size, self.mcfg.num_patches,
+                 self.mcfg.patch_embed_dim)).astype(np.float32)
+        if self.sharding is not None:
+            batch = {k: jax.device_put(val, self.sharding.get(k))
+                     if isinstance(self.sharding, dict)
+                     else jax.device_put(val, self.sharding)
+                     for k, val in batch.items()}
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1

@@ -1,0 +1,92 @@
+"""Process-wide distribution context.
+
+The launcher (or dryrun) sets the mesh once; model code calls
+:func:`constrain` to attach logical-axis sharding constraints to
+activations.  With no mesh set, everything is a no-op so the same model
+code runs single-device in tests.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_MESH: Optional[Mesh] = None
+
+# logical activation axis -> mesh axes (None = replicated)
+_DEFAULT_RULES = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,          # activations replicated over `model` between ops
+    "heads": "model",
+    "mlp": "model",
+    "vocab": "model",
+    "expert": "model",
+    "kv_seq": "model",      # decode KV caches: sequence-sharded (flash-decode)
+}
+_RULES = dict(_DEFAULT_RULES)
+
+
+def set_mesh(mesh: Optional[Mesh], rules: Optional[dict] = None) -> None:
+    global _MESH, _RULES
+    _MESH = mesh
+    _RULES = dict(_DEFAULT_RULES)
+    if rules:
+        _RULES.update(rules)
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _MESH
+
+
+def model_axis_size() -> int:
+    if _MESH is None or "model" not in _MESH.axis_names:
+        return 1
+    return _MESH.shape["model"]
+
+
+def _axes_for(logical: Optional[str]):
+    if logical is None:
+        return None
+    return _RULES.get(logical)
+
+
+def spec_for(shape, logical_axes) -> P:
+    """PartitionSpec for `shape` given per-dim logical names, dropping any
+    axis that does not divide the dim (GQA kv-head replication etc.).
+    A mesh axis is used at most once per spec; feature axes (heads/mlp/
+    vocab/...) take priority over "seq" (sequence parallelism is applied
+    only where it doesn't conflict)."""
+    if _MESH is None:
+        return P()
+    parts = [None] * len(shape)
+    used: set = set()
+
+    def try_assign(i, name):
+        axes = _axes_for(name)
+        if axes is None:
+            return
+        tup = axes if isinstance(axes, tuple) else (axes,)
+        tup = tuple(a for a in tup if a in _MESH.axis_names
+                    and a not in used)
+        size = 1
+        for a in tup:
+            size *= _MESH.shape[a]
+        if size > 1 and shape[i] % size == 0:
+            parts[i] = tup if len(tup) > 1 else tup[0]
+            used.update(tup)
+
+    order = [i for i, n in enumerate(logical_axes) if n not in (None, "seq")]
+    order += [i for i, n in enumerate(logical_axes) if n == "seq"]
+    for i in order:
+        try_assign(i, logical_axes[i])
+    return P(*parts)
+
+
+def constrain(x, *logical_axes):
+    """with_sharding_constraint by logical axis names; no-op without mesh."""
+    if _MESH is None:
+        return x
+    spec = spec_for(x.shape, logical_axes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(_MESH, spec))

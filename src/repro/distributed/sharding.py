@@ -1,0 +1,134 @@
+"""Parameter partition rules (logical-name based, MaxText-style).
+
+``build_param_specs`` walks a parameter pytree and assigns a PartitionSpec
+per leaf from its path + rank, with a divisibility guard (dims that don't
+divide the axis are replicated — e.g. 4 KV heads on a 16-way model axis).
+"""
+from __future__ import annotations
+
+import re
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, spec for the logical [unstacked] shape)
+# weight naming is a repo-wide convention (models/layers.py)
+_RULES_2D = [
+    (r"(^|/)(wq|wk|wv)$", P(None, "model")),
+    (r"(^|/)wo$", P("model", None)),
+    (r"(^|/)(w_gate|w_up)$", P(None, "model")),
+    (r"(^|/)w_down$", P("model", None)),
+    (r"(^|/)shared_(gate|up)$", P(None, "model")),
+    (r"(^|/)shared_down$", P("model", None)),
+    (r"(^|/)embedding$", P("model", None)),
+    (r"(^|/)lm_head$", P(None, "model")),
+    (r"(^|/)router$", P()),
+    (r"(^|/)vision_proj$", P()),
+    (r"(^|/)(w_in|w_x|w_y)$", P(None, "model")),     # recurrent in-projs
+    (r"(^|/)w_out$", P("model", None)),              # recurrent out-proj
+]
+_RULES_1D = [
+    (r"(^|/)b[qkv]$", P("model")),
+    (r"(^|/)(b_in|b_x|b_y)$", P("model")),
+]
+# MoE 3-D experts tensors: EP shards dim0 (experts); TP shards the d_ff dim
+_MOE_3D = {
+    "w_gate": {"ep": P("model", None, None), "tp": P(None, None, "model")},
+    "w_up": {"ep": P("model", None, None), "tp": P(None, None, "model")},
+    "w_down": {"ep": P("model", None, None), "tp": P(None, "model", None)},
+}
+
+
+def _leaf_spec(path: str, ndim: int, moe_mode: str) -> P:
+    last = path.rsplit("/", 1)[-1]
+    if "/moe/" in path or path.startswith("moe/"):
+        if last in _MOE_3D and ndim >= 3:
+            return _MOE_3D[last][moe_mode]
+        for pat, spec in _RULES_2D + _RULES_1D:
+            if re.search(pat, path):
+                return spec
+        return P()
+    rules = _RULES_2D if ndim >= 2 else _RULES_1D
+    for pat, spec in rules:
+        if re.search(pat, path):
+            return spec
+    return P()
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        if hasattr(p, "key"):
+            parts.append(str(p.key))
+        elif hasattr(p, "idx"):
+            parts.append(str(p.idx))
+    return "/".join(parts)
+
+
+def build_param_specs(params: Any, mesh: Mesh, *, moe_mode: str = "ep",
+                      fsdp: bool = False, fsdp_min_size: int = 1 << 20):
+    """PartitionSpec pytree for `params` (STORAGE sharding).
+
+    Leaves under a path component named ``layers``/``enc_layers`` etc. are
+    scan-stacked: their leading dim is the layer axis -> spec gets a leading
+    None.  Dims that don't divide their assigned axes get replicated.
+
+    ``fsdp=True`` additionally shards the largest remaining unsharded dim
+    of every big weight over the ``data`` axis (ZeRO-3 storage: params,
+    grads and optimizer state all live data-sharded; GSPMD inserts the
+    per-layer all-gather at use and reduce-scatter on the gradients).
+    shard_map consumers (the MoE block) declare their own compute specs, so
+    the boundary resharding is automatic.
+    """
+    stack_markers = ("layers",)
+
+    def spec_of(path, leaf):
+        p = _path_str(path)
+        stacked = any(f"{m}" in p.split("/") for m in stack_markers)
+        ndim = np.ndim(leaf) if not hasattr(leaf, "ndim") else leaf.ndim
+        logical_ndim = ndim - (1 if stacked else 0)
+        spec = _leaf_spec(p, logical_ndim, moe_mode)
+        parts = list(spec) + [None] * (logical_ndim - len(spec))
+        if stacked:
+            parts = [None] + parts
+        shape = leaf.shape
+        out = []
+        for dim, ax in zip(shape, parts):
+            if ax is None:
+                out.append(None)
+                continue
+            tup = ax if isinstance(ax, tuple) else (ax,)
+            size = 1
+            for a in tup:
+                size *= mesh.shape[a]
+            out.append(ax if dim % size == 0 else None)
+        out += [None] * (ndim - len(out))
+        # FSDP: prefer extending an already model-sharded dim with 'data'
+        # (keeps activation-facing dims unsharded -> no involuntary
+        # resharding at the embedding gather); else shard the largest
+        # still-unsharded divisible dim.
+        if fsdp and "data" in mesh.axis_names and ndim >= 2 and \
+                np.prod(shape) >= fsdp_min_size:
+            dsz = mesh.shape["data"]
+            ext = [i for i in range(ndim)
+                   if out[i] == "model"
+                   and shape[i] % (dsz * mesh.shape["model"]) == 0]
+            if ext:
+                out[ext[0]] = ("model", "data")
+            else:
+                cands = sorted((i for i in range(ndim)
+                                if out[i] is None and shape[i] % dsz == 0),
+                               key=lambda i: -shape[i])
+                if cands:
+                    out[cands[0]] = "data"
+        return P(*out)
+
+    return jax.tree_util.tree_map_with_path(spec_of, params)
+
+
+def named_shardings(params, mesh: Mesh, *, moe_mode: str = "ep"):
+    specs = build_param_specs(params, mesh, moe_mode=moe_mode)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), specs,
+                        is_leaf=lambda x: isinstance(x, P))

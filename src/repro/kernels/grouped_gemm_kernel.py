@@ -1,0 +1,232 @@
+"""TMA-Adaptive FP8 Grouped GEMM — Pallas TPU kernel.
+
+This is the TPU-native re-derivation of the paper's padding-free grouped
+GEMM (see DESIGN.md §2 for the Hopper→TPU mapping).  The paper's problem:
+
+  * groups have dynamic row counts ``M^g`` (MoE routing), but the bulk-copy
+    engine (Hopper TMA there, Pallas ``BlockSpec`` pipelining here) only
+    moves statically-shaped, aligned blocks;
+  * padding every group to ``block_m`` wastes memory + bandwidth + flops.
+
+The paper's fix is a pool of ``log2(block_m)`` TMA descriptors plus a
+two-phase *overlapping, idempotent* store for each residual block.  The TPU
+equivalent implemented here:
+
+  * the grid walks **globally block-aligned tiles of the unpadded,
+    concatenated token buffer** — every HBM→VMEM copy is aligned by
+    construction (the analogue of TMA's static-descriptor compliance);
+  * a tile that straddles a group boundary is *visited once per group that
+    intersects it* (scalar-prefetched ``group_ids``/``m_tile_ids`` schedule);
+  * each visit computes the full tile against its group's ``B^g`` and
+    performs a **masked read-modify-write** of the output tile in VMEM —
+    rows owned by other groups are preserved.  Same-tile visits are adjacent
+    in the grid, so Pallas keeps the output block resident in VMEM between
+    them and flushes it to HBM exactly once (the "safe overlapping write"
+    of paper §2.2, with the identical cost profile: ≤2 visits per boundary
+    tile, independent of the residual size).
+
+Alignment bookkeeping (paper §2.3) maps to:
+  * ``block_n % 128 == 0``  (lane width / MXU tile; paper: ``block_N % 64``)
+  * ``K % block_k == 0`` and ``block_k % 128 == 0`` (quant-tile alignment)
+  * scale rows ``S_A`` travel on the same global M-tiles as ``A`` — the
+    whole per-row scale vector is over-fetched once per tile (padded to the
+    128-lane VMEM tile), the analogue of the paper's ``[block_M+16, ...]``
+    over-fetch descriptor.
+
+Quantization: A is fp8 e4m3 with 1x128 per-tile scales, B is fp8 e4m3 with
+128x128 per-block scales (DeepSeek-V3 recipe, as in the paper).  The MXU on
+v5e consumes bf16, so operands are upconverted in VREGs; the memory-side
+wins — which are what the paper measures — are dtype-native.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+QUANT_BLOCK = 128
+
+
+def validate_kernel_config(m, k, n, block_m, block_n, block_k):
+    """TPU-adapted alignment constraints (analogue of paper's block_N % 64).
+
+    M is deliberately unconstrained — handling arbitrary (ragged) M without
+    padding is the point of the paper.
+    """
+    if block_n % 128 != 0:
+        raise ValueError(f"block_n must be a multiple of 128 (lane width), got {block_n}")
+    if block_k % QUANT_BLOCK != 0:
+        raise ValueError(f"block_k must be a multiple of {QUANT_BLOCK}, got {block_k}")
+    if k % block_k != 0:
+        raise ValueError(f"K={k} must be a multiple of block_k={block_k}")
+    if n % block_n != 0:
+        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
+    if block_m % 8 != 0:
+        raise ValueError(f"block_m must be a multiple of 8 (sublane), got {block_m}")
+
+
+def make_group_metadata(group_sizes: jax.Array, m: int, block_m: int,
+                        num_groups: int):
+    """Device-side visitation schedule — the analogue of the paper's
+    runtime descriptor selection (Eq. 2).
+
+    Returns (group_offsets[G+1], group_ids[T], m_tile_ids[T]) where
+    T = ceil(m/block_m) + num_groups - 1 is the static worst-case visit
+    count: every tile is visited once, plus one extra visit per group
+    boundary that splits a tile.  Padding visits replicate the last real
+    visit — they redo an identical masked write, which is idempotent
+    (the paper's "safe overlapping write": duplicated writes of identical
+    data are harmless).
+    """
+    group_sizes = group_sizes.astype(jnp.int32)
+    group_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes)])
+    starts = group_offsets[:-1]
+    ends = group_offsets[1:]
+    first_tile = starts // block_m
+    last_tile_excl = (ends + block_m - 1) // block_m
+    tiles_per = jnp.maximum(last_tile_excl - first_tile, 0)
+    # zero-size groups get zero visits (even when their offset is unaligned)
+    tiles_per = jnp.where(group_sizes == 0, 0, tiles_per)
+
+    num_tiles = (m + block_m - 1) // block_m
+    max_visits = num_tiles + num_groups - 1
+
+    visit_ends = jnp.cumsum(tiles_per)            # [G]
+    t = jnp.arange(max_visits, dtype=jnp.int32)
+    # group that owns visit t (padding visits clamp to the last real one)
+    num_real = visit_ends[-1]
+    t_clamped = jnp.minimum(t, num_real - 1)
+    group_ids = jnp.searchsorted(visit_ends, t_clamped, side="right")
+    group_ids = jnp.minimum(group_ids, num_groups - 1).astype(jnp.int32)
+    visits_before = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), visit_ends[:-1]])
+    m_tile_ids = (first_tile[group_ids]
+                  + (t_clamped - visits_before[group_ids])).astype(jnp.int32)
+    m_tile_ids = jnp.clip(m_tile_ids, 0, num_tiles - 1)
+    return group_offsets, group_ids, m_tile_ids
+
+
+def _gmm_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,  # prefetch
+                a_ref, sa_ref, b_ref, sb_ref,                      # VMEM in
+                out_ref,                                           # VMEM out
+                acc_ref,                                           # scratch
+                *, block_m, block_n, block_k, k_steps, out_dtype):
+    n_i = pl.program_id(0)
+    t = pl.program_id(1)
+    k_i = pl.program_id(2)
+
+    g = group_ids_ref[t]
+    m_tile = m_tile_ids_ref[t]
+
+    @pl.when(k_i == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # MXU work on the full, always-aligned tile (rows of a neighbouring
+    # group compute garbage that the masked store below discards — the
+    # cost-equivalent of the paper's redundant overlapping TMA write).
+    a = a_ref[...].astype(jnp.float32)                 # (bm, bk)
+    b = b_ref[0].astype(jnp.float32)                   # (bk, bn)
+
+    # --- fine-grained rescale (DeepSeek 1x128 x 128x128 recipe) ---------
+    # sa_ref: (bm, KB) over-fetched whole scale rows; columns for this k step
+    kq = block_k // QUANT_BLOCK                        # quant tiles per k step
+    nq = block_n // QUANT_BLOCK                        # quant blocks per n step
+    sa = jax.lax.dynamic_slice(sa_ref[...], (0, k_i * kq), (block_m, kq))
+    sb = jax.lax.dynamic_slice(sb_ref[0], (k_i * kq, n_i * nq), (kq, nq))
+    # one MXU dot per 128-wide quant sub-tile so per-tile scales stay exact
+    for j in range(kq):
+        aj = a[:, j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK]
+        bj = b[j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK]
+        pj = jax.lax.dot(aj, bj, preferred_element_type=jnp.float32)
+        col_scale = jnp.repeat(sb[j], QUANT_BLOCK, axis=0)     # (bn,)
+        acc_ref[...] += pj * sa[:, j][:, None] * col_scale[None, :]
+
+    @pl.when(k_i == k_steps - 1)
+    def _store():
+        # Masked RMW — the two-phase overlapping-store analogue.  Rows of
+        # this tile owned by group g are [start, end); everything else is
+        # preserved from the previous (adjacent) visit's contents.
+        start = group_offsets_ref[g]
+        end = group_offsets_ref[g + 1]
+        rows = m_tile * block_m + jax.lax.broadcasted_iota(
+            jnp.int32, (block_m, block_n), 0)
+        mask = (rows >= start) & (rows < end)
+        prev = out_ref[...]
+        out_ref[...] = jnp.where(mask, acc_ref[...].astype(out_dtype), prev)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype",
+                     "interpret", "num_groups"))
+def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
+               s_b: jax.Array, group_sizes: jax.Array, *,
+               num_groups: int | None = None,
+               block_m: int = 128, block_n: int = 128, block_k: int = 128,
+               out_dtype: Any = jnp.bfloat16, interpret: bool = False):
+    """Padding-free fp8 grouped GEMM.
+
+    a_fp8:  [M, K]   fp8 e4m3 — concatenated groups, arbitrary (ragged) M^g
+    s_a:    [M, KB]  f32      — 1x128 tile scales (KB = ceil(K/128))
+    b_fp8:  [G, K, N] fp8
+    s_b:    [G, KB, NB] f32   — 128x128 block scales
+    group_sizes: [G] int32, sum == M
+    returns [M, N] out_dtype
+    """
+    m, k = a_fp8.shape
+    g, k2, n = b_fp8.shape
+    assert k == k2, (k, k2)
+    num_groups = num_groups or g
+    validate_kernel_config(m, k, n, block_m, block_n, block_k)
+    kb = s_a.shape[1]
+    assert kb == (k + QUANT_BLOCK - 1) // QUANT_BLOCK
+
+    group_offsets, group_ids, m_tile_ids = make_group_metadata(
+        group_sizes, m, block_m, num_groups)
+    num_tiles = (m + block_m - 1) // block_m
+    max_visits = num_tiles + num_groups - 1
+    k_steps = k // block_k
+
+    grid = (n // block_n, max_visits, k_steps)
+
+    kernel = functools.partial(
+        _gmm_kernel, block_m=block_m, block_n=block_n, block_k=block_k,
+        k_steps=k_steps, out_dtype=out_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                # A tile: globally block-aligned HBM->VMEM copy
+                pl.BlockSpec((block_m, block_k),
+                             lambda n_i, t, k_i, go, gi, mi: (mi[t], k_i)),
+                # S_A: over-fetch the whole scale row per tile (padded to
+                # the 128-lane VMEM tile) — paper §2.3 analogue
+                pl.BlockSpec((block_m, kb),
+                             lambda n_i, t, k_i, go, gi, mi: (mi[t], 0)),
+                # B^g tile, selected by the visit's group id
+                pl.BlockSpec((1, block_k, block_n),
+                             lambda n_i, t, k_i, go, gi, mi: (gi[t], k_i, n_i)),
+                # S_B^g: whole per-group scale block (tiny)
+                pl.BlockSpec((1, kb, s_b.shape[2]),
+                             lambda n_i, t, k_i, go, gi, mi: (gi[t], 0, 0)),
+            ],
+            out_specs=pl.BlockSpec(
+                (block_m, block_n),
+                lambda n_i, t, k_i, go, gi, mi: (mi[t], n_i)),
+            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(group_offsets, group_ids, m_tile_ids, a_fp8, s_a, b_fp8, s_b)

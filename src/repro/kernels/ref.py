@@ -1,0 +1,163 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the ground truth the Pallas kernels and the XLA fast paths are
+validated against (``tests/test_kernels_grouped_gemm.py`` sweeps shapes and
+dtypes and asserts allclose).
+
+Quantization scheme follows the paper (= DeepSeek-V3):
+  * ``A``  — fp8 e4m3, one scale per 1x128 tile:   S_A[m, ceil(K/128)]  (f32)
+  * ``B``  — fp8 e4m3, one scale per 128x128 block: S_B[g, ceil(K/128), ceil(N/128)]
+  * ``C``  — bf16, accumulated in f32 with per-K-block rescale.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+QUANT_BLOCK = 128  # the paper's 1x128 / 128x128 quantization granularity
+FP8_MAX = 448.0    # float8_e4m3fn max normal
+
+
+# ---------------------------------------------------------------------------
+# Quantization oracles
+# ---------------------------------------------------------------------------
+
+def quantize_tilewise_ref(a: jax.Array, block: int = QUANT_BLOCK):
+    """1 x `block` per-tile symmetric fp8 quantization of a 2-D activation.
+
+    Returns ``(a_fp8[m, k], s_a[m, ceil(k/block)])`` with
+    ``a ≈ a_fp8 * repeat(s_a, block, axis=1)``.
+    """
+    m, k = a.shape
+    kb = (k + block - 1) // block
+    pad = kb * block - k
+    ap = jnp.pad(a.astype(jnp.float32), ((0, 0), (0, pad)))
+    tiles = ap.reshape(m, kb, block)
+    amax = jnp.max(jnp.abs(tiles), axis=-1)
+    scale = jnp.where(amax > 0, amax / FP8_MAX, 1.0)
+    q = (tiles / scale[..., None]).reshape(m, kb * block)[:, :k]
+    return q.astype(jnp.float8_e4m3fn), scale.astype(jnp.float32)
+
+
+def quantize_blockwise_ref(b: jax.Array, block: int = QUANT_BLOCK):
+    """`block` x `block` per-block symmetric fp8 quantization of a 2-D weight.
+
+    Returns ``(b_fp8[k, n], s_b[ceil(k/block), ceil(n/block)])``.
+    """
+    k, n = b.shape
+    kb = (k + block - 1) // block
+    nb = (n + block - 1) // block
+    bp = jnp.pad(b.astype(jnp.float32), ((0, kb * block - k), (0, nb * block - n)))
+    blocks = bp.reshape(kb, block, nb, block).transpose(0, 2, 1, 3)
+    amax = jnp.max(jnp.abs(blocks), axis=(-1, -2))
+    scale = jnp.where(amax > 0, amax / FP8_MAX, 1.0)
+    q = (blocks / scale[..., None, None]).transpose(0, 2, 1, 3).reshape(
+        kb * block, nb * block)[:k, :n]
+    return q.astype(jnp.float8_e4m3fn), scale.astype(jnp.float32)
+
+
+def dequantize_tilewise_ref(a_fp8, s_a, block: int = QUANT_BLOCK):
+    m, k = a_fp8.shape
+    kb = s_a.shape[1]
+    scales = jnp.repeat(s_a, block, axis=1)[:, :k]
+    return a_fp8.astype(jnp.float32) * scales
+
+
+def dequantize_blockwise_ref(b_fp8, s_b, block: int = QUANT_BLOCK):
+    k, n = b_fp8.shape
+    scales = jnp.repeat(jnp.repeat(s_b, block, axis=0), block, axis=1)[:k, :n]
+    return b_fp8.astype(jnp.float32) * scales
+
+
+# ---------------------------------------------------------------------------
+# Grouped GEMM oracle (loop over groups, dequantize then fp32 matmul)
+# ---------------------------------------------------------------------------
+
+def grouped_gemm_ref(a_fp8, s_a, b_fp8, s_b, group_sizes,
+                     block: int = QUANT_BLOCK, out_dtype=jnp.bfloat16):
+    """Oracle: dequantize then per-group fp32 matmul.
+
+    a_fp8:  [M, K]  fp8   (concatenated groups, NO padding — the paper's input)
+    s_a:    [M, KB] f32
+    b_fp8:  [G, K, N] fp8
+    s_b:    [G, KB, NB] f32
+    group_sizes: [G] int32, sum == M
+    returns [M, N] out_dtype
+    """
+    group_sizes = np.asarray(group_sizes)
+    a = dequantize_tilewise_ref(a_fp8, s_a, block)
+    outs = []
+    off = 0
+    for g, sz in enumerate(group_sizes):
+        bg = dequantize_blockwise_ref(b_fp8[g], s_b[g], block)
+        outs.append(jnp.dot(a[off:off + sz], bg,
+                            preferred_element_type=jnp.float32))
+        off += int(sz)
+    return jnp.concatenate(outs, axis=0).astype(out_dtype)
+
+
+def grouped_gemm_blockscaled_ref(a_fp8, s_a, b_fp8, s_b, group_sizes,
+                                 block: int = QUANT_BLOCK,
+                                 out_dtype=jnp.bfloat16):
+    """Second oracle matching the *kernel's* exact math: per-K-block partial
+    products rescaled by ``s_a[:, kb] * s_b[g, kb, nb]`` and accumulated in
+    f32.  This is the arithmetic both the Pallas kernel and the XLA path
+    implement, so comparisons against it can demand much tighter tolerances
+    (the paper's "bitwise identical" claim is w.r.t. like-for-like math).
+    """
+    group_sizes = np.asarray(group_sizes)
+    m, k = a_fp8.shape
+    g_, _, n = b_fp8.shape
+    kb = (k + block - 1) // block
+    nb = (n + block - 1) // block
+    out = []
+    off = 0
+    for g, sz in enumerate(group_sizes):
+        acc = jnp.zeros((int(sz), n), jnp.float32)
+        ag = a_fp8[off:off + int(sz)]
+        sag = s_a[off:off + int(sz)]
+        for ki in range(kb):
+            k0, k1 = ki * block, min((ki + 1) * block, k)
+            part = jnp.dot(ag[:, k0:k1].astype(jnp.float32),
+                           b_fp8[g, k0:k1].astype(jnp.float32),
+                           preferred_element_type=jnp.float32)
+            # per-(1xK-tile) activation scale x per-(KxN block) weight scale
+            col_scale = jnp.repeat(s_b[g, ki, :nb], block)[:n]
+            acc = acc + part * sag[:, ki:ki + 1] * col_scale[None, :]
+        out.append(acc)
+        off += int(sz)
+    return jnp.concatenate(out, axis=0).astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Padded baseline oracle (what the paper compares against: pad + dense GEMM)
+# ---------------------------------------------------------------------------
+
+def pad_groups_ref(a_fp8, s_a, group_sizes, block_m: int = 128):
+    """The baseline's explicit padding op: each group's rows padded up to a
+    multiple of ``block_m``.  Returns (a_padded, s_a_padded,
+    padded_group_sizes).  This is the memory/bandwidth overhead the paper
+    eliminates."""
+    group_sizes = np.asarray(group_sizes)
+    padded_sizes = ((group_sizes + block_m - 1) // block_m) * block_m
+    a_out, s_out = [], []
+    off = 0
+    for sz, psz in zip(group_sizes, padded_sizes):
+        a_out.append(a_fp8[off:off + int(sz)])
+        a_out.append(jnp.zeros((int(psz - sz), a_fp8.shape[1]), a_fp8.dtype))
+        s_out.append(s_a[off:off + int(sz)])
+        s_out.append(jnp.ones((int(psz - sz), s_a.shape[1]), s_a.dtype))
+        off += int(sz)
+    return (jnp.concatenate(a_out, axis=0), jnp.concatenate(s_out, axis=0),
+            padded_sizes)
+
+
+def unpad_groups_ref(c_padded, group_sizes, block_m: int = 128):
+    group_sizes = np.asarray(group_sizes)
+    padded_sizes = ((group_sizes + block_m - 1) // block_m) * block_m
+    outs, off = [], 0
+    for sz, psz in zip(group_sizes, padded_sizes):
+        outs.append(c_padded[off:off + int(sz)])
+        off += int(psz)
+    return jnp.concatenate(outs, axis=0)

@@ -1,0 +1,317 @@
+"""Loop-aware cost analysis of partitioned HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` counts a while-loop body ONCE,
+which makes it useless for scan-over-layers / grad-accumulation programs
+(it under-counts flops by the product of all trip counts).  This module
+re-derives the three roofline inputs directly from the scheduled HLO:
+
+  * dot FLOPs           — 2 x |result| x |contraction|, per dot op
+  * HBM traffic bytes   — sum of operand+result buffer sizes of every
+                          top-level op (fusion internals excluded: a fused
+                          kernel touches HBM only at its boundary)
+  * collective bytes    — result-buffer bytes per collective, weighted by
+                          ring wire cost (AR 2x, AG/RS/A2A/CP 1x)
+
+all scaled by the product of enclosing ``while`` trip counts
+(``backend_config.known_trip_count``, emitted by XLA for counted loops).
+
+Everything is computed for the per-device SPMD module, so terms divide by
+per-chip peak rates directly.
+"""
+from __future__ import annotations
+
+import json
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+                "f8e5m2": 1, "f8e4m3": 1, "s32": 4, "u32": 4, "s16": 2,
+                "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8, "u64": 8,
+                "c64": 8, "c128": 16, "token": 0, "s4": 1, "u4": 1}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OP_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?(%[\w\.\-]+)\s*=\s*(.*?)\s+([a-z][a-z0-9\-]*)\((.*)$")
+_COMP_RE = re.compile(r"^(?:ENTRY\s+)?(%[\w\.\-]+)\s*\((.*)\)\s*->")
+_PARAM_RE = re.compile(r"(%?[\w\.\-]+):\s*(\([^()]*\)|[a-z][a-z0-9]*\[[0-9,]*\])")
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS_RE = re.compile(r"calls=(%[\w\.\-]+)")
+_BODY_RE = re.compile(r"body=(%[\w\.\-]+)")
+_COND_RE = re.compile(r"condition=(%[\w\.\-]+)")
+_METADATA_RE = re.compile(r'op_name="([^"]*)"')
+
+_SKIP_BYTES = {"tuple", "get-tuple-element", "parameter", "constant",
+               "bitcast", "while", "after-all", "iota", "conditional",
+               "call"}
+# elementwise ops an aggressive fuser (TPU XLA) would fuse with their
+# producers: in the fused-bound traffic model they cost result-bytes only
+_ELEMENTWISE = {"add", "multiply", "subtract", "divide", "select",
+                "compare", "convert", "exponential", "exponential-minus-one",
+                "log", "log-plus-one", "tanh", "rsqrt", "sqrt", "power",
+                "negate", "abs", "maximum", "minimum", "and", "or", "not",
+                "xor", "clamp", "floor", "ceil", "round-nearest-afz",
+                "sign", "cosine", "sine", "logistic", "broadcast",
+                "select-n"}
+_COLLECTIVES = {"all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute"}
+_WIRE_WEIGHT = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(text: str):
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return None, 1
+    dims = [int(d) for d in m.group(2).split(",") if d]
+    n = 1
+    for d in dims:
+        n *= d
+    return dims, n
+
+
+@dataclass
+class Op:
+    name: str
+    result: str
+    opcode: str
+    rest: str              # everything after the '(' of the operand list
+    line: str
+
+
+@dataclass
+class Computation:
+    name: str
+    ops: list = field(default_factory=list)
+    shapes: dict = field(default_factory=dict)   # %name -> shape text
+
+
+def parse_module(text: str):
+    comps = {}
+    cur = None
+    entry = None
+    for line in text.splitlines():
+        if not line:
+            continue
+        if not line.startswith(" "):
+            m = _COMP_RE.match(line)
+            if m:
+                cur = Computation(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                for pname, pshape in _PARAM_RE.findall(m.group(2)):
+                    key = pname if pname.startswith("%") else "%" + pname
+                    cur.shapes[key] = pshape
+            continue
+        if cur is None:
+            continue
+        m = _OP_RE.match(line)
+        if m:
+            op = Op(m.group(1), m.group(2), m.group(3), m.group(4), line)
+            cur.ops.append(op)
+            cur.shapes[op.name] = op.result
+    return comps, entry
+
+
+def _dot_flops(op: Op, comp: Computation) -> float:
+    dims, n_out = _shape_elems(op.result)
+    # contraction size from lhs operand shape + lhs_contracting_dims
+    mo = re.match(r"\s*(%[\w\.\-]+)", op.rest)
+    k = 0
+    mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
+    if mo and mc and mo.group(1) in comp.shapes:
+        lhs_dims, _ = _shape_elems(comp.shapes[mo.group(1)])
+        if lhs_dims:
+            k = 1
+            for i in [int(x) for x in mc.group(1).split(",") if x]:
+                if i < len(lhs_dims):
+                    k *= lhs_dims[i]
+    if not k:
+        k = 1
+    return 2.0 * n_out * k
+
+
+def _operand_bytes_list(op: Op, comp: Computation):
+    # operand list = %name refs up to the closing paren of the call
+    depth = 1
+    out = []
+    for ch in op.rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        out.append(ch)
+    operand_text = "".join(out)
+    return [_shape_bytes(comp.shapes[name])
+            for name in re.findall(r"%[\w\.\-]+", operand_text)
+            if name in comp.shapes]
+
+
+def _operand_bytes(op: Op, comp: Computation) -> int:
+    return sum(_operand_bytes_list(op, comp))
+
+
+def _op_traffic(op: Op, comp: Computation) -> float:
+    """HBM traffic model for one top-level op.
+
+    Slice/in-place ops must not be charged for the whole buffer:
+      * dynamic-slice reads only the slice it returns;
+      * dynamic-update-slice writes only the update (buffer is aliased);
+      * fusions rooted in a DUS behave like DUS (scan stacking / KV-cache
+        update).
+    Everything else: operands read once + result written once.
+    """
+    res = _shape_bytes(op.result)
+    ops_b = _operand_bytes_list(op, comp)
+    if op.opcode == "dynamic-slice":
+        return 2.0 * res
+    if op.opcode == "dynamic-update-slice" or (
+            op.opcode == "fusion" and "dynamic_update_slice" in op.line):
+        small = sum(ops_b) - (max(ops_b) if ops_b else 0)
+        return 2.0 * small
+    if op.opcode == "fusion" and "dynamic_slice" in op.line:
+        return 2.0 * res
+    return res + sum(ops_b)
+
+
+def analyze(text: str, *, top_k: int = 12):
+    comps, entry = parse_module(text)
+    flops = 0.0
+    hbm = 0.0
+    hbm_fused = 0.0     # lower bound: elementwise ops fuse with producers
+    coll = defaultdict(lambda: [0, 0.0])
+    by_label_flops = defaultdict(float)
+    by_label_bytes = defaultdict(float)
+
+    fusion_flops_memo = {}
+
+    def fusion_dot_flops(cname):
+        if cname in fusion_flops_memo:
+            return fusion_flops_memo[cname]
+        c = comps.get(cname)
+        total = 0.0
+        if c:
+            for op in c.ops:
+                if op.opcode == "dot":
+                    total += _dot_flops(op, c)
+                m = _CALLS_RE.search(op.line)
+                if m:
+                    total += fusion_dot_flops(m.group(1))
+        fusion_flops_memo[cname] = total
+        return total
+
+    def label_of(op: Op):
+        m = _METADATA_RE.search(op.line)
+        if not m:
+            return op.opcode
+        parts = m.group(1).split("/")
+        return "/".join(parts[-2:]) if len(parts) >= 2 else parts[-1]
+
+    seen = set()
+    stack = [(entry, 1.0)]
+    while stack:
+        cname, mult = stack.pop()
+        comp = comps.get(cname)
+        if comp is None:
+            continue
+        key = (cname, mult)
+        if key in seen:
+            continue
+        seen.add(key)
+        for op in comp.ops:
+            oc = op.opcode
+            base = oc.replace("-start", "")
+            if base in _COLLECTIVES and not oc.endswith("-done"):
+                b = _shape_bytes(op.result)
+                coll[base][0] += mult
+                coll[base][1] += b * mult
+                hbm += (b + _operand_bytes(op, comp)) * mult
+                continue
+            if oc == "while":
+                trip = 1
+                mt = _TRIP_RE.search(op.line)
+                if mt:
+                    trip = int(mt.group(1))
+                mb = _BODY_RE.search(op.line)
+                mc = _COND_RE.search(op.line)
+                if mb:
+                    stack.append((mb.group(1), mult * trip))
+                if mc:
+                    stack.append((mc.group(1), mult * trip))
+                continue
+            if oc == "conditional":
+                # expected cost: each branch weighted 1/n_branches (the
+                # causal chunk-skip takes the cheap branch for ~half the
+                # (i, j) pairs — documented approximation)
+                branches = re.findall(
+                    r"(?:true_computation|false_computation)=(%[\w\.\-]+)",
+                    op.line)
+                if not branches:
+                    mset = re.search(r"branch_computations=\{([^}]*)\}",
+                                     op.line)
+                    if mset:
+                        branches = re.findall(r"%[\w\.\-]+", mset.group(1))
+                w = mult / max(len(branches), 1)
+                for bname in branches:
+                    stack.append((bname, w))
+                continue
+            if oc == "call":
+                for m in re.finditer(r"(?:to_apply|calls)=(%[\w\.\-]+)",
+                                     op.line):
+                    stack.append((m.group(1), mult))
+            if oc == "dot":
+                f = _dot_flops(op, comp) * mult
+                flops += f
+                by_label_flops[label_of(op)] += f
+            if oc == "fusion":
+                f = fusion_dot_flops(_CALLS_RE.search(op.line).group(1)) \
+                    * mult if _CALLS_RE.search(op.line) else 0.0
+                flops += f
+                if f:
+                    by_label_flops[label_of(op)] += f
+            if oc not in _SKIP_BYTES:
+                b = _op_traffic(op, comp) * mult
+                hbm += b
+                by_label_bytes[label_of(op)] += b
+                if oc in _ELEMENTWISE:
+                    hbm_fused += _shape_bytes(op.result) * mult
+                else:
+                    hbm_fused += b
+
+    wire = sum(_WIRE_WEIGHT[k] * v[1] for k, v in coll.items())
+    top_f = sorted(by_label_flops.items(), key=lambda kv: -kv[1])[:top_k]
+    top_b = sorted(by_label_bytes.items(), key=lambda kv: -kv[1])[:top_k]
+    return {
+        "dot_flops": flops,
+        "hbm_bytes": hbm,
+        "hbm_bytes_fused": hbm_fused,
+        "collectives": {k: {"count": v[0], "bytes": v[1]}
+                        for k, v in coll.items()},
+        "wire_bytes": wire,
+        "top_flops": top_f,
+        "top_bytes": top_b,
+    }
+
+
+if __name__ == "__main__":
+    import sys
+    res = analyze(open(sys.argv[1]).read())
+    res["top_flops"] = res["top_flops"][:8]
+    res["top_bytes"] = res["top_bytes"][:8]
+    print(json.dumps(res, indent=1))

@@ -1,0 +1,127 @@
+"""Shared model building blocks (functional, pytree params).
+
+Naming conventions here are load-bearing: distributed/sharding.py assigns
+PartitionSpecs by leaf name (wq/wk/wv/wo, w_gate/w_up/w_down, embedding,
+lm_head, ...).
+"""
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.grouped_gemm import dense_linear_fp8
+from repro.distributed.context import constrain
+
+
+def ninit(key, shape, scale, dtype):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rms_norm(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rms_norm(p, x, eps=1e-6):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope(x, positions, theta: float):
+    """x: [..., S, H, D]; positions: [..., S] int32."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs
+    sin, cos = jnp.sin(angles), jnp.cos(angles)   # [..., S, 1, half]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    out = jnp.concatenate([xf1 * cos - xf2 * sin,
+                           xf2 * cos + xf1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Linear / MLP
+# ---------------------------------------------------------------------------
+
+def linear(x, w, *, precision: str = "bf16", backend=None):
+    """2-D weight matmul with optional DeepSeek-style fp8 path (the G=1
+    degenerate case of the paper's grouped GEMM)."""
+    if precision == "fp8" and x.shape[-1] % 128 == 0 and w.shape[-1] % 128 == 0:
+        lead = x.shape[:-1]
+        y = dense_linear_fp8(x.reshape(-1, x.shape[-1]), w, backend=backend)
+        return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
+    return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
+
+
+def init_mlp(key, d, f, act: str, dtype):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": ninit(ks[0], (d, f), d ** -0.5, dtype),
+         "w_down": ninit(ks[1], (f, d), f ** -0.5, dtype)}
+    if act == "swiglu":
+        p["w_gate"] = ninit(ks[2], (d, f), d ** -0.5, dtype)
+    return p
+
+
+def mlp(p, x, act: str = "swiglu", *, precision="bf16", backend=None):
+    # §Perf I5: activation nonlinearities run in the compute dtype (bf16)
+    # — MaxText practice; the f32 upcast doubled MLP elementwise traffic
+    up = linear(x, p["w_up"], precision=precision, backend=backend)
+    if act == "swiglu":
+        gate = linear(x, p["w_gate"], precision=precision, backend=backend)
+        h = jax.nn.silu(gate) * up
+    else:  # gelu
+        h = jax.nn.gelu(up)
+    h = constrain(h, "batch", "seq", "mlp")
+    return linear(h, p["w_down"], precision=precision, backend=backend)
+
+
+# ---------------------------------------------------------------------------
+# Embedding / head / loss
+# ---------------------------------------------------------------------------
+
+def init_embedding(key, vocab, d, dtype, tie: bool):
+    ks = jax.random.split(key, 2)
+    p = {"embedding": ninit(ks[0], (vocab, d), d ** -0.5, dtype)}
+    if not tie:
+        p["lm_head"] = ninit(ks[1], (d, vocab), d ** -0.5, dtype)
+    return p
+
+
+def embed(p, tokens):
+    return jnp.take(p["embedding"], tokens, axis=0)
+
+
+def unembed(p, x):
+    if "lm_head" in p:
+        logits = jnp.einsum("...d,dv->...v", x, p["lm_head"].astype(x.dtype))
+    else:
+        logits = jnp.einsum("...d,vd->...v", x,
+                            p["embedding"].astype(x.dtype))
+    return constrain(logits, "batch", "seq", "vocab")
+
+
+def cross_entropy(logits, labels, mask=None):
+    """Mean token CE in f32; labels < 0 are ignored."""
+    logits = logits.astype(jnp.float32)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    valid = (labels >= 0)
+    if mask is not None:
+        valid = valid & (mask > 0)
+    valid = valid.astype(jnp.float32)
+    return jnp.sum(nll * valid) / jnp.maximum(jnp.sum(valid), 1.0)

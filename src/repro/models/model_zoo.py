@@ -1,0 +1,115 @@
+"""Unified model API over all assigned architectures.
+
+``make_model(cfg)`` returns a ``Model`` namespace with init / loss /
+prefill / decode entry points; ``input_specs`` produces the
+ShapeDtypeStruct stand-ins the multi-pod dry-run lowers against
+(no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import transformer as tfm
+from repro.models import whisper as whs
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init_params: Callable
+    loss: Callable                  # (params, batch) -> (loss, metrics)
+    prefill: Callable               # (params, batch) -> (logits, cache)
+    decode_step: Callable           # (params, tokens, cache) -> (logits, cache)
+    init_cache: Callable            # (params, batch, batch_size, seq) -> cache
+
+
+def make_model(cfg: ModelConfig) -> Model:
+    if cfg.family == "audio":
+        def init_params(key):
+            return whs.init_whisper(key, cfg)
+
+        def loss(params, batch):
+            return whs.whisper_loss(params, batch, cfg)
+
+        def prefill(params, batch, cache_capacity=None):
+            logits, cache, _ = whs.whisper_forward(
+                params, batch["tokens"], batch["frames"], cfg,
+                mode="prefill", cache_capacity=cache_capacity)
+            return logits, cache
+
+        def decode_step(params, tokens, cache):
+            logits, cache, _ = whs.whisper_forward(
+                params, tokens, None, cfg, mode="decode", cache=cache)
+            return logits, cache
+
+        def init_cache(params, batch, batch_size, seq):
+            return whs.whisper_init_cache(params, batch["frames"], cfg,
+                                          batch_size, seq)
+    else:
+        def init_params(key):
+            return tfm.init_decoder(key, cfg)
+
+        def loss(params, batch):
+            return tfm.lm_loss(params, batch, cfg)
+
+        def prefill(params, batch, cache_capacity=None):
+            logits, cache, _ = tfm.decoder_forward(
+                params, batch["tokens"], cfg, mode="prefill",
+                patch_embeds=batch.get("patch_embeds"),
+                cache_capacity=cache_capacity)
+            return logits, cache
+
+        def decode_step(params, tokens, cache):
+            logits, cache, _ = tfm.decoder_forward(
+                params, tokens, cfg, mode="decode", cache=cache)
+            return logits, cache
+
+        def init_cache(params, batch, batch_size, seq):
+            return tfm.init_cache(cfg, batch_size, seq)
+
+    return Model(cfg=cfg, init_params=init_params, loss=loss,
+                 prefill=prefill, decode_step=decode_step,
+                 init_cache=init_cache)
+
+
+# ---------------------------------------------------------------------------
+# Batches & specs
+# ---------------------------------------------------------------------------
+
+def batch_struct(cfg: ModelConfig, shape: ShapeConfig,
+                 batch_size: Optional[int] = None, *, decode: bool = False):
+    """ShapeDtypeStruct pytree for one step's data inputs."""
+    b = batch_size or shape.global_batch
+    s = 1 if decode else shape.seq_len
+    d = {"tokens": jax.ShapeDtypeStruct((b, s), jnp.int32)}
+    if not decode:
+        d["labels"] = jax.ShapeDtypeStruct((b, s), jnp.int32)
+    if cfg.family == "audio" and not decode:
+        d["frames"] = jax.ShapeDtypeStruct((b, cfg.encoder_seq, cfg.d_model),
+                                           jnp.bfloat16)
+    if cfg.family == "vlm" and not decode:
+        d["patch_embeds"] = jax.ShapeDtypeStruct(
+            (b, cfg.num_patches, cfg.patch_embed_dim), jnp.bfloat16)
+    return d
+
+
+def synthetic_batch(key, cfg: ModelConfig, seq_len: int, batch_size: int):
+    """Concrete random batch (smoke tests, examples, CPU training)."""
+    ks = jax.random.split(key, 3)
+    tokens = jax.random.randint(ks[0], (batch_size, seq_len), 0,
+                                cfg.vocab_size, jnp.int32)
+    batch = {"tokens": tokens, "labels": tokens}
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            ks[1], (batch_size, cfg.encoder_seq, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "vlm":
+        batch["patch_embeds"] = jax.random.normal(
+            ks[2], (batch_size, cfg.num_patches, cfg.patch_embed_dim),
+            jnp.bfloat16)
+    return batch

@@ -1,0 +1,106 @@
+"""RG-LRU recurrent block (RecurrentGemma / Griffin).
+
+TPU adaptation: the RG-LRU linear recurrence ``h_t = a_t h_{t-1} + b_t`` is
+evaluated with ``jax.lax.associative_scan`` (log-depth, MXU-free but fully
+parallel over time) instead of a sequential loop — the standard TPU
+formulation.  Decode is a single O(1) state update.
+
+Simplification vs the released model (documented in DESIGN.md): the
+recurrence/input gates use dense [w, w] projections instead of per-head
+block-diagonal ones.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ninit
+from repro.distributed.context import constrain
+
+_C = 8.0  # Griffin's fixed gate temperature
+
+
+def init_rglru(key, cfg, dtype):
+    d, w, cw = cfg.d_model, cfg.lru_width or cfg.d_model, cfg.conv_width
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": ninit(ks[0], (d, w), d ** -0.5, dtype),       # value branch
+        "w_y": ninit(ks[1], (d, w), d ** -0.5, dtype),       # gate branch
+        "conv": ninit(ks[2], (cw, w), cw ** -0.5, dtype),
+        "w_a": ninit(ks[3], (w, w), w ** -0.5, dtype),       # recurrence gate
+        "w_i": ninit(ks[4], (w, w), w ** -0.5, dtype),       # input gate
+        "lam": jnp.linspace(0.9, 5.0, w).astype(jnp.float32),  # a in (0,1)
+        "w_out": ninit(ks[5], (w, d), w ** -0.5, dtype),
+    }
+
+
+def _gates(p, u):
+    """u: [B, S, w] post-conv activations -> (log_a, gated input) f32."""
+    uf = u.astype(jnp.float32)
+    r = jax.nn.sigmoid(uf @ p["w_a"].astype(jnp.float32))
+    i = jax.nn.sigmoid(uf @ p["w_i"].astype(jnp.float32))
+    log_a_max = -_C * jax.nn.softplus(p["lam"])          # [w], < 0
+    log_a = r * log_a_max[None, None, :]                 # [B,S,w]
+    a2 = jnp.exp(2.0 * log_a)
+    x_in = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-12)) * (i * uf)
+    return log_a, x_in
+
+
+def _conv1d(p, x, conv_state=None):
+    """Causal depthwise conv, width cw.  x: [B,S,w].
+    With conv_state [B, cw-1, w] performs a streaming step."""
+    kern = p["conv"].astype(jnp.float32)                 # [cw, w]
+    cw = kern.shape[0]
+    xf = x.astype(jnp.float32)
+    if conv_state is not None:
+        buf = jnp.concatenate([conv_state.astype(jnp.float32), xf], axis=1)
+        out = jnp.einsum("btw,tw->bw", buf[:, -cw:], kern)[:, None]
+        return out.astype(x.dtype), buf[:, -(cw - 1):].astype(x.dtype)
+    pad = jnp.pad(xf, ((0, 0), (cw - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + x.shape[1]] * kern[i] for i in range(cw))
+    return out.astype(x.dtype), pad[:, -(cw - 1):].astype(x.dtype)
+
+
+def rglru_apply(p, x, *, state=None):
+    """x: [B, S, d].  state = None (train/prefill from scratch) or dict
+    {h: [B,w], conv: [B,cw-1,w], } for streaming decode.
+    Returns (y [B,S,d], new_state)."""
+    b, s, d = x.shape
+    xb = linear_f32(x, p["w_x"])                         # [B,S,w]
+    yb = linear_f32(x, p["w_y"])
+    conv_state = state["conv"] if state is not None else None
+    u, new_conv = _conv1d(p, xb, conv_state)
+    log_a, x_in = _gates(p, u)
+
+    if state is not None and s == 1:
+        h_prev = state["h"].astype(jnp.float32)
+        a = jnp.exp(log_a[:, 0])
+        h = a * h_prev + x_in[:, 0]
+        hs = h[:, None]                                  # [B,1,w]
+    else:
+        # parallel linear recurrence: (a, b) composition via associative scan
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 + a2, jnp.exp(a2) * b1 + b2        # log-space decay
+        la, hb = jax.lax.associative_scan(combine, (log_a, x_in), axis=1)
+        if state is not None:  # fold in carried state for chunked prefill
+            hb = hb + jnp.exp(la) * state["h"].astype(jnp.float32)[:, None]
+        hs = hb
+        h = hs[:, -1]
+    gate = jax.nn.gelu(yb.astype(jnp.float32))
+    out = (gate * hs).astype(x.dtype)
+    out = constrain(out, "batch", "seq", "mlp")
+    y = jnp.einsum("bsw,wd->bsd", out, p["w_out"].astype(x.dtype))
+    new_state = {"h": h.astype(jnp.float32), "conv": new_conv}
+    return y, new_state
+
+
+def linear_f32(x, w):
+    return jnp.einsum("bsd,dw->bsw", x.astype(w.dtype), w)
+
+
+def init_rglru_state(cfg, batch):
+    w, cw = cfg.lru_width or cfg.d_model, cfg.conv_width
+    return {"h": jnp.zeros((batch, w), jnp.float32),
+            "conv": jnp.zeros((batch, cw - 1, w), jnp.bfloat16)}

@@ -1,0 +1,185 @@
+"""xLSTM blocks: mLSTM (matrix memory) + sLSTM (scalar memory).
+
+TPU adaptation (DESIGN.md): the mLSTM recurrence is evaluated in the
+*chunkwise-parallel* form — within a chunk the contribution is a masked,
+decay-weighted attention-like matmul (MXU work); across chunks a scan
+carries the (C, n) state.  This is the standard TPU-native formulation of
+matrix-memory RNNs; a per-timestep sequential scan would serialize the MXU.
+
+Numerics simplification (documented): sigmoid input/forget gates (GLA-style)
+instead of the paper's exponential gating + stabilizer; decays stay in
+log-space and are <= 0 so no overflow is possible.  Decode is an O(1) state
+update; the long_500k cell runs with constant memory.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import ninit
+from repro.distributed.context import constrain
+
+
+def init_mlstm(key, cfg, dtype):
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 7)
+    return {
+        "wq": ninit(ks[0], (d, h * hd), d ** -0.5, dtype),
+        "wk": ninit(ks[1], (d, h * hd), d ** -0.5, dtype),
+        "wv": ninit(ks[2], (d, h * hd), d ** -0.5, dtype),
+        "w_if": ninit(ks[3], (d, 2 * h), d ** -0.5, jnp.float32),
+        "w_og": ninit(ks[4], (d, h * hd), d ** -0.5, dtype),
+        "wo": ninit(ks[5], (h * hd, d), (h * hd) ** -0.5, dtype),
+    }
+
+
+def mlstm_apply(p, x, *, state=None, chunk=256):
+    """x: [B,S,d] -> (y, state={C:[B,H,dk,dv], n:[B,H,dk]})."""
+    b, s, d = x.shape
+    hhd = p["wq"].shape[1]
+    h = p["w_if"].shape[1] // 2
+    hd = hhd // h
+    scale = hd ** -0.5
+
+    q = jnp.einsum("bsd,de->bse", x, p["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,de->bse", x, p["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,de->bse", x, p["wv"].astype(x.dtype))
+    q = q.reshape(b, s, h, hd).transpose(0, 2, 1, 3)     # [B,H,S,D]
+    k = k.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(b, s, h, hd).transpose(0, 2, 1, 3)
+    gates = (x.astype(jnp.float32) @ p["w_if"])          # [B,S,2H]
+    log_f = -jax.nn.softplus(-gates[..., :h]).transpose(0, 2, 1)  # log σ
+    i_g = jax.nn.sigmoid(gates[..., h:]).transpose(0, 2, 1)       # [B,H,S]
+
+    if state is None:
+        state = init_mlstm_state_like(b, h, hd)
+
+    if s == 1:  # decode: O(1) recurrent update
+        c_prev, n_prev = state["C"], state["n"]
+        f = jnp.exp(log_f[..., 0])[..., None]            # [B,H,1]
+        i0 = i_g[..., 0][..., None]
+        kv = jnp.einsum("bhk,bhv->bhkv", k[:, :, 0].astype(jnp.float32),
+                        v[:, :, 0].astype(jnp.float32))
+        c_new = f[..., None] * c_prev + i0[..., None] * kv
+        n_new = f * n_prev + i0 * k[:, :, 0].astype(jnp.float32)
+        qf = q[:, :, 0].astype(jnp.float32) * scale
+        num = jnp.einsum("bhk,bhkv->bhv", qf, c_new)
+        den = jnp.abs(jnp.einsum("bhk,bhk->bh", qf, n_new))
+        y = num / jnp.maximum(den, 1.0)[..., None]
+        ys = y[:, :, None]                               # [B,H,1,D]
+        new_state = {"C": c_new, "n": n_new}
+    else:
+        t = min(chunk, s)
+        assert s % t == 0, (s, t)
+        nc = s // t
+
+        def chunk_step(carry, xs):
+            c_prev, n_prev = carry                       # [B,H,dk,dv],[B,H,dk]
+            qc, kc, vc, lfc, ic = xs                     # [B,H,T,...]
+            kcf = kc.astype(jnp.float32)
+            vcf = vc.astype(jnp.float32)
+            qf = qc.astype(jnp.float32) * scale
+            bcum = jnp.cumsum(lfc, axis=-1)              # [B,H,T], <= 0
+            btot = bcum[..., -1:]
+            # intra-chunk: decay-weighted causal linear attention (MXU)
+            rel = bcum[..., :, None] - bcum[..., None, :]    # b_j - b_k
+            causal = jnp.tril(jnp.ones((t, t), bool))
+            # mask BEFORE exp: acausal rel is positive and can overflow;
+            # inf * 0 in the VJP would poison gradients
+            rel = jnp.where(causal, rel, 0.0)
+            w_jk = jnp.where(causal, jnp.exp(rel) * ic[..., None, :], 0.0)
+            sjk = jnp.einsum("bhjd,bhkd->bhjk", qf, kcf)
+            intra = jnp.einsum("bhjk,bhkd->bhjd", sjk * w_jk, vcf)
+            # inter-chunk: read carried state with per-position decay
+            dec = jnp.exp(bcum)                          # <= 1
+            inter = jnp.einsum("bhjk,bhkv->bhjv", qf * dec[..., None], c_prev)
+            # normalizer at each position
+            n_intra = jnp.einsum("bhjk,bhkd->bhjd", w_jk, kcf)
+            n_j = dec[..., None] * n_prev[:, :, None, :] + n_intra
+            den = jnp.abs(jnp.einsum("bhjd,bhjd->bhj", qf, n_j))
+            yc = (intra + inter) / jnp.maximum(den, 1.0)[..., None]
+            # carry state to end of chunk
+            wk_end = jnp.exp(btot - bcum) * ic           # [B,H,T], <= 1
+            kv = jnp.einsum("bhtk,bhtv->bhkv", kcf * wk_end[..., None], vcf)
+            c_new = jnp.exp(btot)[..., None] * c_prev + kv
+            n_new = jnp.exp(btot) * n_prev + jnp.sum(
+                kcf * wk_end[..., None], axis=2)
+            return (c_new, n_new), yc
+
+        def split(a):  # [B,H,S,...] -> [nc,B,H,T,...]
+            return jnp.moveaxis(a.reshape(b, h, nc, t, *a.shape[3:]), 2, 0)
+
+        xs = (split(q), split(k), split(v), split(log_f), split(i_g))
+        (c_new, n_new), ys = jax.lax.scan(
+            chunk_step, (state["C"], state["n"]), xs)    # ys: [nc,B,H,T,D]
+        ys = jnp.moveaxis(ys, 0, 2).reshape(b, h, s, hd)
+        new_state = {"C": c_new, "n": n_new}
+
+    merged = ys.transpose(0, 2, 1, 3).reshape(b, s, h * hd)
+    og = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", x.astype(jnp.float32),
+                                   p["w_og"].astype(jnp.float32)))
+    out = (og * merged.astype(jnp.float32)).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "embed"), new_state
+
+
+def init_mlstm_state_like(b, h, hd):
+    return {"C": jnp.zeros((b, h, hd, hd), jnp.float32),
+            "n": jnp.zeros((b, h, hd), jnp.float32)}
+
+
+def init_mlstm_state(cfg, batch):
+    return init_mlstm_state_like(batch, cfg.num_heads, cfg.resolved_head_dim)
+
+
+# ---------------------------------------------------------------------------
+# sLSTM — scalar memory, sequential scan (elementwise; cheap)
+# ---------------------------------------------------------------------------
+
+def init_slstm(key, cfg, dtype):
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    return {
+        "w_z": ninit(ks[0], (d, d), d ** -0.5, dtype),
+        "w_if": ninit(ks[1], (d, 2 * d), d ** -0.5, jnp.float32),
+        "w_og": ninit(ks[2], (d, d), d ** -0.5, dtype),
+        "wo": ninit(ks[3], (d, d), d ** -0.5, dtype),
+    }
+
+
+def slstm_apply(p, x, *, state=None):
+    """x: [B,S,d] -> (y, state={c:[B,d], n:[B,d]})."""
+    b, s, d = x.shape
+    z = jnp.tanh(jnp.einsum("bsd,de->bse", x, p["w_z"].astype(x.dtype))
+                 .astype(jnp.float32))
+    gates = x.astype(jnp.float32) @ p["w_if"]
+    f = jax.nn.sigmoid(gates[..., :d])
+    i = jax.nn.sigmoid(gates[..., d:])
+    if state is None:
+        state = init_slstm_state_like(b, d)
+
+    def step(carry, xs):
+        c, n = carry
+        ft, it, zt = xs
+        c = ft * c + it * zt
+        n = ft * n + it
+        h = c / jnp.maximum(n, 1.0)
+        return (c, n), h
+
+    (c_f, n_f), hs = jax.lax.scan(
+        step, (state["c"], state["n"]),
+        (f.swapaxes(0, 1), i.swapaxes(0, 1), z.swapaxes(0, 1)))
+    hs = hs.swapaxes(0, 1)                               # [B,S,d]
+    og = jax.nn.sigmoid(x.astype(jnp.float32) @ p["w_og"].astype(jnp.float32))
+    out = (og * hs).astype(x.dtype)
+    y = jnp.einsum("bse,ed->bsd", out, p["wo"].astype(x.dtype))
+    return constrain(y, "batch", "seq", "embed"), {"c": c_f, "n": n_f}
+
+
+def init_slstm_state_like(b, d):
+    return {"c": jnp.zeros((b, d), jnp.float32),
+            "n": jnp.zeros((b, d), jnp.float32)}
+
+
+def init_slstm_state(cfg, batch):
+    return init_slstm_state_like(batch, cfg.d_model)

@@ -1,0 +1,79 @@
+"""Batched serving engine: prefill + greedy/temperature decode loop with a
+static KV-cache capacity (continuous-batching-lite: per-sequence stop with
+a done mask; finished rows keep decoding into padding, standard for
+static-shape TPU serving)."""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.model_zoo import Model
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: jax.Array          # [B, max_new]
+    num_generated: jax.Array   # [B]
+
+
+class Engine:
+    def __init__(self, model: Model, params, *, max_new_tokens: int = 32,
+                 eos_id: int = -1, temperature: float = 0.0):
+        self.model = model
+        self.params = params
+        self.max_new = max_new_tokens
+        self.eos_id = eos_id
+        self.temperature = temperature
+        self._prefill = jax.jit(
+            functools.partial(self._prefill_impl),
+            static_argnames=("cache_capacity",))
+        self._decode_loop = jax.jit(self._decode_loop_impl)
+
+    def _prefill_impl(self, params, batch, cache_capacity):
+        logits, cache = self.model.prefill(params, batch,
+                                           cache_capacity=cache_capacity)
+        return logits[:, -1], cache
+
+    def _sample(self, logits, key):
+        if self.temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(
+            key, logits.astype(jnp.float32) / self.temperature
+        ).astype(jnp.int32)
+
+    def _decode_loop_impl(self, params, first_token, cache, key):
+        def step(carry, _):
+            tok, cache, done, key = carry
+            key, sub = jax.random.split(key)
+            logits, cache = self.model.decode_step(params, tok[:, None],
+                                                   cache)
+            nxt = self._sample(logits[:, 0], sub)
+            nxt = jnp.where(done, 0, nxt)
+            done = done | (nxt == self.eos_id)
+            return (nxt, cache, done, key), nxt
+
+        b = first_token.shape[0]
+        done0 = jnp.zeros((b,), bool)
+        (_, cache, done, _), toks = jax.lax.scan(
+            step, (first_token, cache, done0, key), None,
+            length=self.max_new - 1)
+        return toks.swapaxes(0, 1), done  # [B, max_new-1]
+
+    def generate(self, batch, *, key=None) -> GenerationResult:
+        key = key if key is not None else jax.random.PRNGKey(0)
+        prompt_len = batch["tokens"].shape[1]
+        extra = (self.model.cfg.num_patches
+                 if self.model.cfg.family == "vlm" else 0)
+        cap = prompt_len + extra + self.max_new
+        last_logits, cache = self._prefill(self.params, batch,
+                                           cache_capacity=cap)
+        key, sub = jax.random.split(key)
+        first = self._sample(last_logits, sub)
+        rest, done = self._decode_loop(self.params, first, cache, key)
+        tokens = jnp.concatenate([first[:, None], rest], axis=1)
+        num = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
+        return GenerationResult(tokens=tokens, num_generated=num)

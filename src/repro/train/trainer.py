@@ -1,0 +1,66 @@
+"""Training step: microbatch gradient accumulation (lax.scan), AdamW,
+and jit with parameter donation.
+
+The global batch [G, S] is reshaped to [accum, G/accum, S]; grads
+accumulate in f32 across the scan — one optimizer apply and (under GSPMD)
+one gradient all-reduce per step, overlapped by XLA's latency-hiding
+scheduler with the last microbatch's backward.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.optim import adamw
+
+
+def make_train_step(loss_fn: Callable, opt_cfg: adamw.OptConfig,
+                    grad_accum: int = 1, donate: bool = True):
+    """loss_fn(params, batch) -> (loss, metrics dict of scalars)."""
+
+    def train_step(params, opt_state, batch):
+        if grad_accum == 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+        else:
+            def reshape(x):
+                b = x.shape[0]
+                return x.reshape(grad_accum, b // grad_accum, *x.shape[1:])
+            micro = jax.tree.map(reshape, batch)
+
+            def micro_step(carry, mb):
+                gsum, lsum = carry
+                (l, _), g = jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb)
+                gsum = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), gsum, g)
+                return (gsum, lsum + l), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (gsum, lsum), _ = jax.lax.scan(micro_step, (g0, 0.0), micro)
+            grads = jax.tree.map(lambda g: g / grad_accum, gsum)
+            loss = lsum / grad_accum
+            metrics = {}
+
+        params, opt_state, opt_metrics = adamw.apply_updates(
+            params, grads, opt_state, opt_cfg)
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def jit_train_step(train_step, mesh=None, param_shardings=None,
+                   opt_shardings=None, batch_shardings=None):
+    donate = (0, 1)
+    if mesh is None:
+        return jax.jit(train_step, donate_argnums=donate)
+    return jax.jit(
+        train_step,
+        in_shardings=(param_shardings, opt_shardings, batch_shardings),
+        out_shardings=(param_shardings, opt_shardings, None),
+        donate_argnums=donate)

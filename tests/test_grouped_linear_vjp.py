@@ -1,0 +1,60 @@
+"""Differentiable grouped-linear: the fp8 custom VJP through the Pallas
+kernel (interpret mode) — forward AND dgrad run the padding-free kernel;
+wgrad runs the ragged contraction.  Cross-checked against the xla_exact
+path and finite-difference structure."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.grouped_gemm import grouped_linear
+
+
+def _setup(sizes=(40, 0, 57), k=128, n=128, seed=0):
+    rng = np.random.default_rng(seed)
+    m = sum(sizes)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((len(sizes), k, n)), jnp.float32)
+    gs = jnp.asarray(sizes, jnp.int32)
+    return x, w, gs
+
+
+def test_fp8_pallas_fwd_matches_xla_exact():
+    x, w, gs = _setup()
+    y_pal = grouped_linear(x, w, gs, precision="fp8",
+                           backend="pallas_interpret")
+    y_ref = grouped_linear(x, w, gs, precision="fp8", backend="xla_exact")
+    np.testing.assert_allclose(np.asarray(y_pal, np.float32),
+                               np.asarray(y_ref, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_fp8_pallas_grads_match_xla_exact():
+    x, w, gs = _setup()
+
+    def loss(x, w, backend):
+        y = grouped_linear(x, w, gs, precision="fp8", backend=backend)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    gx_p, gw_p = jax.grad(loss, argnums=(0, 1))(x, w, "pallas_interpret")
+    gx_r, gw_r = jax.grad(loss, argnums=(0, 1))(x, w, "xla_exact")
+    assert bool(jnp.isfinite(gx_p).all()) and bool(jnp.isfinite(gw_p).all())
+    np.testing.assert_allclose(np.asarray(gx_p), np.asarray(gx_r),
+                               rtol=5e-2, atol=5e-1)
+    np.testing.assert_allclose(np.asarray(gw_p), np.asarray(gw_r),
+                               rtol=5e-2, atol=5e-1)
+
+
+def test_bf16_grouped_linear_grad_structure():
+    """Gradients respect the group structure: dW[g] only sees rows of
+    group g (zero-size group -> exactly zero gradient)."""
+    x, w, gs = _setup(sizes=(40, 0, 57))
+
+    def loss(w):
+        y = grouped_linear(x, w, gs, precision="bf16")
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    gw = jax.grad(loss)(w)
+    assert float(jnp.abs(gw[1]).max()) == 0.0      # empty group
+    assert float(jnp.abs(gw[0]).max()) > 0.0
+    assert float(jnp.abs(gw[2]).max()) > 0.0

@@ -1,0 +1,83 @@
+"""Unit tests for the loop-aware HLO analyzer that backs §Roofline."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.hlo_analysis import analyze
+
+
+def _hlo(f, *args):
+    return jax.jit(f).lower(*args).compile().as_text()
+
+
+def test_scan_flops_scaled_by_trip_count():
+    n, trips = 256, 8
+
+    def f(x, w):
+        def body(c, _):
+            return jnp.tanh(c @ w), None
+        out, _ = jax.lax.scan(body, x, None, length=trips)
+        return out
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    res = analyze(_hlo(f, x, w))
+    expected = trips * 2 * n ** 3
+    assert abs(res["dot_flops"] - expected) / expected < 0.01, \
+        (res["dot_flops"], expected)
+
+
+def test_nested_scan_multiplies():
+    n, t1, t2 = 128, 4, 6
+
+    def f(x, w):
+        def outer(c, _):
+            def inner(ci, _):
+                return ci @ w, None
+            ci, _ = jax.lax.scan(inner, c, None, length=t2)
+            return ci, None
+        out, _ = jax.lax.scan(outer, x, None, length=t1)
+        return out
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    res = analyze(_hlo(f, x, w))
+    expected = t1 * t2 * 2 * n ** 3
+    assert abs(res["dot_flops"] - expected) / expected < 0.01
+
+
+def test_dot_flops_batched_contraction():
+    def f(a, b):
+        return jnp.einsum("bik,bkj->bij", a, b)
+    a = jax.ShapeDtypeStruct((4, 64, 32), jnp.float32)
+    b = jax.ShapeDtypeStruct((4, 32, 16), jnp.float32)
+    res = analyze(_hlo(f, a, b))
+    expected = 2 * 4 * 64 * 16 * 32
+    assert abs(res["dot_flops"] - expected) / expected < 0.01
+
+
+def test_conditional_branches_expectation_weighted():
+    n = 128
+
+    def f(x, w):
+        def body(c, i):
+            c = jax.lax.cond(i % 2 == 0, lambda z: z @ w, lambda z: z, c)
+            return c, None
+        out, _ = jax.lax.scan(body, x, jnp.arange(8))
+        return out
+
+    x = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    w = jax.ShapeDtypeStruct((n, n), jnp.float32)
+    res = analyze(_hlo(f, x, w))
+    # 8 iterations x expected 0.5 branch weight = 4 matmuls expected
+    expected = 4 * 2 * n ** 3
+    assert abs(res["dot_flops"] - expected) / expected < 0.01
+
+
+def test_hbm_fused_leq_unfused():
+    def f(x):
+        return jnp.tanh(x * 2.0 + 1.0) * x
+    x = jax.ShapeDtypeStruct((512, 512), jnp.float32)
+    res = analyze(_hlo(f, x))
+    assert 0 < res["hbm_bytes_fused"] <= res["hbm_bytes"]

@@ -1,0 +1,105 @@
+"""Hypothesis property tests on the system's core invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import padding_baseline as pb
+from repro.kernels import ref
+from repro.kernels.grouped_gemm_kernel import make_group_metadata
+
+SET = dict(max_examples=25, deadline=None)
+
+
+@given(st.lists(st.integers(0, 300), min_size=1, max_size=8),
+       st.sampled_from([64, 128, 256]))
+@settings(**SET)
+def test_group_metadata_invariants(sizes, block_m):
+    """For ANY ragged group sizes: (1) every row of every group is covered
+    by exactly one (group, tile) visit that owns it; (2) visits are sorted
+    so same-tile visits are adjacent; (3) visit count <= tiles + G - 1."""
+    m = max(sum(sizes), 1)
+    g = len(sizes)
+    gs = jnp.asarray(sizes, jnp.int32)
+    offs, gids, tids = make_group_metadata(gs, m, block_m, g)
+    offs = np.asarray(offs)
+    gids, tids = np.asarray(gids), np.asarray(tids)
+    num_tiles = -(-m // block_m)
+    assert len(gids) == num_tiles + g - 1
+
+    # ownership: row r of group gi is covered iff some visit has
+    # (gids==gi and tids == r // block_m)
+    visits = set(zip(gids.tolist(), tids.tolist()))
+    for gi in range(g):
+        for r in (offs[gi], offs[gi + 1] - 1):
+            if offs[gi] <= r < offs[gi + 1]:
+                assert (gi, r // block_m) in visits, (gi, r, sizes)
+
+    # same-tile adjacency (output revisiting constraint of the kernel)
+    seen_tiles = {}
+    for i, t in enumerate(tids.tolist()):
+        if t in seen_tiles:
+            assert i - seen_tiles[t] == 1 or tids[i - 1] == t, \
+                "non-adjacent revisit"
+        seen_tiles[t] = i
+
+
+@given(st.integers(1, 2048), st.integers(1, 32), st.integers(0, 10_000))
+@settings(**SET)
+def test_paper_group_generator_sums(m, g, seed):
+    from benchmarks.common import generate_group_sizes
+    sizes = generate_group_sizes(m, g, seed)
+    assert sizes.sum() == m and (sizes >= 0).all() and len(sizes) == g
+
+
+@given(st.integers(1, 64), st.sampled_from([128, 256, 384]))
+@settings(**SET)
+def test_quantization_roundtrip_bounded(m, k):
+    """|dequant(quant(x)) - x| <= amax_tile / FP8_MAX  (one fp8 ulp-ish)."""
+    x = jnp.asarray(np.random.default_rng(m * k).standard_normal((m, k)),
+                    jnp.float32) * 3.0
+    q, s = ref.quantize_tilewise_ref(x)
+    back = ref.dequantize_tilewise_ref(q, s)
+    tiles = np.asarray(x).reshape(m, k // 128, 128)
+    amax = np.abs(tiles).max(-1, keepdims=True)
+    # e4m3 has a 3-bit mantissa: worst-case rounding error of a value
+    # scaled into [-448, 448] is half the ulp at 448, i.e. 16 -> amax/28
+    bound = np.repeat(amax / 26.0 + 1e-6, 128, axis=-1)
+    err = np.abs(np.asarray(back) - np.asarray(x)).reshape(tiles.shape)
+    assert (err <= bound).all()
+
+
+@given(st.lists(st.integers(0, 200), min_size=1, max_size=6))
+@settings(**SET)
+def test_padding_roundtrip_identity(sizes):
+    """unpad(pad(x)) == x for any ragged group structure."""
+    m = sum(sizes)
+    if m == 0:
+        return
+    k = 64
+    rng = np.random.default_rng(1)
+    a = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    sa = jnp.asarray(rng.standard_normal((m, 4)).astype(np.float32))
+    gs = jnp.asarray(sizes, jnp.int32)
+    a_p, s_p, psz, row_map = pb.pad_groups(a, sa, gs)
+    np.testing.assert_array_equal(np.asarray(pb.unpad_groups(a_p, row_map)),
+                                  np.asarray(a))
+    np.testing.assert_array_equal(np.asarray(pb.unpad_groups(s_p, row_map)),
+                                  np.asarray(sa))
+    # padded group sizes are block-aligned and >= originals
+    psz = np.asarray(psz)
+    assert (psz % 128 == 0).all() and (psz >= np.asarray(sizes)).all()
+
+
+@given(st.integers(2, 6), st.integers(1, 4))
+@settings(max_examples=10, deadline=None)
+def test_cross_entropy_uniform_logits(b, s):
+    from repro.models.layers import cross_entropy
+    v = 17
+    logits = jnp.zeros((b, s, v))
+    labels = jnp.zeros((b, s), jnp.int32)
+    loss = cross_entropy(logits, labels)
+    np.testing.assert_allclose(float(loss), np.log(v), rtol=1e-5)
+    # ignored labels contribute nothing
+    labels2 = jnp.full((b, s), -1, jnp.int32)
+    assert float(cross_entropy(logits, labels2)) == 0.0
