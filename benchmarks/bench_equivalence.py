@@ -11,9 +11,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import padding_baseline as pb
-from repro.kernels import ref
-from repro.kernels.grouped_gemm_kernel import gmm_pallas
+from repro.kernels import dispatch, ref
 from benchmarks.common import generate_group_sizes, time_fn
 
 
@@ -28,14 +26,15 @@ def run(report):
         b8, sb = jax.vmap(ref.quantize_blockwise_ref)(b)
         gs = jnp.asarray(sizes)
 
-        t = time_fn(lambda: gmm_pallas(a8, sa, b8, sb, gs,
-                                       out_dtype=jnp.bfloat16,
-                                       interpret=True), iters=2, warmup=1)
-        ours = gmm_pallas(a8, sa, b8, sb, gs, out_dtype=jnp.bfloat16,
-                          interpret=True)
-        base = pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs,
-                                          backend="pallas_interpret",
-                                          out_dtype=jnp.bfloat16)
+        t = time_fn(lambda: dispatch.grouped_gemm_fp8(
+            a8, sa, b8, sb, gs, backend="pallas_interpret",
+            out_dtype=jnp.bfloat16), iters=2, warmup=1)
+        ours = dispatch.grouped_gemm_fp8(a8, sa, b8, sb, gs,
+                                         backend="pallas_interpret",
+                                         out_dtype=jnp.bfloat16)
+        base = dispatch.grouped_gemm_fp8(a8, sa, b8, sb, gs,
+                                         backend="padded_baseline",
+                                         out_dtype=jnp.bfloat16)
         bitwise = bool(np.array_equal(np.asarray(ours, np.float32),
                                       np.asarray(base, np.float32)))
         report(f"equivalence/M{m}_G{g}", t * 1e6,

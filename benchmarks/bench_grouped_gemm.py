@@ -38,13 +38,14 @@ def _make_inputs(m, k, n, g, seed):
 
 @functools.partial(jax.jit, static_argnames=("padded_m",))
 def _baseline(a8, sa, b8, sb, gs, padded_m):
-    return pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs, backend="xla",
+    return pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs,
+                                      backend="xla_ragged",
                                       padded_m=padded_m)
 
 
 @jax.jit
 def _ours(a8, sa, b8, sb, gs):
-    return ops.grouped_gemm_fp8(a8, sa, b8, sb, gs, backend="xla")
+    return ops.grouped_gemm_fp8(a8, sa, b8, sb, gs, backend="xla_ragged")
 
 
 def run(report):

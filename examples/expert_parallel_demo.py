@@ -17,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.core.moe import (MoEConfig, init_moe_params, moe_apply,
                             shard_moe_params)
 
@@ -44,9 +45,9 @@ def main():
                            ep_size=ep, axis_name="model")
         return y.reshape(b, s, d)
 
-    fn = jax.jit(jax.shard_map(local_fn, mesh=mesh,
-                               in_specs=(pspecs, xspec), out_specs=xspec,
-                               check_vma=False))
+    fn = jax.jit(shard_map(local_fn, mesh=mesh,
+                           in_specs=(pspecs, xspec), out_specs=xspec,
+                           check_vma=False))
     y_ep = fn(params, x)
 
     err = float(jnp.max(jnp.abs(y_ep - y_ref)))

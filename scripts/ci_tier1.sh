@@ -1,0 +1,15 @@
+#!/usr/bin/env bash
+# Tier-1 regression gate: the full suite on CPU.
+#
+# Runs everywhere (no accelerator needed): the Pallas kernels execute in
+# interpret mode, TPU-only backends are refused via capability probes (and
+# their tests select CPU-runnable backends), and repro.compat absorbs JAX
+# API drift across the supported range (see README.md).
+#
+#   scripts/ci_tier1.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m pytest -x -q "$@"

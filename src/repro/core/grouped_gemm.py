@@ -26,7 +26,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.kernels import ops as kops
+from repro import compat
+from repro.kernels import dispatch
 from repro.core import quantization as q
 
 
@@ -35,20 +36,15 @@ from repro.core import quantization as q
 # ---------------------------------------------------------------------------
 
 def _ragged_dot(x, w, group_sizes, out_dtype):
-    return jax.lax.ragged_dot(
+    return compat.ragged_dot(
         x, w, group_sizes.astype(jnp.int32),
         preferred_element_type=jnp.float32).astype(out_dtype)
 
 
 def _ragged_wgrad(x, dy, group_sizes, num_groups):
-    """dw[g] = x_g^T @ dy_g  — ragged contracting dim."""
-    dn = jax.lax.RaggedDotDimensionNumbers(
-        dot_dimension_numbers=(((0,), (0,)), ((), ())),
-        lhs_ragged_dimensions=[0],
-        rhs_group_dimensions=[])
-    return jax.lax.ragged_dot_general(
-        x, dy, group_sizes.astype(jnp.int32), dn,
-        preferred_element_type=jnp.float32)
+    """dw[g] = x_g^T @ dy_g — ragged contracting dim.  compat picks
+    ``ragged_dot_general`` or the transpose-of-``ragged_dot`` fallback."""
+    return compat.ragged_wgrad(x, dy, group_sizes, num_groups=num_groups)
 
 
 # ---------------------------------------------------------------------------
@@ -64,8 +60,8 @@ def _grouped_linear_fp8(x, w, group_sizes, backend, out_dtype):
 def _fp8_fwd(x, w, group_sizes, backend, out_dtype):
     a8, sa = q.quantize_tilewise(x.astype(jnp.float32), backend=backend)
     b8, sb = q.quantize_blockwise_batched(w.astype(jnp.float32))
-    y = kops.grouped_gemm_fp8(a8, sa, b8, sb, group_sizes,
-                              backend=backend, out_dtype=out_dtype)
+    y = dispatch.grouped_gemm_fp8(a8, sa, b8, sb, group_sizes,
+                                  backend=backend, out_dtype=out_dtype)
     return y, (x, w, group_sizes)
 
 
@@ -76,8 +72,8 @@ def _fp8_bwd(backend, out_dtype, res, dy):
     d8, sd = q.quantize_tilewise(dy.astype(jnp.float32), backend=backend)
     wt = jnp.swapaxes(w, 1, 2)                       # [G, N, K]
     bt8, sbt = q.quantize_blockwise_batched(wt.astype(jnp.float32))
-    dx = kops.grouped_gemm_fp8(d8, sd, bt8, sbt, group_sizes,
-                               backend=backend, out_dtype=jnp.float32)
+    dx = dispatch.grouped_gemm_fp8(d8, sd, bt8, sbt, group_sizes,
+                                   backend=backend, out_dtype=jnp.float32)
     # wgrad: bf16 ragged contraction (highest-precision operand, DeepSeek
     # keeps wgrad un-quantized on the K axis)
     dw = _ragged_wgrad(x.astype(jnp.bfloat16), dy.astype(jnp.bfloat16),

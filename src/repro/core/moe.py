@@ -42,7 +42,9 @@ class MoEConfig:
     norm_topk_prob: bool = False
     capacity_factor: float = 2.0
     precision: str = "bf16"           # "bf16" | "fp8"
-    backend: Optional[str] = None     # kernel backend override
+    # grouped-GEMM backend (repro.kernels.dispatch registry name, e.g.
+    # "pallas" / "pallas_interpret" / "xla_ragged"; None == "auto")
+    backend: Optional[str] = None
     router_dtype: Any = jnp.float32
     # expert-compute dispatch:
     #   "ragged" — padding-free grouped GEMM (the paper; on TPU this is the

@@ -58,13 +58,19 @@ def unpad_groups(c_padded, row_map):
 
 
 def grouped_gemm_fp8_padded(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
-                            block_m: int = 128, backend=None,
+                            block_m: int = 128, block_n: int = 128,
+                            block_k: int = 128, backend=None,
                             out_dtype=jnp.bfloat16, padded_m=None):
-    """The full baseline pipeline: pad -> aligned grouped GEMM -> unpad."""
+    """The full baseline pipeline: pad -> aligned grouped GEMM -> unpad.
+
+    The aligned GEMM routes through the dispatch registry; ``backend``
+    names the *inner* backend (default: auto-resolved).
+    """
     a_p, s_p, psz, row_map = pad_groups(a_fp8, s_a, group_sizes,
                                         block_m=block_m, padded_m=padded_m)
     c_p = kops.grouped_gemm_fp8(a_p, s_p, b_fp8, s_b, psz,
                                 backend=backend, block_m=block_m,
+                                block_n=block_n, block_k=block_k,
                                 out_dtype=out_dtype)
     return unpad_groups(c_p, row_map)
 

@@ -1,0 +1,324 @@
+"""Unified grouped-GEMM backend dispatch registry.
+
+Every grouped-GEMM call site in the repo (``core/grouped_gemm.py``,
+``core/moe.py``, ``core/padding_baseline.py``, models, benchmarks,
+examples) routes through this module.  A backend is a named entry in the
+registry with
+
+  * an ``available()`` probe returning ``(ok, reason)`` — built on
+    :mod:`repro.compat` capability probes so selection is testable by
+    monkeypatching, and refusal is an explicit
+    :class:`BackendUnavailableError` instead of a deep ``AttributeError``;
+  * a ``run()`` implementing the quantized grouped GEMM
+    ``(a_fp8, s_a, b_fp8, s_b, group_sizes) -> [M, N]``.
+
+Built-in backends:
+
+  ===================  =====================================================
+  ``pallas``           compiled Pallas TPU kernel (requires a TPU)
+  ``pallas_interpret`` same kernel body, interpreted — runs anywhere (CPU
+                       regression gate; bit-identical to ``pallas``)
+  ``xla_ragged``       ``jax.lax.ragged_dot`` on bf16-dequantized operands
+                       (portable, GSPMD-partitionable; ~fp8-rounding-level
+                       deviation from the kernel)
+  ``xla_exact``        per-K-block f32 math with the kernel's accumulation
+                       order — cross-check oracle
+  ``padded_baseline``  the paper's baseline: pad every group to block_m,
+                       aligned grouped GEMM, unpad (through the Pallas
+                       kernel so equivalence checks are bitwise)
+  ===================  =====================================================
+
+``backend="auto"`` resolves to the first available of
+``pallas`` > ``xla_ragged`` > ``pallas_interpret``.  ``"xla"`` is kept as
+an alias of ``"xla_ragged"`` for pre-registry callers.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro import compat
+from repro.kernels import ref as _ref
+from repro.kernels.grouped_gemm_kernel import QUANT_BLOCK, gmm_pallas
+from repro.kernels.quant_kernel import quantize_tilewise_pallas
+
+# auto-resolution preference, best first
+AUTO_ORDER = ("pallas", "xla_ragged", "pallas_interpret")
+
+_ALIASES = {"xla": "xla_ragged"}
+
+
+class BackendUnavailableError(RuntimeError):
+    """Requested backend cannot run here; ``.reason`` says why."""
+
+    def __init__(self, name: str, reason: str):
+        super().__init__(f"grouped-GEMM backend {name!r} unavailable: "
+                         f"{reason}")
+        self.backend = name
+        self.reason = reason
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendSpec:
+    name: str
+    description: str
+    available: Callable[[], "tuple[bool, str]"]   # (ok, reason-if-not)
+    run: Callable[..., jax.Array]
+
+
+_REGISTRY: dict[str, BackendSpec] = {}
+_default_backend_override: Optional[str] = None
+
+
+def register_backend(name: str, *, description: str,
+                     available: Callable[[], "tuple[bool, str]"],
+                     run: Callable[..., jax.Array]) -> None:
+    """Later PRs (autotuned variants, new hardware paths) plug in here."""
+    _REGISTRY[name] = BackendSpec(name, description, available, run)
+
+
+def backend_names() -> "tuple[str, ...]":
+    return tuple(_REGISTRY)
+
+
+def availability(name: str) -> "tuple[bool, str]":
+    name = _ALIASES.get(name, name)
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"choose from {backend_names()}")
+    return _REGISTRY[name].available()
+
+
+def backend_matrix() -> "dict[str, dict[str, Any]]":
+    """{name: {available, reason, description}} — docs / CLI surface."""
+    out = {}
+    for name, spec in _REGISTRY.items():
+        ok, reason = spec.available()
+        out[name] = {"available": ok, "reason": reason,
+                     "description": spec.description}
+    return out
+
+
+def set_default_backend(name: Optional[str]) -> None:
+    """Override what ``backend=None`` / ``"auto"`` resolves to."""
+    global _default_backend_override
+    if name is not None:
+        name = _ALIASES.get(name, name)
+        if name not in _REGISTRY:
+            raise ValueError(f"unknown backend {name!r}; "
+                             f"choose from {backend_names()}")
+    _default_backend_override = name
+
+
+def default_backend() -> str:
+    return resolve_backend("auto")
+
+
+def resolve_backend(backend: Optional[str] = "auto") -> str:
+    """Map a requested backend (or ``"auto"``/``None``) to a concrete,
+    *available* registry entry, or raise with the probe's reason."""
+    if backend in (None, "auto"):
+        if _default_backend_override is not None:
+            backend = _default_backend_override
+        else:
+            for name in AUTO_ORDER:
+                ok, _ = _REGISTRY[name].available()
+                if ok:
+                    return name
+            raise BackendUnavailableError(
+                "auto", "no grouped-GEMM backend is available "
+                        f"(tried {AUTO_ORDER})")
+    backend = _ALIASES.get(backend, backend)
+    if backend not in _REGISTRY:
+        raise ValueError(f"unknown backend {backend!r}; "
+                         f"choose from {backend_names()}")
+    ok, reason = _REGISTRY[backend].available()
+    if not ok:
+        raise BackendUnavailableError(backend, reason)
+    return backend
+
+
+# ---------------------------------------------------------------------------
+# XLA implementations
+# ---------------------------------------------------------------------------
+
+def _dequant_a(a_fp8, s_a, dtype):
+    m, k = a_fp8.shape
+    scales = jnp.repeat(s_a, QUANT_BLOCK, axis=1)[:, :k]
+    return (a_fp8.astype(jnp.float32) * scales).astype(dtype)
+
+
+def _dequant_b(b_fp8, s_b, dtype):
+    g, k, n = b_fp8.shape
+    scales = jnp.repeat(jnp.repeat(s_b, QUANT_BLOCK, axis=1), QUANT_BLOCK,
+                        axis=2)[:, :k, :n]
+    return (b_fp8.astype(jnp.float32) * scales).astype(dtype)
+
+
+def gmm_xla(a_fp8, s_a, b_fp8, s_b, group_sizes, *, out_dtype=jnp.bfloat16,
+            compute_dtype=jnp.bfloat16):
+    """ragged_dot on dequantized operands (GSPMD-partitionable)."""
+    a = _dequant_a(a_fp8, s_a, compute_dtype)
+    b = _dequant_b(b_fp8, s_b, compute_dtype)
+    out = compat.ragged_dot(a, b, group_sizes.astype(jnp.int32),
+                            preferred_element_type=jnp.float32)
+    return out.astype(out_dtype)
+
+
+def gmm_xla_exact(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
+                  out_dtype=jnp.bfloat16):
+    """Per-K-block f32 math — bit-identical accumulation order to the
+    Pallas kernel (ragged_dot per K block, rescale, accumulate in f32)."""
+    m, k = a_fp8.shape
+    g, _, n = b_fp8.shape
+    kb = k // QUANT_BLOCK
+    gs = group_sizes.astype(jnp.int32)
+    acc = jnp.zeros((m, n), jnp.float32)
+    # row scale for token i and k-block j applied post-dot; column scale is
+    # constant within a 128-wide n block.
+    for j in range(kb):
+        aj = a_fp8[:, j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK].astype(jnp.float32)
+        bj = b_fp8[:, j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK, :].astype(jnp.float32)
+        part = compat.ragged_dot(aj, bj, gs,
+                                 preferred_element_type=jnp.float32)
+        # gather this token's group column-scales: expand s_b rows per group
+        seg = jnp.repeat(jnp.arange(g), gs, total_repeat_length=m)
+        col = jnp.repeat(s_b[:, j, :], QUANT_BLOCK, axis=1)[:, :n]   # (g, n)
+        acc = acc + part * s_a[:, j][:, None] * col[seg]
+    return acc.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Built-in backend registrations
+# ---------------------------------------------------------------------------
+
+def _avail_always():
+    return True, ""
+
+
+def _avail_tpu():
+    if compat.has_tpu():
+        return True, ""
+    return False, ("requires a TPU (jax.default_backend() == 'tpu'); "
+                   "use 'pallas_interpret' for CPU-verifiable runs")
+
+
+def _avail_ragged_dot():
+    if compat.has_ragged_dot():
+        return True, ""
+    return False, (f"jax {jax.__version__} has no jax.lax.ragged_dot")
+
+
+def _run_pallas(a8, sa, b8, sb, gs, *, num_groups, block_m, block_n,
+                block_k, out_dtype, interpret):
+    return gmm_pallas(a8, sa, b8, sb, gs, num_groups=num_groups,
+                      block_m=block_m, block_n=block_n, block_k=block_k,
+                      out_dtype=out_dtype, interpret=interpret)
+
+
+def _run_xla_ragged(a8, sa, b8, sb, gs, *, out_dtype, **_):
+    return gmm_xla(a8, sa, b8, sb, gs, out_dtype=out_dtype)
+
+
+def _run_xla_exact(a8, sa, b8, sb, gs, *, out_dtype, **_):
+    return gmm_xla_exact(a8, sa, b8, sb, gs, out_dtype=out_dtype)
+
+
+def _run_padded_baseline(a8, sa, b8, sb, gs, *, block_m, block_n, block_k,
+                         out_dtype, **_):
+    # deferred import: padding_baseline routes its aligned GEMM back
+    # through this registry
+    from repro.core import padding_baseline as pb
+    inner = "pallas" if compat.has_tpu() else "pallas_interpret"
+    return pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs, block_m=block_m,
+                                      block_n=block_n, block_k=block_k,
+                                      backend=inner, out_dtype=out_dtype)
+
+
+register_backend(
+    "pallas",
+    description="compiled Pallas TPU kernel (padding-free, paper §2)",
+    available=_avail_tpu,
+    run=lambda *a, **kw: _run_pallas(*a, interpret=False, **kw))
+register_backend(
+    "pallas_interpret",
+    description="Pallas kernel in interpret mode — CPU-verifiable, "
+                "bit-identical to 'pallas'",
+    available=_avail_always,
+    run=lambda *a, **kw: _run_pallas(*a, interpret=True, **kw))
+register_backend(
+    "xla_ragged",
+    description="jax.lax.ragged_dot on bf16-dequantized operands "
+                "(portable / GSPMD)",
+    available=_avail_ragged_dot,
+    run=_run_xla_ragged)
+register_backend(
+    "xla_exact",
+    description="per-K-block f32 oracle with the kernel's accumulation "
+                "order",
+    available=_avail_ragged_dot,
+    run=_run_xla_exact)
+register_backend(
+    "padded_baseline",
+    description="the paper's baseline: pad groups to block_m, aligned "
+                "grouped GEMM, unpad",
+    available=_avail_always,
+    run=_run_padded_baseline)
+
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
+
+def grouped_gemm_fp8(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
+                     backend: Optional[str] = "auto",
+                     num_groups: Optional[int] = None,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128, out_dtype=jnp.bfloat16):
+    """Quantized grouped GEMM through the registry (the low-level entry —
+    operands already fp8 with DeepSeek-style tile/block scales)."""
+    name = resolve_backend(backend)
+    return _REGISTRY[name].run(
+        a_fp8, s_a, b_fp8, s_b, group_sizes, num_groups=num_groups,
+        block_m=block_m, block_n=block_n, block_k=block_k,
+        out_dtype=out_dtype)
+
+
+def grouped_gemm(x, w, group_sizes, *, backend: Optional[str] = "auto",
+                 out_dtype=None, block_m: int = 128, block_n: int = 128,
+                 block_k: int = 128):
+    """Unified high-level grouped GEMM: ``y[rows of g] = x[rows of g] @
+    w[g]`` with the paper's fp8 recipe (1x128 activation tiles, 128x128
+    weight blocks) applied before dispatch.
+
+    x: [M, K] float; w: [G, K, N] float; group_sizes: [G] int.
+    Not differentiable — training goes through
+    :func:`repro.core.grouped_gemm.grouped_linear`, which wraps the same
+    registry in a custom VJP.
+    """
+    out_dtype = out_dtype or x.dtype
+    a8, sa = _ref.quantize_tilewise_ref(x.astype(jnp.float32))
+    b8, sb = jax.vmap(_ref.quantize_blockwise_ref)(w.astype(jnp.float32))
+    return grouped_gemm_fp8(a8, sa, b8, sb, group_sizes, backend=backend,
+                            num_groups=w.shape[0], block_m=block_m,
+                            block_n=block_n, block_k=block_k,
+                            out_dtype=out_dtype)
+
+
+def quantize_tilewise(x, *, backend: Optional[str] = None,
+                      block_m: int = 256):
+    backend = resolve_backend(backend)
+    if backend == "pallas":
+        return quantize_tilewise_pallas(x, block_m=block_m, interpret=False)
+    if backend == "pallas_interpret":
+        return quantize_tilewise_pallas(x, block_m=block_m, interpret=True)
+    return _ref.quantize_tilewise_ref(x)
+
+
+def quantize_blockwise(w):
+    """128x128 weight quantization (XLA everywhere — weights are quantized
+    once per step outside the hot loop)."""
+    return _ref.quantize_blockwise_ref(w)

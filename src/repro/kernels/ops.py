@@ -1,139 +1,27 @@
-"""Backend dispatch for the grouped-GEMM and quantization ops.
+"""Back-compat surface over :mod:`repro.kernels.dispatch`.
 
-Backends:
-  * ``pallas``            — the TPU kernel (compiled; requires TPU)
-  * ``pallas_interpret``  — same kernel body, interpreted on CPU (tests)
-  * ``xla``               — ``jax.lax.ragged_dot`` on bf16-dequantized
-                            operands.  Portable: this is what the multi-pod
-                            dry-run lowers on CPU hosts, and what GSPMD
-                            partitions.  On a real TPU fleet the ``pallas``
-                            backend is selected by the launcher.
-  * ``xla_exact``         — f32 per-K-block math identical to the kernel's;
-                            used as a cross-check oracle in tests.
-
-The default is chosen per-platform by :func:`default_backend`.
+Historically this module owned the backend switch; the unified registry in
+``dispatch.py`` replaced it.  Pre-registry callers (and tests) that import
+``ops.grouped_gemm_fp8`` / ``ops.quantize_tilewise`` keep working — every
+call routes through the registry, including the ``"xla"`` alias for the
+``"xla_ragged"`` backend.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any
-
-import jax
-import jax.numpy as jnp
-
-from repro.kernels import ref as _ref
-from repro.kernels.grouped_gemm_kernel import gmm_pallas
-from repro.kernels.quant_kernel import quantize_tilewise_pallas
-
-QUANT_BLOCK = 128
-
-_BACKENDS = ("pallas", "pallas_interpret", "xla", "xla_exact")
-_default_backend_override: str | None = None
-
-
-def set_default_backend(name: str | None) -> None:
-    global _default_backend_override
-    if name is not None and name not in _BACKENDS:
-        raise ValueError(f"unknown backend {name!r}; choose from {_BACKENDS}")
-    _default_backend_override = name
-
-
-def default_backend() -> str:
-    if _default_backend_override is not None:
-        return _default_backend_override
-    platform = jax.default_backend()
-    return "pallas" if platform == "tpu" else "xla"
-
-
-# ---------------------------------------------------------------------------
-# XLA fast paths
-# ---------------------------------------------------------------------------
-
-def _dequant_a(a_fp8, s_a, dtype):
-    m, k = a_fp8.shape
-    scales = jnp.repeat(s_a, QUANT_BLOCK, axis=1)[:, :k]
-    return (a_fp8.astype(jnp.float32) * scales).astype(dtype)
-
-
-def _dequant_b(b_fp8, s_b, dtype):
-    g, k, n = b_fp8.shape
-    scales = jnp.repeat(jnp.repeat(s_b, QUANT_BLOCK, axis=1), QUANT_BLOCK,
-                        axis=2)[:, :k, :n]
-    return (b_fp8.astype(jnp.float32) * scales).astype(dtype)
-
-
-def gmm_xla(a_fp8, s_a, b_fp8, s_b, group_sizes, *, out_dtype=jnp.bfloat16,
-            compute_dtype=jnp.bfloat16):
-    """ragged_dot on dequantized operands (GSPMD-partitionable)."""
-    a = _dequant_a(a_fp8, s_a, compute_dtype)
-    b = _dequant_b(b_fp8, s_b, compute_dtype)
-    out = jax.lax.ragged_dot(a, b, group_sizes.astype(jnp.int32),
-                             preferred_element_type=jnp.float32)
-    return out.astype(out_dtype)
-
-
-def gmm_xla_exact(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
-                  out_dtype=jnp.bfloat16):
-    """Per-K-block f32 math — bit-identical accumulation order to the
-    Pallas kernel (ragged_dot per K block, rescale, accumulate in f32)."""
-    m, k = a_fp8.shape
-    g, _, n = b_fp8.shape
-    kb = k // QUANT_BLOCK
-    gs = group_sizes.astype(jnp.int32)
-    acc = jnp.zeros((m, n), jnp.float32)
-    # row scale for token i and k-block j applied post-dot; column scale is
-    # constant within a 128-wide n block.
-    for j in range(kb):
-        aj = a_fp8[:, j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK].astype(jnp.float32)
-        bj = b_fp8[:, j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK, :].astype(jnp.float32)
-        part = jax.lax.ragged_dot(aj, bj, gs,
-                                  preferred_element_type=jnp.float32)
-        # gather this token's group column-scales: expand s_b rows per group
-        seg = jnp.repeat(jnp.arange(g), gs, total_repeat_length=m)
-        col = jnp.repeat(s_b[:, j, :], QUANT_BLOCK, axis=1)[:, :n]   # (g, n)
-        acc = acc + part * s_a[:, j][:, None] * col[seg]
-    return acc.astype(out_dtype)
-
-
-# ---------------------------------------------------------------------------
-# Public dispatch
-# ---------------------------------------------------------------------------
-
-def grouped_gemm_fp8(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
-                     backend: str | None = None,
-                     num_groups: int | None = None,
-                     block_m: int = 128, block_n: int = 128,
-                     block_k: int = 128, out_dtype=jnp.bfloat16):
-    backend = backend or default_backend()
-    if backend == "pallas":
-        return gmm_pallas(a_fp8, s_a, b_fp8, s_b, group_sizes,
-                          num_groups=num_groups, block_m=block_m,
-                          block_n=block_n, block_k=block_k,
-                          out_dtype=out_dtype, interpret=False)
-    if backend == "pallas_interpret":
-        return gmm_pallas(a_fp8, s_a, b_fp8, s_b, group_sizes,
-                          num_groups=num_groups, block_m=block_m,
-                          block_n=block_n, block_k=block_k,
-                          out_dtype=out_dtype, interpret=True)
-    if backend == "xla":
-        return gmm_xla(a_fp8, s_a, b_fp8, s_b, group_sizes,
-                       out_dtype=out_dtype)
-    if backend == "xla_exact":
-        return gmm_xla_exact(a_fp8, s_a, b_fp8, s_b, group_sizes,
-                             out_dtype=out_dtype)
-    raise ValueError(f"unknown backend {backend!r}")
-
-
-def quantize_tilewise(x, *, backend: str | None = None, block_m: int = 256):
-    backend = backend or default_backend()
-    if backend == "pallas":
-        return quantize_tilewise_pallas(x, block_m=block_m, interpret=False)
-    if backend == "pallas_interpret":
-        return quantize_tilewise_pallas(x, block_m=block_m, interpret=True)
-    return _ref.quantize_tilewise_ref(x)
-
-
-def quantize_blockwise(w):
-    """128x128 weight quantization (XLA everywhere — weights are quantized
-    once per step outside the hot loop)."""
-    return _ref.quantize_blockwise_ref(w)
+from repro.kernels.dispatch import (        # noqa: F401  (re-exports)
+    QUANT_BLOCK,
+    BackendUnavailableError,
+    availability,
+    backend_matrix,
+    backend_names,
+    default_backend,
+    gmm_xla,
+    gmm_xla_exact,
+    grouped_gemm,
+    grouped_gemm_fp8,
+    quantize_blockwise,
+    quantize_tilewise,
+    register_backend,
+    resolve_backend,
+    set_default_backend,
+)

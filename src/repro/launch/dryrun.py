@@ -24,6 +24,8 @@ import traceback
 
 import jax
 import jax.numpy as jnp
+
+from repro import compat
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
@@ -212,7 +214,7 @@ def lower_cell(arch: str, shape_name: str, *, multi_pod: bool,
     t_compile = time.time() - t0
 
     mem = compiled.memory_analysis()
-    cost = compiled.cost_analysis()
+    cost = compat.cost_analysis(compiled)
     hlo_text = compiled.as_text()
     per_type, wire = collective_bytes(hlo_text)
 

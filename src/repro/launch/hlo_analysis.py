@@ -129,8 +129,10 @@ def parse_module(text: str):
 
 def _dot_flops(op: Op, comp: Computation) -> float:
     dims, n_out = _shape_elems(op.result)
-    # contraction size from lhs operand shape + lhs_contracting_dims
-    mo = re.match(r"\s*(%[\w\.\-]+)", op.rest)
+    # contraction size from lhs operand shape + lhs_contracting_dims.
+    # Operand lists are typed on some XLA versions ("dot(f32[..] %a, ..)")
+    # and bare on others ("dot(%a, ..)") — take the first %ref either way.
+    mo = re.search(r"(%[\w\.\-]+)", op.rest)
     k = 0
     mc = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", op.line)
     if mo and mc and mo.group(1) in comp.shapes:

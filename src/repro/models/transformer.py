@@ -16,7 +16,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import shard_map
 
 from repro.configs.base import ModelConfig
 from repro.core.moe import (MoEConfig, init_moe_params, moe_apply,

@@ -48,9 +48,10 @@ def test_moe_ep_matches_single_device():
             y, _ = moe_apply(p, xl.reshape(b*s, d), cfg, ep_rank=rank,
                              ep_size=ep, axis_name="model")
             return y.reshape(b, s, d)
-        fn = jax.jit(jax.shard_map(local_fn, mesh=mesh,
-                                   in_specs=(pspecs, xspec),
-                                   out_specs=xspec, check_vma=False))
+        from repro.compat import shard_map
+        fn = jax.jit(shard_map(local_fn, mesh=mesh,
+                               in_specs=(pspecs, xspec),
+                               out_specs=xspec, check_vma=False))
         y = fn(params, x)
         err = float(jnp.max(jnp.abs(y - y_ref)))
         assert err < 1e-3, err
@@ -79,9 +80,10 @@ def test_moe_tp_fallback_matches_single_device():
             y, _ = moe_apply(p, xl.reshape(b*s, d), cfg, ep_rank=0,
                              ep_size=1, axis_name="model")
             return y.reshape(b, s, d)
-        fn = jax.jit(jax.shard_map(local_fn, mesh=mesh,
-                                   in_specs=(pspecs, xspec),
-                                   out_specs=xspec, check_vma=False))
+        from repro.compat import shard_map
+        fn = jax.jit(shard_map(local_fn, mesh=mesh,
+                               in_specs=(pspecs, xspec),
+                               out_specs=xspec, check_vma=False))
         y = fn(params, x)
         err = float(jnp.max(jnp.abs(y.reshape(-1, 128) - y_ref)))
         assert err < 1e-3, err
