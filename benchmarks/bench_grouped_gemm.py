@@ -7,12 +7,22 @@ pass's memory traffic + the padded tiles' extra work.  Alongside wall time
 we report the *derived* quantities that transfer to any backend: padded
 rows, extra bytes moved, extra M-tiles computed.
 
+Tile shapes come from the TilePlan autotuner (``repro.kernels.plan``):
+each case selects a ``KernelConfig`` from the block-shape pool (cached in
+the JSON autotune cache) and the report names the chosen config.
+
 Dims are scaled down from the paper's sweep (M 8k-64k, N/K 3-8k on H800)
 to CPU-feasible sizes; the padding-overhead *ratios* are preserved because
 they depend only on (M/G)/block_m.
+
+Standalone usage (the CI smoke gate):
+
+  PYTHONPATH=src python -m benchmarks.bench_grouped_gemm --smoke \
+      --backend pallas_interpret
 """
 from __future__ import annotations
 
+import argparse
 import functools
 
 import jax
@@ -20,10 +30,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import padding_baseline as pb
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ref
+from repro.kernels import plan as plan_mod
 from benchmarks.common import generate_group_sizes, time_fn
-
-BLOCK_M = 128
 
 
 def _make_inputs(m, k, n, g, seed):
@@ -36,35 +45,88 @@ def _make_inputs(m, k, n, g, seed):
     return a8, sa, b8, sb, jnp.asarray(sizes), sizes
 
 
-@functools.partial(jax.jit, static_argnames=("padded_m",))
-def _baseline(a8, sa, b8, sb, gs, padded_m):
-    return pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs,
-                                      backend="xla_ragged",
+@functools.partial(jax.jit, static_argnames=("padded_m", "config"))
+def _baseline(a8, sa, b8, sb, gs, padded_m, config):
+    return pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs, config=config,
                                       padded_m=padded_m)
 
 
-@jax.jit
-def _ours(a8, sa, b8, sb, gs):
-    return ops.grouped_gemm_fp8(a8, sa, b8, sb, gs, backend="xla_ragged")
+@functools.partial(jax.jit, static_argnames=("config",))
+def _ours(a8, sa, b8, sb, gs, config):
+    return dispatch.grouped_gemm_fp8(a8, sa, b8, sb, gs, config=config)
 
 
-def run(report):
-    cases = []
-    for m in (2048, 8192):
-        for g in (4, 8, 16, 32):
-            for nk in (256, 512):
-                cases.append((m, nk, nk, g))
+def _select_config(m, k, n, g, backend, *, measure):
+    """Tile-shape selection for one case: an installed pin
+    (``benchmarks.run --pin-config`` / ``plan.set_default_config``) wins;
+    tile-free backends keep the paper's fixed per-device geometry (their
+    GEMM ignores tiles — only the *baseline's* padding math would drift,
+    breaking comparability of the pad-overhead ratios); otherwise pool
+    selection through the autotuner (persists to the JSON cache; a second
+    run reloads the same choice without re-measuring)."""
+    pinned = plan_mod.pinned_default()
+    if pinned is not None:
+        return pinned if pinned.backend is not None or backend is None \
+            else pinned.with_(backend=backend)
+    if dispatch.backend_ignores_tiles(backend):
+        # the paper's fixed 128-row geometry (like fig2b), NOT the
+        # per-device default — keeps pad-overhead ratios comparable
+        return plan_mod.KernelConfig().with_(backend=backend)
+    return plan_mod.autotune(m, k, n, g, backend=backend, measure=measure)
+
+
+def bench_cases(report, cases, *, backend=None, measure_autotune=True):
     for m, n, k, g in cases:
+        cfg = _select_config(m, k, n, g, backend, measure=measure_autotune)
+        block_m = cfg.block_m
         a8, sa, b8, sb, gs, sizes = _make_inputs(m, k, n, g, seed=m + g + n)
-        padded_m = int(np.ceil((m + g * (BLOCK_M - 1)) / BLOCK_M) * BLOCK_M)
-        t_base = time_fn(_baseline, a8, sa, b8, sb, gs, padded_m)
-        t_ours = time_fn(_ours, a8, sa, b8, sb, gs)
+        padded_m = int(np.ceil((m + g * (block_m - 1)) / block_m) * block_m)
+        t_base = time_fn(_baseline, a8, sa, b8, sb, gs, padded_m, cfg)
+        t_ours = time_fn(_ours, a8, sa, b8, sb, gs, cfg)
         accel = (t_base - t_ours) / t_base * 100.0
-        ov = pb.padding_overhead_bytes(sizes, k, sa.shape[1], BLOCK_M)
-        pad_tiles = int(np.sum(np.ceil(sizes / BLOCK_M)))
-        min_tiles = int(np.ceil(m / BLOCK_M))
+        ov = pb.padding_overhead_bytes(sizes, k, sa.shape[1], block_m)
+        pad_tiles = int(np.sum(np.ceil(sizes / block_m)))
+        min_tiles = int(np.ceil(m / block_m))
         report(f"fig2a/M{m}_N{n}_K{k}_G{g}",
                t_ours * 1e6,
+               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"@{cfg.backend or 'auto'};"
                f"accel_pct={accel:.1f};pad_rows={ov['pad_rows']};"
                f"pad_extra_bytes={ov['a_bytes'] + ov['sa_bytes']};"
                f"tiles={pad_tiles}vs{min_tiles + g - 1}")
+
+
+CASES = [(m, nk, nk, g) for m in (2048, 8192) for g in (4, 8, 16, 32)
+         for nk in (256, 512)]
+SMOKE_CASES = [(256, 128, 128, 4)]   # tiny: interpret-mode friendly
+
+
+def run(report):
+    bench_cases(report, CASES, backend="xla_ragged")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="one tiny shape (CI gate for the bench entry "
+                         "points + the autotune cache round trip)")
+    ap.add_argument("--backend", default=None,
+                    help="dispatch backend (default: auto-resolved)")
+    args = ap.parse_args()
+
+    print("name,us_per_call,derived")
+
+    def report(name, us, derived):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+
+    if args.smoke:
+        # measured pool selection even on plan-consuming backends — the
+        # shape is tiny, and it exercises selection + cache persistence
+        bench_cases(report, SMOKE_CASES, backend=args.backend,
+                    measure_autotune=True)
+    else:
+        bench_cases(report, CASES, backend=args.backend)
+
+
+if __name__ == "__main__":
+    main()

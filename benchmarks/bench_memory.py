@@ -11,11 +11,15 @@ from __future__ import annotations
 import numpy as np
 
 from benchmarks.common import generate_group_sizes
-
-BLOCK_M = 128
+from repro.kernels import plan as plan_mod
 
 
 def run(report):
+    # honours `benchmarks.run --pin-config`; otherwise the paper's fixed
+    # 128-row round-up (NOT the per-device default — fig2b numbers must
+    # stay comparable to the paper's geometry on any host)
+    pinned = plan_mod.pinned_default()
+    block_m = (pinned or plan_mod.KernelConfig()).block_m
     for m in (8192, 16384, 32768, 65536):
         for g in (4, 8, 16, 32):
             savings = []
@@ -23,7 +27,7 @@ def run(report):
                 sizes = generate_group_sizes(m, g, seed)
                 k, n = 7168, 4096
                 kb = (k + 127) // 128
-                padded = np.ceil(sizes / BLOCK_M).astype(np.int64) * BLOCK_M
+                padded = np.ceil(sizes / block_m).astype(np.int64) * block_m
                 mp = int(padded.sum())
                 unpadded_b = m * k + m * kb * 4 + m * n * 2
                 padded_b = mp * k + mp * kb * 4 + mp * n * 2

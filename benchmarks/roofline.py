@@ -14,8 +14,11 @@ import os
 
 from repro.configs import ARCHS
 from repro.configs.base import SHAPES, cell_is_runnable
+from repro.kernels.plan import DEVICE_SPECS
 
-HBM_PER_CHIP = 16e9  # v5e
+# single source of device numbers: the TilePlan autotuner's cost model
+# (repro.kernels.plan.DEVICE_SPECS) and this table must agree
+HBM_PER_CHIP = DEVICE_SPECS["tpu v5e"].hbm_bytes
 
 
 def load(dirname):

@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2a,...]
+      [--pin-config BMxBNxBK] [--backend NAME]
+
+``--pin-config`` installs a pinned ``KernelConfig`` as the process-wide
+default (every suite's GEMMs resolve to it); without it, suites that tune
+go through the TilePlan autotuner pool.
 """
 from __future__ import annotations
 
@@ -13,7 +18,22 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma list: fig2a,fig2b,equivalence,moe_layer")
+    ap.add_argument("--pin-config", default=None, metavar="BMxBNxBK",
+                    help="pin tile shapes, e.g. 256x128x128 (skips the "
+                         "autotuner pool)")
+    ap.add_argument("--backend", default=None,
+                    help="dispatch backend pin (alone it implies the "
+                         "default tile shapes)")
     args = ap.parse_args()
+
+    from repro.kernels import plan as plan_mod
+    if args.pin_config:
+        bm, bn, bk = (int(v) for v in args.pin_config.lower().split("x"))
+        plan_mod.set_default_config(plan_mod.KernelConfig(
+            block_m=bm, block_n=bn, block_k=bk, backend=args.backend))
+    elif args.backend:
+        plan_mod.set_default_config(
+            plan_mod.KernelConfig(backend=args.backend))
 
     from benchmarks import (bench_equivalence, bench_grouped_gemm,
                             bench_memory, bench_moe_layer)

@@ -13,3 +13,10 @@ cd "$(dirname "$0")/.."
 export JAX_PLATFORMS="${JAX_PLATFORMS:-cpu}"
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m pytest -x -q "$@"
+
+# Bench entry points must not rot: one tiny interpret-mode shape through
+# bench_grouped_gemm's CLI (exercises the autotuner pool selection + the
+# JSON cache write path; cache goes to a throwaway location).
+REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_grouped_gemm --smoke --backend pallas_interpret

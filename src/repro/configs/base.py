@@ -6,6 +6,8 @@ from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
 
+from repro.kernels.plan import KernelConfig
+
 
 @dataclasses.dataclass(frozen=True)
 class MoESpec:
@@ -53,6 +55,10 @@ class ModelConfig:
     dtype: Any = jnp.bfloat16
     precision: str = "bf16"            # "bf16" | "fp8" for grouped/linear GEMMs
     gemm_backend: Optional[str] = None
+    # tile shapes for every grouped/linear GEMM (repro.kernels.plan) —
+    # None resolves to the installed/per-device default; pin one (e.g. an
+    # autotuned selection) to make tile shapes part of the run config
+    kernel_config: Optional[KernelConfig] = None
     remat: bool = True
     attn_chunk: int = 512
     scan_layers: bool = True

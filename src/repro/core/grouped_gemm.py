@@ -28,6 +28,8 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.kernels import dispatch
+from repro.kernels.plan import KernelConfig, TilePlan, make_tile_plan, \
+    resolve_config
 from repro.core import quantization as q
 
 
@@ -51,34 +53,45 @@ def _ragged_wgrad(x, dy, group_sizes, num_groups):
 # fp8 path with custom VJP
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
-def _grouped_linear_fp8(x, w, group_sizes, backend, out_dtype):
-    y, _ = _fp8_fwd(x, w, group_sizes, backend, out_dtype)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _grouped_linear_fp8(x, w, group_sizes, plan, config):
+    y, _ = _fp8_fwd(x, w, group_sizes, plan, config)
     return y
 
 
-def _fp8_fwd(x, w, group_sizes, backend, out_dtype):
-    a8, sa = q.quantize_tilewise(x.astype(jnp.float32), backend=backend)
+def _fp8_fwd(x, w, group_sizes, plan, config):
+    a8, sa = q.quantize_tilewise(x.astype(jnp.float32),
+                                 backend=config.backend)
     b8, sb = q.quantize_blockwise_batched(w.astype(jnp.float32))
+    # plan-once/run-many: one TilePlan per group_sizes serves this forward
+    # GEMM *and* the backward dgrad (the schedule depends only on M-side
+    # raggedness, not on which weight it multiplies)
+    if plan is None and dispatch.backend_uses_plan(config.backend):
+        plan = make_tile_plan(group_sizes, x.shape[0],
+                              block_m=config.block_m,
+                              num_groups=w.shape[0])
     y = dispatch.grouped_gemm_fp8(a8, sa, b8, sb, group_sizes,
-                                  backend=backend, out_dtype=out_dtype)
-    return y, (x, w, group_sizes)
+                                  config=config, plan=plan)
+    return y, (x, w, group_sizes, plan)
 
 
-def _fp8_bwd(backend, out_dtype, res, dy):
-    x, w, group_sizes = res
+def _fp8_bwd(config, res, dy):
+    x, w, group_sizes, plan = res
     num_groups = w.shape[0]
-    # dgrad: dx = dy @ w^T  (fp8 through the padding-free kernel)
-    d8, sd = q.quantize_tilewise(dy.astype(jnp.float32), backend=backend)
+    # dgrad: dx = dy @ w^T  (fp8 through the padding-free kernel, reusing
+    # the forward's TilePlan — same group_sizes, same schedule)
+    d8, sd = q.quantize_tilewise(dy.astype(jnp.float32),
+                                 backend=config.backend)
     wt = jnp.swapaxes(w, 1, 2)                       # [G, N, K]
     bt8, sbt = q.quantize_blockwise_batched(wt.astype(jnp.float32))
     dx = dispatch.grouped_gemm_fp8(d8, sd, bt8, sbt, group_sizes,
-                                   backend=backend, out_dtype=jnp.float32)
+                                   config=config.with_(out_dtype=jnp.float32),
+                                   plan=plan)
     # wgrad: bf16 ragged contraction (highest-precision operand, DeepSeek
     # keeps wgrad un-quantized on the K axis)
     dw = _ragged_wgrad(x.astype(jnp.bfloat16), dy.astype(jnp.bfloat16),
                        group_sizes, num_groups)
-    return dx.astype(x.dtype), dw.astype(w.dtype), None
+    return dx.astype(x.dtype), dw.astype(w.dtype), None, None
 
 
 _grouped_linear_fp8.defvjp(_fp8_fwd, _fp8_bwd)
@@ -115,26 +128,43 @@ _grouped_linear_bf16.defvjp(_bf16_fwd, _bf16_bwd)
 
 def grouped_linear(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
                    precision: str = "bf16", backend: str | None = None,
-                   out_dtype: Any = None) -> jax.Array:
+                   out_dtype: Any = None,
+                   config: KernelConfig | None = None,
+                   plan: TilePlan | None = None) -> jax.Array:
     """Padding-free grouped linear: rows of ``x`` are grouped by
     ``group_sizes`` (concatenated, ragged); group g matmuls ``w[g]``.
 
     x: [M, K]; w: [G, K, N]; group_sizes: [G] (sum <= M; rows beyond the
     last group are left undefined — callers mask them).
+
+    ``config`` carries tile shapes/backend (:class:`KernelConfig`);
+    ``plan`` is an optional precomputed :class:`TilePlan` — pass the same
+    plan to every grouped_linear sharing ``group_sizes`` (e.g. the
+    gate/up/down GEMMs of one MoE application) so the schedule is built
+    once per routing decision.  Without one, the fp8 path still builds a
+    single plan per call and reuses it for the backward dgrad.
     """
-    out_dtype = out_dtype or x.dtype
     if precision == "fp8":
-        return _grouped_linear_fp8(x, w, group_sizes, backend, out_dtype)
+        # explicit out_dtype > config's pinned out_dtype > x.dtype
+        cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
+        if cfg.out_dtype is None:
+            cfg = cfg.with_(out_dtype=x.dtype)
+        return _grouped_linear_fp8(x, w, group_sizes, plan, cfg)
     if precision == "bf16":
-        return _grouped_linear_bf16(x, w, group_sizes, out_dtype)
+        # the bf16 path ignores tile shapes (ragged_dot), but a pinned
+        # config out_dtype applies to every consumer, this one included
+        cfg = resolve_config(config, out_dtype=out_dtype)
+        return _grouped_linear_bf16(x, w, group_sizes,
+                                    cfg.out_dtype or x.dtype)
     raise ValueError(f"unknown precision {precision!r}")
 
 
 def dense_linear_fp8(x: jax.Array, w: jax.Array, *,
-                     backend: str | None = None) -> jax.Array:
+                     backend: str | None = None,
+                     config: KernelConfig | None = None) -> jax.Array:
     """The G=1 degenerate case — DeepSeek-style fp8 linear for dense layers
     (optional beyond-paper feature for the dense architectures)."""
     m = x.shape[0]
     gs = jnp.array([m], jnp.int32)
     return grouped_linear(x, w[None], gs, precision="fp8",
-                          backend=backend)
+                          backend=backend, config=config)

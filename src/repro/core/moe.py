@@ -30,6 +30,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grouped_gemm import grouped_linear
+from repro.kernels import dispatch
+from repro.kernels.plan import KernelConfig, make_tile_plan, resolve_config
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +47,9 @@ class MoEConfig:
     # grouped-GEMM backend (repro.kernels.dispatch registry name, e.g.
     # "pallas" / "pallas_interpret" / "xla_ragged"; None == "auto")
     backend: Optional[str] = None
+    # tile shapes etc. for the expert GEMMs; None -> installed/per-device
+    # default (``backend`` above overrides the config's backend field)
+    kernel_config: Optional[KernelConfig] = None
     router_dtype: Any = jnp.float32
     # expert-compute dispatch:
     #   "ragged" — padding-free grouped GEMM (the paper; on TPU this is the
@@ -87,11 +92,16 @@ def init_moe_params(key, cfg: MoEConfig, dtype=jnp.float32):
     return p
 
 
-def _capacity(num_slots: int, ep_size: int, cf: float) -> int:
+def _capacity(num_slots: int, ep_size: int, cf: float,
+              align: int = 128) -> int:
+    """Static EP capacity, rounded up to the active tile height so the
+    packed buffer stays an integral number of kernel M-tiles (``align`` =
+    ``KernelConfig.block_m``; non-default tile shapes would otherwise
+    silently mis-bucket capacity)."""
     if ep_size == 1:
         return num_slots
-    c = (int(num_slots / ep_size * cf) + 127) // 128 * 128
-    return min(num_slots, max(c, 128))
+    c = -(-int(num_slots / ep_size * cf) // align) * align
+    return min(num_slots, max(c, align))
 
 
 def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
@@ -107,6 +117,7 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
     e, k = cfg.num_experts, cfg.top_k
     e_loc = e // ep_size
     lo = ep_rank * e_loc
+    kcfg = resolve_config(cfg.kernel_config, backend=cfg.backend)
 
     # ---- routing (replicated) ------------------------------------------
     logits = x.astype(cfg.router_dtype) @ params["router"].astype(
@@ -118,7 +129,8 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
 
     # ---- pack rows routed to local experts into the capacity buffer ----
     num_slots = t * k
-    cap = _capacity(num_slots, ep_size, cfg.capacity_factor)
+    cap = _capacity(num_slots, ep_size, cfg.capacity_factor,
+                    align=kcfg.block_m)
     flat_ids = ids.reshape(-1)                              # [T*k]
     local_id = flat_ids - lo
     is_local = (local_id >= 0) & (local_id < e_loc)
@@ -160,8 +172,18 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
                       ye[gid, jnp.minimum(pos, cap_e - 1)], 0.0)
     else:
         # ---- padding-free ragged expert FFN (the paper's kernel) -------
+        # Plan once per routing decision: the gate/up/down GEMMs (and the
+        # backward dgrads inside the custom VJP) all share this routing's
+        # group_sizes, so one TilePlan serves all of them — the paper's
+        # configure-once/select-cheaply descriptor pool, at the layer
+        # level.  The XLA backends don't consume plans; skip the build.
+        tile_plan = None
+        if cfg.precision == "fp8" and dispatch.backend_uses_plan(
+                kcfg.backend):
+            tile_plan = make_tile_plan(gs, cap, block_m=kcfg.block_m,
+                                       num_groups=e_loc)
         glin = functools.partial(grouped_linear, precision=cfg.precision,
-                                 backend=cfg.backend)
+                                 config=kcfg, plan=tile_plan)
         g = glin(xs, params["w_gate"], gs)                  # [cap, f_loc]
         u = glin(xs, params["w_up"], gs)
         h = jax.nn.silu(g) * u                              # bf16 act (I5)

@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels.plan import KernelConfig, resolve_config
 
 
 def padded_group_sizes(group_sizes, block_m: int = 128):
@@ -58,20 +59,22 @@ def unpad_groups(c_padded, row_map):
 
 
 def grouped_gemm_fp8_padded(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
-                            block_m: int = 128, block_n: int = 128,
-                            block_k: int = 128, backend=None,
-                            out_dtype=jnp.bfloat16, padded_m=None):
+                            config: "KernelConfig | None" = None,
+                            backend=None, out_dtype=None, padded_m=None):
     """The full baseline pipeline: pad -> aligned grouped GEMM -> unpad.
 
-    The aligned GEMM routes through the dispatch registry; ``backend``
-    names the *inner* backend (default: auto-resolved).
+    Tile shapes come from ``config`` (:class:`KernelConfig`); the aligned
+    GEMM routes through the dispatch registry with ``backend`` /
+    ``config.backend`` naming the *inner* backend (default:
+    auto-resolved).  The padded buffer's group offsets differ from the
+    caller's, so any caller-side :class:`TilePlan` does not apply here —
+    the inner GEMM re-plans over the padded sizes.
     """
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
     a_p, s_p, psz, row_map = pad_groups(a_fp8, s_a, group_sizes,
-                                        block_m=block_m, padded_m=padded_m)
-    c_p = kops.grouped_gemm_fp8(a_p, s_p, b_fp8, s_b, psz,
-                                backend=backend, block_m=block_m,
-                                block_n=block_n, block_k=block_k,
-                                out_dtype=out_dtype)
+                                        block_m=cfg.block_m,
+                                        padded_m=padded_m)
+    c_p = kops.grouped_gemm_fp8(a_p, s_p, b_fp8, s_b, psz, config=cfg)
     return unpad_groups(c_p, row_map)
 
 

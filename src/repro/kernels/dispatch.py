@@ -10,7 +10,11 @@ registry with
     monkeypatching, and refusal is an explicit
     :class:`BackendUnavailableError` instead of a deep ``AttributeError``;
   * a ``run()`` implementing the quantized grouped GEMM
-    ``(a_fp8, s_a, b_fp8, s_b, group_sizes) -> [M, N]``.
+    ``(a_fp8, s_a, b_fp8, s_b, group_sizes) -> [M, N]`` under a
+    :class:`repro.kernels.plan.KernelConfig` (tile shapes + out dtype),
+    optionally consuming a precomputed :class:`~repro.kernels.plan.TilePlan`
+    (the plan-once/run-many schedule shared by every GEMM of one routing
+    decision).
 
 Built-in backends:
 
@@ -43,12 +47,19 @@ import jax.numpy as jnp
 from repro import compat
 from repro.kernels import ref as _ref
 from repro.kernels.grouped_gemm_kernel import QUANT_BLOCK, gmm_pallas
+from repro.kernels.plan import (KernelConfig, TilePlan,  # noqa: F401
+                                make_tile_plan, resolve_config)
 from repro.kernels.quant_kernel import quantize_tilewise_pallas
 
 # auto-resolution preference, best first
 AUTO_ORDER = ("pallas", "xla_ragged", "pallas_interpret")
 
 _ALIASES = {"xla": "xla_ragged"}
+
+# backends that walk the TilePlan schedule (and honour tile shapes); the
+# XLA paths let the compiler tile and ignore both
+PLAN_BACKENDS = frozenset({"pallas", "pallas_interpret"})
+TILE_FREE_BACKENDS = frozenset({"xla_ragged", "xla_exact"})
 
 
 class BackendUnavailableError(RuntimeError):
@@ -141,6 +152,18 @@ def resolve_backend(backend: Optional[str] = "auto") -> str:
     return backend
 
 
+def backend_uses_plan(backend: Optional[str] = "auto") -> bool:
+    """Whether the (resolved) backend consumes a precomputed TilePlan —
+    callers skip plan construction for the XLA paths."""
+    return resolve_backend(backend) in PLAN_BACKENDS
+
+
+def backend_ignores_tiles(backend: Optional[str] = "auto") -> bool:
+    """Whether tile shapes are a no-op for the (resolved) backend — the
+    autotuner skips measurement there (cost-model selection only)."""
+    return resolve_backend(backend) in TILE_FREE_BACKENDS
+
+
 # ---------------------------------------------------------------------------
 # XLA implementations
 # ---------------------------------------------------------------------------
@@ -212,30 +235,29 @@ def _avail_ragged_dot():
     return False, (f"jax {jax.__version__} has no jax.lax.ragged_dot")
 
 
-def _run_pallas(a8, sa, b8, sb, gs, *, num_groups, block_m, block_n,
-                block_k, out_dtype, interpret):
+def _run_pallas(a8, sa, b8, sb, gs, *, num_groups, config, plan, interpret):
     return gmm_pallas(a8, sa, b8, sb, gs, num_groups=num_groups,
-                      block_m=block_m, block_n=block_n, block_k=block_k,
-                      out_dtype=out_dtype, interpret=interpret)
+                      block_m=config.block_m, block_n=config.block_n,
+                      block_k=config.block_k, out_dtype=config.out_dtype,
+                      interpret=interpret, plan=plan)
 
 
-def _run_xla_ragged(a8, sa, b8, sb, gs, *, out_dtype, **_):
-    return gmm_xla(a8, sa, b8, sb, gs, out_dtype=out_dtype)
+def _run_xla_ragged(a8, sa, b8, sb, gs, *, config, **_):
+    return gmm_xla(a8, sa, b8, sb, gs, out_dtype=config.out_dtype)
 
 
-def _run_xla_exact(a8, sa, b8, sb, gs, *, out_dtype, **_):
-    return gmm_xla_exact(a8, sa, b8, sb, gs, out_dtype=out_dtype)
+def _run_xla_exact(a8, sa, b8, sb, gs, *, config, **_):
+    return gmm_xla_exact(a8, sa, b8, sb, gs, out_dtype=config.out_dtype)
 
 
-def _run_padded_baseline(a8, sa, b8, sb, gs, *, block_m, block_n, block_k,
-                         out_dtype, **_):
+def _run_padded_baseline(a8, sa, b8, sb, gs, *, config, **_):
     # deferred import: padding_baseline routes its aligned GEMM back
-    # through this registry
+    # through this registry.  A caller's TilePlan never applies here —
+    # padding changes the group offsets, so the baseline re-plans.
     from repro.core import padding_baseline as pb
     inner = "pallas" if compat.has_tpu() else "pallas_interpret"
-    return pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs, block_m=block_m,
-                                      block_n=block_n, block_k=block_k,
-                                      backend=inner, out_dtype=out_dtype)
+    return pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs,
+                                      config=config.with_(backend=inner))
 
 
 register_backend(
@@ -274,22 +296,31 @@ register_backend(
 # ---------------------------------------------------------------------------
 
 def grouped_gemm_fp8(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
-                     backend: Optional[str] = "auto",
+                     backend: Optional[str] = None,
                      num_groups: Optional[int] = None,
-                     block_m: int = 128, block_n: int = 128,
-                     block_k: int = 128, out_dtype=jnp.bfloat16):
+                     config: Optional[KernelConfig] = None,
+                     out_dtype=None,
+                     plan: Optional[TilePlan] = None):
     """Quantized grouped GEMM through the registry (the low-level entry —
-    operands already fp8 with DeepSeek-style tile/block scales)."""
-    name = resolve_backend(backend)
+    operands already fp8 with DeepSeek-style tile/block scales).
+
+    Tile shapes travel in ``config`` (a :class:`KernelConfig`; defaults to
+    the installed/per-device default); ``backend=``/``out_dtype=`` are
+    per-call overrides of the config's fields.  ``plan`` is an optional
+    precomputed :class:`TilePlan` for plan-consuming backends.
+    """
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
+    if cfg.out_dtype is None:
+        cfg = cfg.with_(out_dtype=jnp.bfloat16)
+    name = resolve_backend(cfg.backend)
     return _REGISTRY[name].run(
         a_fp8, s_a, b_fp8, s_b, group_sizes, num_groups=num_groups,
-        block_m=block_m, block_n=block_n, block_k=block_k,
-        out_dtype=out_dtype)
+        config=cfg, plan=plan)
 
 
-def grouped_gemm(x, w, group_sizes, *, backend: Optional[str] = "auto",
-                 out_dtype=None, block_m: int = 128, block_n: int = 128,
-                 block_k: int = 128):
+def grouped_gemm(x, w, group_sizes, *, backend: Optional[str] = None,
+                 out_dtype=None, config: Optional[KernelConfig] = None,
+                 plan: Optional[TilePlan] = None):
     """Unified high-level grouped GEMM: ``y[rows of g] = x[rows of g] @
     w[g]`` with the paper's fp8 recipe (1x128 activation tiles, 128x128
     weight blocks) applied before dispatch.
@@ -299,22 +330,37 @@ def grouped_gemm(x, w, group_sizes, *, backend: Optional[str] = "auto",
     :func:`repro.core.grouped_gemm.grouped_linear`, which wraps the same
     registry in a custom VJP.
     """
-    out_dtype = out_dtype or x.dtype
     a8, sa = _ref.quantize_tilewise_ref(x.astype(jnp.float32))
     b8, sb = jax.vmap(_ref.quantize_blockwise_ref)(w.astype(jnp.float32))
-    return grouped_gemm_fp8(a8, sa, b8, sb, group_sizes, backend=backend,
-                            num_groups=w.shape[0], block_m=block_m,
-                            block_n=block_n, block_k=block_k,
-                            out_dtype=out_dtype)
+    # explicit out_dtype > config's pinned out_dtype > x.dtype
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
+    if cfg.out_dtype is None:
+        cfg = cfg.with_(out_dtype=x.dtype)
+    return grouped_gemm_fp8(a8, sa, b8, sb, group_sizes,
+                            num_groups=w.shape[0], config=cfg, plan=plan)
 
 
-def quantize_tilewise(x, *, backend: Optional[str] = None,
-                      block_m: int = 256):
-    backend = resolve_backend(backend)
+def quantize_tilewise(x, *, backend: Optional[str] = None):
+    """1x128 per-tile fp8 activation quantization through the registry.
+
+    A pure-quantization call never *needs* a kernel backend — when
+    *auto*-resolution fails (e.g. an installed default naming an
+    unavailable backend), fall back to the XLA reference implementation
+    instead of refusing work the ref path can always serve.  An
+    explicitly requested unavailable backend still raises: the caller
+    asked for that kernel, not a silent stand-in.
+    """
+    explicit = backend not in (None, "auto")
+    try:
+        backend = resolve_backend(backend)
+    except BackendUnavailableError:
+        if explicit:
+            raise
+        return _ref.quantize_tilewise_ref(x)
     if backend == "pallas":
-        return quantize_tilewise_pallas(x, block_m=block_m, interpret=False)
+        return quantize_tilewise_pallas(x, interpret=False)
     if backend == "pallas_interpret":
-        return quantize_tilewise_pallas(x, block_m=block_m, interpret=True)
+        return quantize_tilewise_pallas(x, interpret=True)
     return _ref.quantize_tilewise_ref(x)
 
 

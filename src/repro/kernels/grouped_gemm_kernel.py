@@ -49,68 +49,25 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
-
-QUANT_BLOCK = 128
+from repro.kernels.plan import (  # noqa: F401  (metadata lives in plan.py;
+    QUANT_BLOCK,                   # re-exported here for pre-plan callers)
+    KernelConfig,
+    TilePlan,
+    make_group_metadata,
+    make_tile_plan,
+)
 
 
 def validate_kernel_config(m, k, n, block_m, block_n, block_k):
     """TPU-adapted alignment constraints (analogue of paper's block_N % 64).
 
-    M is deliberately unconstrained — handling arbitrary (ragged) M without
-    padding is the point of the paper.
+    Folded into :class:`repro.kernels.plan.KernelConfig`: construction
+    checks the static block constraints, :meth:`KernelConfig.validate`
+    the shape-dependent ones.  M is deliberately unconstrained — handling
+    arbitrary (ragged) M without padding is the point of the paper.
     """
-    if block_n % 128 != 0:
-        raise ValueError(f"block_n must be a multiple of 128 (lane width), got {block_n}")
-    if block_k % QUANT_BLOCK != 0:
-        raise ValueError(f"block_k must be a multiple of {QUANT_BLOCK}, got {block_k}")
-    if k % block_k != 0:
-        raise ValueError(f"K={k} must be a multiple of block_k={block_k}")
-    if n % block_n != 0:
-        raise ValueError(f"N={n} must be a multiple of block_n={block_n}")
-    if block_m % 8 != 0:
-        raise ValueError(f"block_m must be a multiple of 8 (sublane), got {block_m}")
-
-
-def make_group_metadata(group_sizes: jax.Array, m: int, block_m: int,
-                        num_groups: int):
-    """Device-side visitation schedule — the analogue of the paper's
-    runtime descriptor selection (Eq. 2).
-
-    Returns (group_offsets[G+1], group_ids[T], m_tile_ids[T]) where
-    T = ceil(m/block_m) + num_groups - 1 is the static worst-case visit
-    count: every tile is visited once, plus one extra visit per group
-    boundary that splits a tile.  Padding visits replicate the last real
-    visit — they redo an identical masked write, which is idempotent
-    (the paper's "safe overlapping write": duplicated writes of identical
-    data are harmless).
-    """
-    group_sizes = group_sizes.astype(jnp.int32)
-    group_offsets = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes)])
-    starts = group_offsets[:-1]
-    ends = group_offsets[1:]
-    first_tile = starts // block_m
-    last_tile_excl = (ends + block_m - 1) // block_m
-    tiles_per = jnp.maximum(last_tile_excl - first_tile, 0)
-    # zero-size groups get zero visits (even when their offset is unaligned)
-    tiles_per = jnp.where(group_sizes == 0, 0, tiles_per)
-
-    num_tiles = (m + block_m - 1) // block_m
-    max_visits = num_tiles + num_groups - 1
-
-    visit_ends = jnp.cumsum(tiles_per)            # [G]
-    t = jnp.arange(max_visits, dtype=jnp.int32)
-    # group that owns visit t (padding visits clamp to the last real one)
-    num_real = visit_ends[-1]
-    t_clamped = jnp.minimum(t, num_real - 1)
-    group_ids = jnp.searchsorted(visit_ends, t_clamped, side="right")
-    group_ids = jnp.minimum(group_ids, num_groups - 1).astype(jnp.int32)
-    visits_before = jnp.concatenate(
-        [jnp.zeros((1,), jnp.int32), visit_ends[:-1]])
-    m_tile_ids = (first_tile[group_ids]
-                  + (t_clamped - visits_before[group_ids])).astype(jnp.int32)
-    m_tile_ids = jnp.clip(m_tile_ids, 0, num_tiles - 1)
-    return group_offsets, group_ids, m_tile_ids
+    KernelConfig(block_m=block_m, block_n=block_n,
+                 block_k=block_k).validate(m, k, n)
 
 
 def _gmm_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,  # prefetch
@@ -171,7 +128,8 @@ def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
                s_b: jax.Array, group_sizes: jax.Array, *,
                num_groups: int | None = None,
                block_m: int = 128, block_n: int = 128, block_k: int = 128,
-               out_dtype: Any = jnp.bfloat16, interpret: bool = False):
+               out_dtype: Any = jnp.bfloat16, interpret: bool = False,
+               plan: TilePlan | None = None):
     """Padding-free fp8 grouped GEMM.
 
     a_fp8:  [M, K]   fp8 e4m3 — concatenated groups, arbitrary (ragged) M^g
@@ -179,6 +137,14 @@ def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
     b_fp8:  [G, K, N] fp8
     s_b:    [G, KB, NB] f32   — 128x128 block scales
     group_sizes: [G] int32, sum == M
+    plan:   optional precomputed :class:`TilePlan` for this
+            ``(group_sizes, M, block_m)`` — pass it to amortize the
+            schedule across the several GEMMs of one routing decision
+            (built here when absent).  The plan MUST have been built from
+            these ``group_sizes``: its schedule replaces them wholesale,
+            and only the static (m, block_m, num_groups) triple is
+            checkable — a plan from a different routing decision gives
+            silently wrong output (see :class:`TilePlan`)
     returns [M, N] out_dtype
     """
     m, k = a_fp8.shape
@@ -189,46 +155,60 @@ def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
     kb = s_a.shape[1]
     assert kb == (k + QUANT_BLOCK - 1) // QUANT_BLOCK
 
-    group_offsets, group_ids, m_tile_ids = make_group_metadata(
-        group_sizes, m, block_m, num_groups)
-    num_tiles = (m + block_m - 1) // block_m
-    max_visits = num_tiles + num_groups - 1
+    if m == 0:
+        return jnp.zeros((0, n), out_dtype)
+
+    if plan is None:
+        plan = make_tile_plan(group_sizes, m, block_m=block_m,
+                              num_groups=num_groups)
+    else:
+        plan.check_against(m, block_m, num_groups)
     k_steps = k // block_k
 
-    grid = (n // block_n, max_visits, k_steps)
+    grid = (n // block_n, plan.max_visits, k_steps)
 
     kernel = functools.partial(
         _gmm_kernel, block_m=block_m, block_n=block_n, block_k=block_k,
         k_steps=k_steps, out_dtype=out_dtype)
 
-    return pl.pallas_call(
-        kernel,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=3,
-            grid=grid,
-            in_specs=[
-                # A tile: globally block-aligned HBM->VMEM copy
-                pl.BlockSpec((block_m, block_k),
-                             lambda n_i, t, k_i, go, gi, mi: (mi[t], k_i)),
-                # S_A: over-fetch the whole scale row per tile (padded to
-                # the 128-lane VMEM tile) — paper §2.3 analogue
-                pl.BlockSpec((block_m, kb),
-                             lambda n_i, t, k_i, go, gi, mi: (mi[t], 0)),
-                # B^g tile, selected by the visit's group id
-                pl.BlockSpec((1, block_k, block_n),
-                             lambda n_i, t, k_i, go, gi, mi: (gi[t], k_i, n_i)),
-                # S_B^g: whole per-group scale block (tiny)
-                pl.BlockSpec((1, kb, s_b.shape[2]),
-                             lambda n_i, t, k_i, go, gi, mi: (gi[t], 0, 0)),
-            ],
-            out_specs=pl.BlockSpec(
-                (block_m, block_n),
-                lambda n_i, t, k_i, go, gi, mi: (mi[t], n_i)),
-            scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
-        ),
-        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
-        compiler_params=compat.tpu_compiler_params(
-            dimension_semantics=("parallel", "arbitrary", "arbitrary"),
-        ),
-        interpret=interpret,
-    )(group_offsets, group_ids, m_tile_ids, a_fp8, s_a, b_fp8, s_b)
+    def _run_kernel(group_offsets, group_ids, m_tile_ids):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=3,
+                grid=grid,
+                in_specs=[
+                    # A tile: globally block-aligned HBM->VMEM copy
+                    pl.BlockSpec((block_m, block_k),
+                                 lambda n_i, t, k_i, go, gi, mi: (mi[t], k_i)),
+                    # S_A: over-fetch the whole scale row per tile (padded to
+                    # the 128-lane VMEM tile) — paper §2.3 analogue
+                    pl.BlockSpec((block_m, kb),
+                                 lambda n_i, t, k_i, go, gi, mi: (mi[t], 0)),
+                    # B^g tile, selected by the visit's group id
+                    pl.BlockSpec((1, block_k, block_n),
+                                 lambda n_i, t, k_i, go, gi, mi: (gi[t], k_i, n_i)),
+                    # S_B^g: whole per-group scale block (tiny)
+                    pl.BlockSpec((1, kb, s_b.shape[2]),
+                                 lambda n_i, t, k_i, go, gi, mi: (gi[t], 0, 0)),
+                ],
+                out_specs=pl.BlockSpec(
+                    (block_m, block_n),
+                    lambda n_i, t, k_i, go, gi, mi: (mi[t], n_i)),
+                scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+            ),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            compiler_params=compat.tpu_compiler_params(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(group_offsets, group_ids, m_tile_ids, a_fp8, s_a, b_fp8, s_b)
+
+    # all-empty schedule (every group size 0): the zero-visit plan owns no
+    # rows, so short-circuit to defined zeros instead of launching visits
+    # that leave the whole buffer uninitialized
+    return jax.lax.cond(
+        plan.total_rows() > 0,
+        lambda go, gi, mi: _run_kernel(go, gi, mi),
+        lambda go, gi, mi: jnp.zeros((m, n), out_dtype),
+        plan.group_offsets, plan.group_ids, plan.m_tile_ids)

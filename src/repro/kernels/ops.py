@@ -11,17 +11,23 @@ from __future__ import annotations
 from repro.kernels.dispatch import (        # noqa: F401  (re-exports)
     QUANT_BLOCK,
     BackendUnavailableError,
+    KernelConfig,
+    TilePlan,
     availability,
+    backend_ignores_tiles,
     backend_matrix,
     backend_names,
+    backend_uses_plan,
     default_backend,
     gmm_xla,
     gmm_xla_exact,
     grouped_gemm,
     grouped_gemm_fp8,
+    make_tile_plan,
     quantize_blockwise,
     quantize_tilewise,
     register_backend,
     resolve_backend,
+    resolve_config,
     set_default_backend,
 )

@@ -1,0 +1,577 @@
+"""TilePlan subsystem: plan-once/run-many grouped GEMM configuration.
+
+The paper's core mechanism is a *preconfigured descriptor pool* with cheap
+runtime selection (log2(block_M) TMA descriptors, Eq. 2): configure
+expensive launch state once, select per launch.  This module is the
+repo-wide analogue, split into three pieces:
+
+``KernelConfig``
+    One frozen record of every tile-shape decision (``block_m/n/k``), the
+    dispatch backend, and the output dtype.  It replaces the loose
+    ``block_m=128``-style kwargs that used to be scattered across
+    ``dispatch.py``, ``core/``, models, serve, and benchmarks — tile
+    shapes are a first-class tuned artifact, not folklore constants.
+    Static alignment constraints are validated at construction; the
+    shape-dependent ones via :meth:`KernelConfig.validate`.
+
+``TilePlan``
+    The visitation schedule (``group_offsets/group_ids/m_tile_ids``) the
+    padding-free kernel walks — the descriptor-selection analogue.  It
+    depends only on ``(group_sizes, m, block_m)``: *not* on K, N, or the
+    weight operand.  One MoE layer application therefore builds it once
+    per routing decision and reuses it across every GEMM that shares the
+    same ``group_sizes`` — gate/up/down forward and the dgrads in the
+    custom VJP (the transposed-N plan is the same plan, for free).
+
+Pool autotuner
+    ``CONFIG_POOL`` is a small pool of candidate configs (the descriptor
+    pool analogue), ranked by a roofline cost model seeded from the
+    ``benchmarks/roofline.py`` device table, then measured on the live
+    backend.  Selections persist to a JSON cache keyed by
+    ``(device kind, backend, M-bucket, K, N, G)`` so the measurement runs
+    once per shape class per machine.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import json
+import os
+import time
+from typing import Any, Iterable, Optional
+
+import jax
+import jax.numpy as jnp
+
+QUANT_BLOCK = 128  # the paper's 1x128 / 128x128 quantization granularity
+
+
+# ---------------------------------------------------------------------------
+# KernelConfig
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class KernelConfig:
+    """Frozen tile-shape + backend + out-dtype descriptor for one grouped
+    GEMM.  Hashable, so it can ride through ``jax.jit`` static args and
+    ``custom_vjp`` nondiff args."""
+
+    block_m: int = 128
+    block_n: int = 128
+    block_k: int = 128
+    backend: Optional[str] = None      # dispatch registry name; None = auto
+    # None = the call site decides (grouped_linear uses x.dtype, the raw
+    # dispatch entry bf16); pin a dtype to override every consumer
+    out_dtype: Any = None
+
+    def __post_init__(self):
+        # normalize out_dtype so configs built from jnp scalar types and
+        # from the JSON cache (dtype names) are identical under ==/hash
+        # (they ride through jit static args — a hash split compiles twice)
+        if self.out_dtype is not None:
+            object.__setattr__(self, "out_dtype", jnp.dtype(self.out_dtype))
+        # static (shape-independent) constraints — TPU-adapted analogue of
+        # the paper's block_N % 64 bookkeeping (§2.3)
+        if self.block_m % 8 != 0:
+            raise ValueError(
+                f"block_m must be a multiple of 8 (sublane), got {self.block_m}")
+        if self.block_n % 128 != 0:
+            raise ValueError(
+                f"block_n must be a multiple of 128 (lane width), got {self.block_n}")
+        if self.block_k % QUANT_BLOCK != 0:
+            raise ValueError(
+                f"block_k must be a multiple of {QUANT_BLOCK}, got {self.block_k}")
+
+    def validate(self, m: int, k: int, n: int) -> "KernelConfig":
+        """Shape-dependent constraints.  M is deliberately unconstrained —
+        handling arbitrary (ragged) M without padding is the point of the
+        paper."""
+        if k % self.block_k != 0:
+            raise ValueError(f"K={k} must be a multiple of block_k={self.block_k}")
+        if n % self.block_n != 0:
+            raise ValueError(f"N={n} must be a multiple of block_n={self.block_n}")
+        return self
+
+    def compatible(self, k: int, n: int) -> bool:
+        return k % self.block_k == 0 and n % self.block_n == 0
+
+    def with_(self, **kw) -> "KernelConfig":
+        return dataclasses.replace(self, **kw)
+
+    # ---- (de)serialization for the autotune cache ----------------------
+    def to_dict(self) -> dict:
+        return {"block_m": self.block_m, "block_n": self.block_n,
+                "block_k": self.block_k, "backend": self.backend,
+                "out_dtype": (None if self.out_dtype is None
+                              else jnp.dtype(self.out_dtype).name)}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "KernelConfig":
+        name = d.get("out_dtype")
+        return cls(block_m=int(d["block_m"]), block_n=int(d["block_n"]),
+                   block_k=int(d["block_k"]), backend=d.get("backend"),
+                   out_dtype=None if name is None else jnp.dtype(name))
+
+    @classmethod
+    def default(cls, device_kind: Optional[str] = None) -> "KernelConfig":
+        """Per-device default tile shape (untuned seed of the pool)."""
+        kind = (device_kind or _device_kind()).lower()
+        for prefix, cfg_kw in _DEVICE_DEFAULTS:
+            if kind.startswith(prefix):
+                return cls(**cfg_kw)
+        return cls()
+
+
+# per-device default block shapes, first prefix match wins.  v5e has half
+# the VMEM of v4/v5p, so the default stays at one 128x128 output tile;
+# larger parts get a taller M tile to amortize B traffic.
+_DEVICE_DEFAULTS = (
+    ("tpu v5 lite", dict(block_m=128)),
+    ("tpu v5e", dict(block_m=128)),
+    ("tpu", dict(block_m=256)),
+    ("cpu", dict(block_m=128)),
+)
+
+
+def _device_kind() -> str:
+    try:
+        return jax.devices()[0].device_kind
+    except Exception:  # no backend at all — import-time safety
+        return "cpu"
+
+
+# ---------------------------------------------------------------------------
+# Default-config seam (serve/train thread a tuned config through here)
+# ---------------------------------------------------------------------------
+
+_default_config: Optional[KernelConfig] = None
+
+
+def set_default_config(config: Optional[KernelConfig]) -> None:
+    """Install the config that ``config=None`` call sites resolve to.
+
+    TRACE-TIME semantics: the default is read while a function is being
+    traced, so it does not affect already-jitted traces (the seam is not
+    part of any jit cache key).  Install it *before* the first call of a
+    jitted function — or thread the config explicitly as trainer
+    (``make_train_step(kernel_config=...)``) and serve
+    (``Engine(kernel_config=...)``) do, which re-trace by construction.
+    """
+    global _default_config
+    _default_config = config
+
+
+def get_default_config() -> KernelConfig:
+    return _default_config if _default_config is not None \
+        else KernelConfig.default()
+
+
+def pinned_default() -> Optional[KernelConfig]:
+    """The explicitly installed default, or None when unset — callers that
+    would otherwise *tune* (benchmarks) check this to honour a pin."""
+    return _default_config
+
+
+@contextlib.contextmanager
+def default_config(config: Optional[KernelConfig]):
+    """Scoped :func:`set_default_config` (trainer wraps loss tracing)."""
+    global _default_config
+    prev = _default_config
+    _default_config = config
+    try:
+        yield
+    finally:
+        _default_config = prev
+
+
+def resolve_config(config: Optional[KernelConfig] = None, *,
+                   backend: Optional[str] = None,
+                   out_dtype: Any = None) -> KernelConfig:
+    """Effective config for a call site: explicit ``config`` >
+    installed default > per-device default, with per-call ``backend`` /
+    ``out_dtype`` overrides applied on top."""
+    cfg = config if config is not None else get_default_config()
+    if backend is not None:
+        # an explicit "auto" escapes a pinned concrete backend back to
+        # auto-resolution (None is the config's backend field spelling)
+        cfg = cfg.with_(backend=None if backend == "auto" else backend)
+    if out_dtype is not None:
+        cfg = cfg.with_(out_dtype=out_dtype)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Group metadata (descriptor selection, Eq. 2) and TilePlan
+# ---------------------------------------------------------------------------
+
+def make_group_metadata(group_sizes: jax.Array, m: int, block_m: int,
+                        num_groups: int):
+    """Device-side visitation schedule — the analogue of the paper's
+    runtime descriptor selection (Eq. 2).
+
+    Returns (group_offsets[G+1], group_ids[T], m_tile_ids[T]) where
+    T = ceil(m/block_m) + num_groups - 1 is the static worst-case visit
+    count: every tile is visited once, plus one extra visit per group
+    boundary that splits a tile.  Padding visits replicate the last real
+    visit — they redo an identical masked write, which is idempotent
+    (the paper's "safe overlapping write": duplicated writes of identical
+    data are harmless).
+
+    When every group is empty (``num_real == 0``) the schedule degenerates
+    to all-zero visit ids — a valid (group 0, tile 0) visit whose masked
+    write covers no rows.  Callers that want defined output for that case
+    short-circuit on ``sum(group_sizes) == 0`` (``gmm_pallas`` returns
+    zeros).
+    """
+    group_sizes = group_sizes.astype(jnp.int32)
+    group_offsets = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes)])
+    starts = group_offsets[:-1]
+    ends = group_offsets[1:]
+    first_tile = starts // block_m
+    last_tile_excl = (ends + block_m - 1) // block_m
+    tiles_per = jnp.maximum(last_tile_excl - first_tile, 0)
+    # zero-size groups get zero visits (even when their offset is unaligned)
+    tiles_per = jnp.where(group_sizes == 0, 0, tiles_per)
+
+    num_tiles = (m + block_m - 1) // block_m
+    max_visits = max(num_tiles + num_groups - 1, 1)
+
+    visit_ends = jnp.cumsum(tiles_per)            # [G]
+    t = jnp.arange(max_visits, dtype=jnp.int32)
+    # group that owns visit t (padding visits clamp to the last real one).
+    # num_real == 0 would clamp to -1 and feed searchsorted garbage — pin
+    # the whole schedule to (group 0, tile 0) instead (zero-visit schedule:
+    # the masked store owns no rows).
+    num_real = visit_ends[-1]
+    t_clamped = jnp.maximum(jnp.minimum(t, num_real - 1), 0)
+    group_ids = jnp.searchsorted(visit_ends, t_clamped, side="right")
+    group_ids = jnp.minimum(group_ids, num_groups - 1).astype(jnp.int32)
+    visits_before = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), visit_ends[:-1]])
+    m_tile_ids = (first_tile[group_ids]
+                  + (t_clamped - visits_before[group_ids])).astype(jnp.int32)
+    m_tile_ids = jnp.clip(m_tile_ids, 0, max(num_tiles - 1, 0))
+    empty = num_real == 0
+    group_ids = jnp.where(empty, 0, group_ids)
+    m_tile_ids = jnp.where(empty, 0, m_tile_ids)
+    return group_offsets, group_ids, m_tile_ids
+
+
+@dataclasses.dataclass(frozen=True)
+class TilePlan:
+    """Precomputed grouped-GEMM schedule, reusable across every GEMM that
+    shares the same ``group_sizes`` (M-side raggedness): gate/up/down
+    forward GEMMs of one MoE application and the dgrads of its backward.
+    A registered pytree, so it flows through ``jit`` and ``custom_vjp``
+    residuals.
+
+    CONTRACT: a plan is only valid for the exact ``group_sizes`` it was
+    built from.  The static fields (m, block_m, num_groups) are checked
+    at use; the offsets/ids are traced values that consumers trust
+    without re-deriving (that is the point of plan-once/run-many — the
+    same trade the paper's preconfigured descriptors make).  Passing a
+    plan from a *different* routing decision that happens to share the
+    static shape produces silently wrong output: never cache plans
+    across routing decisions.
+    """
+    group_offsets: jax.Array   # [G+1] int32 row offsets (cumsum of sizes)
+    group_ids: jax.Array       # [T]   int32 visit -> group
+    m_tile_ids: jax.Array      # [T]   int32 visit -> output M tile
+    m: int                     # static row count of the (capacity) buffer
+    block_m: int
+    num_groups: int
+
+    @property
+    def num_tiles(self) -> int:
+        return (self.m + self.block_m - 1) // self.block_m
+
+    @property
+    def max_visits(self) -> int:
+        return max(self.num_tiles + self.num_groups - 1, 1)
+
+    def total_rows(self) -> jax.Array:
+        """Traced sum of group sizes (rows the kernel actually owns)."""
+        return self.group_offsets[-1]
+
+    def check_against(self, m: int, block_m: int, num_groups: int) -> None:
+        if (self.m, self.block_m, self.num_groups) != (m, block_m, num_groups):
+            raise ValueError(
+                f"TilePlan built for (m={self.m}, block_m={self.block_m}, "
+                f"num_groups={self.num_groups}) used with (m={m}, "
+                f"block_m={block_m}, num_groups={num_groups}); rebuild the "
+                f"plan or pass a matching KernelConfig")
+
+
+def _tile_plan_flatten(p: TilePlan):
+    return ((p.group_offsets, p.group_ids, p.m_tile_ids),
+            (p.m, p.block_m, p.num_groups))
+
+
+def _tile_plan_unflatten(aux, children):
+    return TilePlan(*children, *aux)
+
+
+jax.tree_util.register_pytree_node(TilePlan, _tile_plan_flatten,
+                                   _tile_plan_unflatten)
+
+
+def make_tile_plan(group_sizes: jax.Array, m: int, *,
+                   config: Optional[KernelConfig] = None,
+                   block_m: Optional[int] = None,
+                   num_groups: Optional[int] = None) -> TilePlan:
+    """Build the visitation schedule once per routing decision."""
+    if block_m is None:
+        block_m = (config or get_default_config()).block_m
+    num_groups = num_groups if num_groups is not None else group_sizes.shape[0]
+    offsets, group_ids, m_tile_ids = make_group_metadata(
+        group_sizes, m, block_m, num_groups)
+    return TilePlan(offsets, group_ids, m_tile_ids, m=int(m),
+                    block_m=int(block_m), num_groups=int(num_groups))
+
+
+# ---------------------------------------------------------------------------
+# Block-shape pool (the descriptor-pool analogue)
+# ---------------------------------------------------------------------------
+
+# block_m sweeps the paper's log2 descriptor axis; the (block_n, block_k)
+# cross stays small — one 128-lane output tile or a double-wide variant.
+CONFIG_POOL: "tuple[KernelConfig, ...]" = tuple(
+    KernelConfig(block_m=bm, block_n=bn, block_k=bk)
+    for bm in (64, 128, 256, 512)
+    for bn, bk in ((128, 128), (256, 128))
+)
+
+
+def candidate_pool(k: int, n: int,
+                   pool: Optional[Iterable[KernelConfig]] = None,
+                   require_transposable: bool = True
+                   ) -> "tuple[KernelConfig, ...]":
+    """Pool entries legal for this (K, N) — never empty for 128-aligned
+    shapes; falls back to the per-device default otherwise.
+
+    ``require_transposable`` (default) additionally demands legality for
+    the transposed (N, K) orientation: the fp8 custom VJP runs the dgrad
+    through the same config against ``w^T``, so a forward-only-legal
+    selection would crash every training step's backward.
+    """
+    def legal(c):
+        return c.compatible(k, n) and (
+            not require_transposable or c.compatible(n, k))
+
+    cands = tuple(c for c in (tuple(pool) if pool is not None else CONFIG_POOL)
+                  if legal(c))
+    if not cands:
+        d = KernelConfig.default()
+        cands = (d,) if legal(d) else ()
+    return cands
+
+
+# ---------------------------------------------------------------------------
+# Roofline cost model (seeded from benchmarks/roofline.py device numbers)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class DeviceSpec:
+    name: str
+    peak_flops: float      # bf16 MXU (or SIMD) FLOP/s
+    hbm_bw: float          # bytes/s
+    hbm_bytes: float       # per-chip capacity (roofline "fits" column)
+
+
+DEVICE_SPECS = {
+    "tpu v5e": DeviceSpec("tpu v5e", peak_flops=1.97e14, hbm_bw=8.2e11,
+                          hbm_bytes=16e9),
+    "tpu": DeviceSpec("tpu", peak_flops=2.75e14, hbm_bw=1.2e12,
+                      hbm_bytes=32e9),
+    "cpu": DeviceSpec("cpu", peak_flops=2e11, hbm_bw=5e10, hbm_bytes=64e9),
+}
+
+
+def device_spec(device_kind: Optional[str] = None) -> DeviceSpec:
+    kind = (device_kind or _device_kind()).lower()
+    # real v5e hardware reports device_kind "TPU v5 lite"
+    if kind.startswith(("tpu v5 lite", "tpu v5e")):
+        return DEVICE_SPECS["tpu v5e"]
+    for prefix in ("tpu", "cpu"):
+        if kind.startswith(prefix):
+            return DEVICE_SPECS[prefix]
+    return DEVICE_SPECS["cpu"]
+
+
+def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
+                    spec: Optional[DeviceSpec] = None) -> float:
+    """Roofline estimate of one grouped GEMM under ``config``: max of the
+    compute and memory terms, with the visit-inflation the plan implies
+    (worst case: every group boundary splits a tile, +G-1 visits)."""
+    spec = spec or device_spec()
+    bm, bn = config.block_m, config.block_n
+    num_tiles = -(-m // bm)
+    visits = num_tiles + max(g - 1, 0)
+    n_steps = -(-n // bn)
+    kb = -(-k // QUANT_BLOCK)
+    # every visit computes a full (bm, k) x (k, n) tile row
+    flops = 2.0 * visits * bm * k * n
+    a_bytes = visits * n_steps * bm * (k + 4 * kb)     # fp8 A + f32 S_A
+    b_bytes = visits * k * n                           # fp8 B per visit
+    c_bytes = num_tiles * bm * n * 2                   # bf16 C flush
+    return max(flops / spec.peak_flops,
+               (a_bytes + b_bytes + c_bytes) / spec.hbm_bw)
+
+
+# ---------------------------------------------------------------------------
+# Persistent autotune cache
+# ---------------------------------------------------------------------------
+
+_CACHE_VERSION = 1
+_cache_mem: "dict[str, dict[str, dict]]" = {}   # path -> entries
+
+
+def default_cache_path() -> str:
+    return os.environ.get(
+        "REPRO_TILEPLAN_CACHE",
+        os.path.join(os.path.expanduser("~"), ".cache", "repro",
+                     "tileplan_cache.json"))
+
+
+def _m_bucket(m: int) -> int:
+    """Paper-flavoured log2 bucketing: shapes in the same power-of-two M
+    band share a tuned config."""
+    b = 1
+    while b < max(m, 1):
+        b *= 2
+    return b
+
+
+def cache_key(device_kind: str, backend: str, m: int, k: int, n: int,
+              g: int) -> str:
+    return f"{device_kind}|{backend}|M{_m_bucket(m)}|K{k}|N{n}|G{g}"
+
+
+def _read_cache_file(path: str) -> "dict[str, dict]":
+    try:
+        with open(path) as f:
+            raw = json.load(f)
+        if raw.get("version") == _CACHE_VERSION:
+            return dict(raw.get("entries", {}))
+    except (OSError, ValueError):
+        pass
+    return {}
+
+
+def load_cache(path: Optional[str] = None) -> "dict[str, dict]":
+    path = path or default_cache_path()
+    if path not in _cache_mem:
+        _cache_mem[path] = _read_cache_file(path)
+    return _cache_mem[path]
+
+
+def save_cache(entries: "dict[str, dict]",
+               path: Optional[str] = None) -> None:
+    path = path or default_cache_path()
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    # merge with whatever is on disk *now* — concurrent processes tuning
+    # different shapes must not drop each other's (expensive, measured)
+    # entries; ours win on key collisions
+    merged = {**_read_cache_file(path), **entries}
+    tmp = f"{path}.tmp.{os.getpid()}"
+    with open(tmp, "w") as f:
+        json.dump({"version": _CACHE_VERSION, "entries": merged}, f,
+                  indent=1, sort_keys=True)
+    os.replace(tmp, path)
+    _cache_mem[path] = merged
+
+
+def clear_cache_memo() -> None:
+    """Drop the in-process cache view (tests; does not touch the file)."""
+    _cache_mem.clear()
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: measured pool selection on the live backend
+# ---------------------------------------------------------------------------
+
+def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
+                       *, iters: int = 3, warmup: int = 1,
+                       seed: int = 0) -> float:
+    """Median wall seconds of one grouped GEMM under ``config`` on random
+    operands (the live-backend measurement behind pool selection)."""
+    import numpy as np
+    from repro.kernels import dispatch, ref
+
+    rng = np.random.default_rng(seed)
+    sizes = rng.multinomial(m, np.full(g, 1.0 / g)).astype(np.int32)
+    a8, sa = ref.quantize_tilewise_ref(
+        jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
+    b8, sb = jax.vmap(ref.quantize_blockwise_ref)(
+        jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32))
+    gs = jnp.asarray(sizes)
+
+    def run():
+        return dispatch.grouped_gemm_fp8(a8, sa, b8, sb, gs, config=config)
+
+    for _ in range(warmup):
+        jax.block_until_ready(run())
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(run())
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def autotune(m: int, k: int, n: int, g: int, *,
+             backend: Optional[str] = None,
+             pool: Optional[Iterable[KernelConfig]] = None,
+             cache_path: Optional[str] = None,
+             measure: bool = True,
+             max_candidates: int = 4,
+             refresh: bool = False,
+             seed: int = 0) -> KernelConfig:
+    """Select a ``KernelConfig`` for the shape class of (M, K, N, G).
+
+    Pool candidates are ranked by the roofline cost model, the top
+    ``max_candidates`` are measured on the live backend (skipped with
+    ``measure=False`` — pure cost-model selection), and the winner is
+    persisted to the JSON cache so later runs (and later processes) reuse
+    it without re-measuring.
+    """
+    from repro.kernels import dispatch
+
+    resolved = dispatch.resolve_backend(backend)
+    kind = _device_kind()
+    key = cache_key(kind, resolved, m, k, n, g)
+    entries = load_cache(cache_path)
+    if not refresh and key in entries:
+        entry = entries[key]
+        # a cost-model-only entry does not satisfy a measured request —
+        # upgrade it (tile-free backends never measure, so theirs stand)
+        wants_measured = (measure
+                          and not dispatch.backend_ignores_tiles(resolved))
+        if entry.get("source") == "measured" or not wants_measured:
+            return KernelConfig.from_dict(entry["config"])
+
+    cands = candidate_pool(k, n, pool)
+    if not cands:
+        raise ValueError(f"no pool candidate is legal for K={k}, N={n}")
+    spec = device_spec(kind)
+    ranked = sorted(cands,
+                    key=lambda c: estimate_cost_s(m, k, n, g, c, spec))
+    ranked = [c.with_(backend=resolved) for c in ranked]
+
+    if measure and not dispatch.backend_ignores_tiles(resolved):
+        timed = [(_measure_candidate(c, m, k, n, g, seed=seed), c)
+                 for c in ranked[:max_candidates]]
+        best_s, best = min(timed, key=lambda tc: tc[0])
+        source = "measured"
+    else:
+        # tile-shape-independent backends (the XLA paths) or measure=False:
+        # cost-model order is the selection
+        best, best_s = ranked[0], estimate_cost_s(m, k, n, g, ranked[0], spec)
+        source = "cost_model"
+
+    entries[key] = {"config": best.to_dict(), "seconds": best_s,
+                    "source": source, "pool_size": len(cands)}
+    save_cache(entries, cache_path)
+    return best

@@ -56,12 +56,14 @@ def rope(x, positions, theta: float):
 # Linear / MLP
 # ---------------------------------------------------------------------------
 
-def linear(x, w, *, precision: str = "bf16", backend=None):
+def linear(x, w, *, precision: str = "bf16", backend=None, config=None):
     """2-D weight matmul with optional DeepSeek-style fp8 path (the G=1
-    degenerate case of the paper's grouped GEMM)."""
+    degenerate case of the paper's grouped GEMM).  ``config`` is the
+    :class:`repro.kernels.plan.KernelConfig` carrying tile shapes."""
     if precision == "fp8" and x.shape[-1] % 128 == 0 and w.shape[-1] % 128 == 0:
         lead = x.shape[:-1]
-        y = dense_linear_fp8(x.reshape(-1, x.shape[-1]), w, backend=backend)
+        y = dense_linear_fp8(x.reshape(-1, x.shape[-1]), w, backend=backend,
+                             config=config)
         return y.reshape(*lead, w.shape[-1]).astype(x.dtype)
     return jnp.einsum("...k,kn->...n", x, w.astype(x.dtype))
 
@@ -75,17 +77,21 @@ def init_mlp(key, d, f, act: str, dtype):
     return p
 
 
-def mlp(p, x, act: str = "swiglu", *, precision="bf16", backend=None):
+def mlp(p, x, act: str = "swiglu", *, precision="bf16", backend=None,
+        config=None):
     # §Perf I5: activation nonlinearities run in the compute dtype (bf16)
     # — MaxText practice; the f32 upcast doubled MLP elementwise traffic
-    up = linear(x, p["w_up"], precision=precision, backend=backend)
+    up = linear(x, p["w_up"], precision=precision, backend=backend,
+                config=config)
     if act == "swiglu":
-        gate = linear(x, p["w_gate"], precision=precision, backend=backend)
+        gate = linear(x, p["w_gate"], precision=precision, backend=backend,
+                      config=config)
         h = jax.nn.silu(gate) * up
     else:  # gelu
         h = jax.nn.gelu(up)
     h = constrain(h, "batch", "seq", "mlp")
-    return linear(h, p["w_down"], precision=precision, backend=backend)
+    return linear(h, p["w_down"], precision=precision, backend=backend,
+                  config=config)
 
 
 # ---------------------------------------------------------------------------

@@ -89,7 +89,8 @@ def whisper_encode(params, frames, cfg: ModelConfig):
                                     cfg, positions, causal=False)
         x = x + h
         x = x + mlp(lp["mlp"], rms_norm(lp["ln2"], x, cfg.norm_eps), "gelu",
-                    precision=cfg.precision, backend=cfg.gemm_backend)
+                    precision=cfg.precision, backend=cfg.gemm_backend,
+                    config=cfg.kernel_config)
         return x, None
 
     fn = jax.checkpoint(body) if cfg.remat else body
@@ -124,7 +125,8 @@ def whisper_forward(params, tokens, frames, cfg: ModelConfig, *,
                               rms_norm(lp["ln2"], x, cfg.norm_eps), xk, cfg)
         x = x + h2
         x = x + mlp(lp["mlp"], rms_norm(lp["ln3"], x, cfg.norm_eps), "gelu",
-                    precision=cfg.precision, backend=cfg.gemm_backend)
+                    precision=cfg.precision, backend=cfg.gemm_backend,
+                    config=cfg.kernel_config)
         out_cache = None
         if mode != "train":
             out_cache = {"self": nc, "xkv": xk}

@@ -11,6 +11,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.plan import KernelConfig
 from repro.models.model_zoo import Model
 
 
@@ -22,7 +23,15 @@ class GenerationResult:
 
 class Engine:
     def __init__(self, model: Model, params, *, max_new_tokens: int = 32,
-                 eos_id: int = -1, temperature: float = 0.0):
+                 eos_id: int = -1, temperature: float = 0.0,
+                 kernel_config: Optional[KernelConfig] = None):
+        if kernel_config is not None:
+            # pin tuned tile shapes for every GEMM this engine traces
+            # (prefill + decode) by rebuilding the model closures over a
+            # config carrying the KernelConfig
+            from repro.models.model_zoo import make_model
+            model = make_model(dataclasses.replace(
+                model.cfg, kernel_config=kernel_config))
         self.model = model
         self.params = params
         self.max_new = max_new_tokens

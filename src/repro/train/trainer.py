@@ -14,12 +14,26 @@ from typing import Any, Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import plan as plan_mod
 from repro.optim import adamw
 
 
 def make_train_step(loss_fn: Callable, opt_cfg: adamw.OptConfig,
-                    grad_accum: int = 1, donate: bool = True):
-    """loss_fn(params, batch) -> (loss, metrics dict of scalars)."""
+                    grad_accum: int = 1, donate: bool = True,
+                    kernel_config: Optional[plan_mod.KernelConfig] = None):
+    """loss_fn(params, batch) -> (loss, metrics dict of scalars).
+
+    ``kernel_config`` pins tuned tile shapes (an autotuned
+    :class:`~repro.kernels.plan.KernelConfig`) for every grouped/linear
+    GEMM traced under this step — models that don't carry an explicit
+    config resolve to it via the plan module's default-config seam.
+    """
+    if kernel_config is not None:
+        inner_loss = loss_fn
+
+        def loss_fn(params, batch):
+            with plan_mod.default_config(kernel_config):
+                return inner_loss(params, batch)
 
     def train_step(params, opt_state, batch):
         if grad_accum == 1:

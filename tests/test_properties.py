@@ -12,8 +12,9 @@ hypothesis = pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import padding_baseline as pb
-from repro.kernels import ref
+from repro.kernels import dispatch, ref
 from repro.kernels.grouped_gemm_kernel import make_group_metadata
+from repro.kernels.plan import make_tile_plan
 
 SET = dict(max_examples=25, deadline=None)
 
@@ -49,6 +50,41 @@ def test_group_metadata_invariants(sizes, block_m):
             assert i - seen_tiles[t] == 1 or tids[i - 1] == t, \
                 "non-adjacent revisit"
         seen_tiles[t] = i
+
+
+@given(st.lists(st.integers(0, 300), min_size=1, max_size=6),
+       st.sampled_from([64, 128]))
+@settings(max_examples=10, deadline=None)
+def test_plan_reuse_bitwise_identical(sizes, block_m):
+    """For ANY ragged split (zero groups, boundary-straddling groups,
+    single rows): dispatching with a precomputed TilePlan is BITWISE
+    identical to the plan-free path, on the plan-consuming interpret
+    backend and on the xla_exact oracle (which ignores the plan — the
+    plan kwarg must be a pure no-op there)."""
+    m = sum(sizes)
+    if m == 0:
+        return
+    k = n = 128
+    rng = np.random.default_rng(m + block_m)
+    a8, sa = ref.quantize_tilewise_ref(
+        jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
+    b8, sb = jax.vmap(ref.quantize_blockwise_ref)(
+        jnp.asarray(rng.standard_normal((len(sizes), k, n)), jnp.float32))
+    gs = jnp.asarray(sizes, jnp.int32)
+    plan = make_tile_plan(gs, m, block_m=block_m)
+    from repro.kernels.plan import KernelConfig
+    cfg = KernelConfig(block_m=block_m)
+    for backend in ("pallas_interpret", "xla_exact"):
+        if not dispatch.availability(backend)[0]:
+            continue
+        free = dispatch.grouped_gemm_fp8(
+            a8, sa, b8, sb, gs, backend=backend, config=cfg,
+            out_dtype=jnp.float32)
+        planned = dispatch.grouped_gemm_fp8(
+            a8, sa, b8, sb, gs, backend=backend, config=cfg,
+            out_dtype=jnp.float32, plan=plan)
+        np.testing.assert_array_equal(np.asarray(free), np.asarray(planned),
+                                      err_msg=f"{backend} {sizes}")
 
 
 @given(st.integers(1, 2048), st.integers(1, 32), st.integers(0, 10_000))
