@@ -56,14 +56,21 @@ def _ours(a8, sa, b8, sb, gs, config):
     return dispatch.grouped_gemm_fp8(a8, sa, b8, sb, gs, config=config)
 
 
-def _select_config(m, k, n, g, backend, *, measure):
+@functools.partial(jax.jit, static_argnames=("config",))
+def _wgrad(x, dy, gs, config):
+    return dispatch.grouped_gemm_wgrad(x, dy, gs, config=config)
+
+
+def _select_config(m, k, n, g, backend, *, measure, op="gemm"):
     """Tile-shape selection for one case: an installed pin
     (``benchmarks.run --pin-config`` / ``plan.set_default_config``) wins;
     tile-free backends keep the paper's fixed per-device geometry (their
     GEMM ignores tiles — only the *baseline's* padding math would drift,
     breaking comparability of the pad-overhead ratios); otherwise pool
     selection through the autotuner (persists to the JSON cache; a second
-    run reloads the same choice without re-measuring)."""
+    run reloads the same choice without re-measuring).  ``op`` picks the
+    autotune family so the gemm and wgrad sections select — and report —
+    the same backend under the same pin semantics."""
     pinned = plan_mod.pinned_default()
     if pinned is not None:
         return pinned if pinned.backend is not None or backend is None \
@@ -72,7 +79,8 @@ def _select_config(m, k, n, g, backend, *, measure):
         # the paper's fixed 128-row geometry (like fig2b), NOT the
         # per-device default — keeps pad-overhead ratios comparable
         return plan_mod.KernelConfig().with_(backend=backend)
-    return plan_mod.autotune(m, k, n, g, backend=backend, measure=measure)
+    return plan_mod.autotune(m, k, n, g, backend=backend, measure=measure,
+                             op=op)
 
 
 def bench_cases(report, cases, *, backend=None, measure_autotune=True):
@@ -96,6 +104,35 @@ def bench_cases(report, cases, *, backend=None, measure_autotune=True):
                f"tiles={pad_tiles}vs{min_tiles + g - 1}")
 
 
+def bench_wgrad_cases(report, cases, *, backend=None, measure_autotune=True):
+    """The backward's ragged contraction ``dw[g] = x_g^T @ dy_g`` — the
+    GEMM the wgrad registry kernelizes (previously only XLA's
+    ``ragged_wgrad``).  Reports the registry path's time plus the
+    xla_ragged fallback's for the same shape, so the report shows what
+    the second operation family buys."""
+    rng = np.random.default_rng(0)
+    for m, n, k, g in cases:
+        cfg = _select_config(m, k, n, g, backend, measure=measure_autotune,
+                             op="wgrad")
+        sizes = generate_group_sizes(m, g, seed=m + g)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        dy = jnp.asarray(rng.standard_normal((m, n)), jnp.bfloat16)
+        gs = jnp.asarray(sizes)
+        t_ours = time_fn(_wgrad, x, dy, gs, cfg)
+        # fallback comparison — skipped when the primary config already IS
+        # the fallback (measuring the same dispatch twice says nothing)
+        resolved = dispatch.resolve_wgrad_backend(cfg.backend)
+        t_ragged = time_fn(_wgrad, x, dy, gs,
+                           cfg.with_(backend="xla_ragged")) \
+            if (resolved != "xla_ragged"
+                and dispatch.wgrad_availability("xla_ragged")[0]) \
+            else float("nan")
+        report(f"wgrad/M{m}_N{n}_K{k}_G{g}",
+               t_ours * 1e6,
+               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"@{resolved};xla_ragged_us={t_ragged * 1e6:.1f}")
+
+
 CASES = [(m, nk, nk, g) for m in (2048, 8192) for g in (4, 8, 16, 32)
          for nk in (256, 512)]
 SMOKE_CASES = [(256, 128, 128, 4)]   # tiny: interpret-mode friendly
@@ -103,6 +140,7 @@ SMOKE_CASES = [(256, 128, 128, 4)]   # tiny: interpret-mode friendly
 
 def run(report):
     bench_cases(report, CASES, backend="xla_ragged")
+    bench_wgrad_cases(report, CASES[:4], backend="xla_ragged")
 
 
 def main() -> None:
@@ -122,10 +160,14 @@ def main() -> None:
     if args.smoke:
         # measured pool selection even on plan-consuming backends — the
         # shape is tiny, and it exercises selection + cache persistence
+        # for BOTH op families (gemm + wgrad keys)
         bench_cases(report, SMOKE_CASES, backend=args.backend,
                     measure_autotune=True)
+        bench_wgrad_cases(report, SMOKE_CASES, backend=args.backend,
+                          measure_autotune=True)
     else:
         bench_cases(report, CASES, backend=args.backend)
+        bench_wgrad_cases(report, CASES, backend=args.backend)
 
 
 if __name__ == "__main__":

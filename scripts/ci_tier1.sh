@@ -16,7 +16,34 @@ PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
 
 # Bench entry points must not rot: one tiny interpret-mode shape through
 # bench_grouped_gemm's CLI (exercises the autotuner pool selection + the
-# JSON cache write path; cache goes to a throwaway location).
+# JSON cache write path for BOTH op families — gemm and wgrad; cache goes
+# to a throwaway location).
 REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_grouped_gemm --smoke --backend pallas_interpret
+
+# Backward regression gate: jax.grad through grouped_linear on the kernel
+# path (both precisions) with a partially-filled capacity buffer — the fp8
+# VJP must keep dgrad AND wgrad padding-free and its dx tail exactly zero
+# (the unowned-row corruption this repo once shipped).
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.grouped_gemm import grouped_linear
+
+rng = np.random.default_rng(0)
+x = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+w = jnp.asarray(rng.standard_normal((3, 128, 128)), jnp.float32)
+gs = jnp.asarray([60, 0, 30], jnp.int32)          # sum=90 < 256
+
+for precision in ("fp8", "bf16"):
+    kw = {"backend": "pallas_interpret"} if precision == "fp8" else {}
+    def loss(x, w):
+        y = grouped_linear(x, w, gs, precision=precision, **kw)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert bool(jnp.isfinite(gx).all()) and bool(jnp.isfinite(gw).all()), precision
+    if precision == "fp8":
+        assert np.all(np.asarray(gx[90:]) == 0.0), "fp8 tail dx must be zero"
+    assert float(jnp.abs(gw[1]).max()) == 0.0, f"{precision}: empty-group dw"
+    print(f"grad smoke [{precision}] OK")
+EOF

@@ -9,11 +9,16 @@ Precision modes
                padding-free grouped GEMM kernel (paper);
                backward: dgrad in fp8 through the same kernel
                (dy quantized 1x128, w^T re-quantized 128x128),
-               wgrad in bf16 via ``ragged_dot_general`` over the ragged
-               contracting dim.  This mirrors the DeepSeek-V3 recipe the
-               paper builds on (wgrad highest precision).
+               wgrad in bf16 through the *wgrad registry*
+               (``dispatch.grouped_gemm_wgrad``): the padding-free
+               ragged-contraction kernel where available, XLA's
+               ``ragged_wgrad`` as the portable fallback.  All three
+               GEMMs of the step consume ONE :class:`TilePlan`.  This
+               mirrors the DeepSeek-V3 recipe the paper builds on (wgrad
+               highest precision: bf16 operands, f32 accumulation).
   * ``bf16`` — ragged_dot in bf16 both ways (numerics baseline; also the
-               portable GSPMD path the multi-pod dry-run lowers).
+               portable GSPMD path the multi-pod dry-run lowers); its
+               wgrad routes through the same registry.
 
 The group structure (``group_sizes``) is data-dependent and never padded —
 that is the paper's whole point.
@@ -21,6 +26,7 @@ that is the paper's whole point.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any
 
 import jax
@@ -43,10 +49,15 @@ def _ragged_dot(x, w, group_sizes, out_dtype):
         preferred_element_type=jnp.float32).astype(out_dtype)
 
 
-def _ragged_wgrad(x, dy, group_sizes, num_groups):
-    """dw[g] = x_g^T @ dy_g — ragged contracting dim.  compat picks
-    ``ragged_dot_general`` or the transpose-of-``ragged_dot`` fallback."""
-    return compat.ragged_wgrad(x, dy, group_sizes, num_groups=num_groups)
+def _wgrad(x, dy, group_sizes, num_groups, *, config=None, plan=None):
+    """dw[g] = x_g^T @ dy_g — ragged contracting dim, bf16 operands / f32
+    accumulation, through the wgrad dispatch registry (the padding-free
+    kernel where available; ``compat.ragged_wgrad`` is the registry's
+    ``xla_ragged`` fallback, no longer the only path)."""
+    return dispatch.grouped_gemm_wgrad(
+        x.astype(jnp.bfloat16), dy.astype(jnp.bfloat16), group_sizes,
+        num_groups=num_groups, config=config, out_dtype=jnp.float32,
+        plan=plan)
 
 
 # ---------------------------------------------------------------------------
@@ -62,7 +73,8 @@ def _grouped_linear_fp8(x, w, group_sizes, plan, config):
 def _fp8_fwd(x, w, group_sizes, plan, config):
     a8, sa = q.quantize_tilewise(x.astype(jnp.float32),
                                  backend=config.backend)
-    b8, sb = q.quantize_blockwise_batched(w.astype(jnp.float32))
+    b8, sb = q.quantize_blockwise_batched(w.astype(jnp.float32),
+                                          backend=config.backend)
     # plan-once/run-many: one TilePlan per group_sizes serves this forward
     # GEMM *and* the backward dgrad (the schedule depends only on M-side
     # raggedness, not on which weight it multiplies)
@@ -83,14 +95,16 @@ def _fp8_bwd(config, res, dy):
     d8, sd = q.quantize_tilewise(dy.astype(jnp.float32),
                                  backend=config.backend)
     wt = jnp.swapaxes(w, 1, 2)                       # [G, N, K]
-    bt8, sbt = q.quantize_blockwise_batched(wt.astype(jnp.float32))
+    bt8, sbt = q.quantize_blockwise_batched(wt.astype(jnp.float32),
+                                            backend=config.backend)
     dx = dispatch.grouped_gemm_fp8(d8, sd, bt8, sbt, group_sizes,
                                    config=config.with_(out_dtype=jnp.float32),
                                    plan=plan)
     # wgrad: bf16 ragged contraction (highest-precision operand, DeepSeek
-    # keeps wgrad un-quantized on the K axis)
-    dw = _ragged_wgrad(x.astype(jnp.bfloat16), dy.astype(jnp.bfloat16),
-                       group_sizes, num_groups)
+    # keeps wgrad un-quantized on the K axis) through the wgrad registry,
+    # reusing the SAME TilePlan as the forward and the dgrad above — the
+    # contraction schedule depends only on the routing decision
+    dw = _wgrad(x, dy, group_sizes, num_groups, config=config, plan=plan)
     return dx.astype(x.dtype), dw.astype(w.dtype), None, None
 
 
@@ -114,8 +128,11 @@ def _bf16_bwd(out_dtype, res, dy):
     wt = jnp.swapaxes(w, 1, 2)
     dx = _ragged_dot(dy.astype(jnp.bfloat16), wt.astype(jnp.bfloat16),
                      group_sizes, jnp.float32)
-    dw = _ragged_wgrad(x.astype(jnp.bfloat16), dy.astype(jnp.bfloat16),
-                       group_sizes, w.shape[0])
+    # registry-routed wgrad.  The explicit default config keeps this path
+    # auto-resolved (a pinned global backend must not turn the bf16
+    # baseline's backward into a hard kernel requirement); arbitrary
+    # model dims fall back to the tile-free xla_ragged entry
+    dw = _wgrad(x, dy, group_sizes, w.shape[0], config=KernelConfig())
     return dx.astype(x.dtype), dw.astype(w.dtype), None
 
 
@@ -134,15 +151,20 @@ def grouped_linear(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
     """Padding-free grouped linear: rows of ``x`` are grouped by
     ``group_sizes`` (concatenated, ragged); group g matmuls ``w[g]``.
 
-    x: [M, K]; w: [G, K, N]; group_sizes: [G] (sum <= M; rows beyond the
-    last group are left undefined — callers mask them).
+    x: [M, K]; w: [G, K, N]; group_sizes: [G] with ``sum <= M``.  Rows
+    beyond the last group (the unowned tail of a capacity buffer) come
+    back as defined zeros on every backend — forward AND backward: the
+    kernel's schedule sweeps the tail tiles and zero-fills them, and tail
+    rows are excluded from the wgrad contraction.  Downstream gathers /
+    scatter-adds (MoE combine, the take-VJP) are therefore safe without
+    masking, though masking remains cheap and explicit.
 
     ``config`` carries tile shapes/backend (:class:`KernelConfig`);
     ``plan`` is an optional precomputed :class:`TilePlan` — pass the same
     plan to every grouped_linear sharing ``group_sizes`` (e.g. the
     gate/up/down GEMMs of one MoE application) so the schedule is built
     once per routing decision.  Without one, the fp8 path still builds a
-    single plan per call and reuses it for the backward dgrad.
+    single plan per call and reuses it for the backward dgrad and wgrad.
     """
     if precision == "fp8":
         # explicit out_dtype > config's pinned out_dtype > x.dtype
@@ -151,6 +173,16 @@ def grouped_linear(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
             cfg = cfg.with_(out_dtype=x.dtype)
         return _grouped_linear_fp8(x, w, group_sizes, plan, cfg)
     if precision == "bf16":
+        if backend is not None and backend != "auto":
+            # the bf16 forward has exactly one implementation (ragged_dot)
+            # — honouring this request is impossible, and dropping it
+            # silently made callers think they were benchmarking a kernel
+            warnings.warn(
+                f"grouped_linear(precision='bf16') ignores "
+                f"backend={backend!r}: the bf16 path always runs "
+                "jax.lax.ragged_dot (its wgrad auto-resolves through the "
+                "dispatch registry); use precision='fp8' to select a "
+                "grouped-GEMM backend", stacklevel=2)
         # the bf16 path ignores tile shapes (ragged_dot), but a pinned
         # config out_dtype applies to every consumer, this one included
         cfg = resolve_config(config, out_dtype=out_dtype)

@@ -150,8 +150,11 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
     xs = jnp.take(x, token_of, axis=0)                      # [cap, d]
 
     if cfg.dispatch == "dense":
-        # GShard-style capacity buckets: [E_loc, cap_e, d] batched einsum
-        cap_e = -(-num_slots // e) * max(int(cfg.capacity_factor), 1)
+        # GShard-style capacity buckets: [E_loc, cap_e, d] batched einsum.
+        # Ceil of the float-scaled per-expert capacity, like _capacity —
+        # int() truncation would turn capacity_factor=1.5 into 1x and
+        # silently drop tokens the ragged path keeps
+        cap_e = max(-(-int(num_slots * cfg.capacity_factor) // e), 1)
         cap_e = (cap_e + 7) // 8 * 8
         ends = jnp.cumsum(gs)
         row = jnp.arange(cap)
@@ -189,7 +192,9 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
         h = jax.nn.silu(g) * u                              # bf16 act (I5)
         y = glin(h, params["w_down"], gs)                   # [cap, d]
 
-    # ---- combine (rows beyond `total` hold garbage -> hard-masked) -----
+    # ---- combine (rows beyond `total` are defined zeros on the kernel
+    # path, but hard-masking stays: it is cheap, explicit, and covers the
+    # dense-dispatch branch too) ----------------------------------------
     valid = jnp.arange(cap) < total
     w_flat = jnp.take(weights.reshape(-1), sel)
     contrib = jnp.where(valid[:, None],

@@ -41,11 +41,13 @@ def quantize_tilewise(x, *, backend=None):
     return kops.quantize_tilewise(x, backend=backend)
 
 
-def quantize_blockwise(w):
+def quantize_blockwise(w, *, backend=None):
     """[K, N] -> (fp8[K, N], f32[K/128, N/128])."""
-    return kops.quantize_blockwise(w)
+    return kops.quantize_blockwise(w, backend=backend)
 
 
-def quantize_blockwise_batched(w):
-    """[G, K, N] -> (fp8[G, K, N], f32[G, K/128, N/128])."""
-    return jax.vmap(kref.quantize_blockwise_ref)(w)
+def quantize_blockwise_batched(w, *, backend=None):
+    """[G, K, N] -> (fp8[G, K, N], f32[G, K/128, N/128]).  Routes through
+    the dispatch registry like the unbatched form, so a future quant
+    kernel covers both paths."""
+    return kops.quantize_blockwise_batched(w, backend=backend)

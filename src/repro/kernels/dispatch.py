@@ -35,6 +35,16 @@ Built-in backends:
 ``backend="auto"`` resolves to the first available of
 ``pallas`` > ``xla_ragged`` > ``pallas_interpret``.  ``"xla"`` is kept as
 an alias of ``"xla_ragged"`` for pre-registry callers.
+
+The module hosts a SECOND operation family: the ragged-contraction
+(wgrad) grouped GEMM ``dw[g] = x_g^T @ dy_g`` (``grouped_gemm_wgrad``,
+``register_wgrad_backend``), with ``pallas`` / ``pallas_interpret``
+(``repro.kernels.wgrad_kernel``), ``xla_ragged``
+(``compat.ragged_wgrad``) and a dense f32 ``xla_exact`` oracle.  Backend
+names are shared across families so one ``KernelConfig.backend`` rides a
+whole training step: forward and dgrad through the gemm family, wgrad
+through this one, the same :class:`~repro.kernels.plan.TilePlan` through
+all of them.
 """
 from __future__ import annotations
 
@@ -50,8 +60,9 @@ from repro.kernels.grouped_gemm_kernel import QUANT_BLOCK, gmm_pallas
 from repro.kernels.plan import (KernelConfig, TilePlan,  # noqa: F401
                                 make_tile_plan, resolve_config)
 from repro.kernels.quant_kernel import quantize_tilewise_pallas
+from repro.kernels.wgrad_kernel import gmm_pallas_wgrad
 
-# auto-resolution preference, best first
+# auto-resolution preference, best first (shared by both op families)
 AUTO_ORDER = ("pallas", "xla_ragged", "pallas_interpret")
 
 _ALIASES = {"xla": "xla_ragged"}
@@ -165,6 +176,68 @@ def backend_ignores_tiles(backend: Optional[str] = "auto") -> bool:
 
 
 # ---------------------------------------------------------------------------
+# Second operation family: ragged-contraction (wgrad) grouped GEMM
+# ---------------------------------------------------------------------------
+
+_WGRAD_REGISTRY: dict[str, BackendSpec] = {}
+
+
+def register_wgrad_backend(name: str, *, description: str,
+                           available: Callable[[], "tuple[bool, str]"],
+                           run: Callable[..., jax.Array]) -> None:
+    """Register a backend for ``grouped_gemm_wgrad`` (the ragged-
+    contraction family).  Names are shared with the gemm family so one
+    ``KernelConfig.backend`` covers a whole training step."""
+    _WGRAD_REGISTRY[name] = BackendSpec(name, description, available, run)
+
+
+def wgrad_backend_names() -> "tuple[str, ...]":
+    return tuple(_WGRAD_REGISTRY)
+
+
+def wgrad_availability(name: str) -> "tuple[bool, str]":
+    name = _ALIASES.get(name, name)
+    if name not in _WGRAD_REGISTRY:
+        raise ValueError(f"unknown wgrad backend {name!r}; "
+                         f"choose from {wgrad_backend_names()}")
+    return _WGRAD_REGISTRY[name].available()
+
+
+def resolve_wgrad_backend(backend: Optional[str] = "auto") -> str:
+    """Map a requested backend to a concrete, *available* wgrad-family
+    entry.
+
+    Gemm-family names with no wgrad counterpart (``padded_baseline``)
+    fall back to auto-resolution instead of raising: a training config
+    pins ONE backend string for the whole step, and a forward-only choice
+    must not strand the backward.  A name that exists in this family but
+    is unavailable still raises — the caller asked for that kernel.
+    """
+    if backend not in (None, "auto"):
+        backend = _ALIASES.get(backend, backend)
+        if backend in _WGRAD_REGISTRY:
+            ok, reason = _WGRAD_REGISTRY[backend].available()
+            if not ok:
+                raise BackendUnavailableError(backend, reason)
+            return backend
+        if backend not in _REGISTRY:
+            raise ValueError(f"unknown backend {backend!r}; wgrad family "
+                             f"has {wgrad_backend_names()}")
+        # gemm-only backend: fall through to auto
+    if _default_backend_override is not None \
+            and _default_backend_override in _WGRAD_REGISTRY:
+        ok, _ = _WGRAD_REGISTRY[_default_backend_override].available()
+        if ok:
+            return _default_backend_override
+    for name in AUTO_ORDER:
+        ok, _ = _WGRAD_REGISTRY[name].available()
+        if ok:
+            return name
+    raise BackendUnavailableError(
+        "auto", f"no wgrad backend is available (tried {AUTO_ORDER})")
+
+
+# ---------------------------------------------------------------------------
 # XLA implementations
 # ---------------------------------------------------------------------------
 
@@ -212,6 +285,35 @@ def gmm_xla_exact(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
         col = jnp.repeat(s_b[:, j, :], QUANT_BLOCK, axis=1)[:, :n]   # (g, n)
         acc = acc + part * s_a[:, j][:, None] * col[seg]
     return acc.astype(out_dtype)
+
+
+def wgrad_xla_ragged(x, dy, group_sizes, *, num_groups,
+                     out_dtype=jnp.float32):
+    """``compat.ragged_wgrad``: ``ragged_dot_general`` where available,
+    transpose-of-``ragged_dot`` otherwise — the historical wgrad path,
+    now the portable fallback of this family."""
+    return compat.ragged_wgrad(x, dy, group_sizes,
+                               num_groups=num_groups).astype(out_dtype)
+
+
+def wgrad_xla_exact(x, dy, group_sizes, *, num_groups,
+                    out_dtype=jnp.float32):
+    """Dense f32 oracle: one-hot group membership contracted in a single
+    einsum.  O(M*G) membership mask — test-scale only, but every term is
+    an exact f32 product, and rows beyond ``sum(group_sizes)`` have an
+    all-zero membership row (excluded by construction, not by masking
+    garbage after the fact)."""
+    m = x.shape[0]
+    gs = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(gs)
+    starts = ends - gs
+    r = jnp.arange(m, dtype=jnp.int32)
+    member = ((r[:, None] >= starts[None, :])
+              & (r[:, None] < ends[None, :])).astype(jnp.float32)  # [M, G]
+    dw = jnp.einsum("mg,mk,mn->gkn", member, x.astype(jnp.float32),
+                    dy.astype(jnp.float32),
+                    preferred_element_type=jnp.float32)
+    return dw.astype(out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -291,6 +393,56 @@ register_backend(
     run=_run_padded_baseline)
 
 
+def _run_pallas_wgrad(x, dy, gs, *, num_groups, config, plan, interpret):
+    return gmm_pallas_wgrad(x, dy, gs, num_groups=num_groups,
+                            block_m=config.block_m, block_n=config.block_n,
+                            block_k=config.block_k,
+                            out_dtype=config.out_dtype, interpret=interpret,
+                            plan=plan)
+
+
+def _run_wgrad_xla_ragged(x, dy, gs, *, num_groups, config, **_):
+    return wgrad_xla_ragged(x, dy, gs, num_groups=num_groups,
+                            out_dtype=config.out_dtype)
+
+
+def _run_wgrad_xla_exact(x, dy, gs, *, num_groups, config, **_):
+    return wgrad_xla_exact(x, dy, gs, num_groups=num_groups,
+                           out_dtype=config.out_dtype)
+
+
+def _avail_ragged_wgrad():
+    if compat.has_ragged_dot_general() or compat.has_ragged_dot():
+        return True, ""
+    return False, (f"jax {jax.__version__} has neither "
+                   "jax.lax.ragged_dot_general nor jax.lax.ragged_dot")
+
+
+register_wgrad_backend(
+    "pallas",
+    description="compiled Pallas TPU kernel: ragged-M contraction with "
+                "per-visit masked accumulation (padding-free wgrad)",
+    available=_avail_tpu,
+    run=lambda *a, **kw: _run_pallas_wgrad(*a, interpret=False, **kw))
+register_wgrad_backend(
+    "pallas_interpret",
+    description="wgrad kernel in interpret mode — CPU-verifiable, "
+                "bit-identical to 'pallas'",
+    available=_avail_always,
+    run=lambda *a, **kw: _run_pallas_wgrad(*a, interpret=True, **kw))
+register_wgrad_backend(
+    "xla_ragged",
+    description="compat.ragged_wgrad (ragged_dot_general or transposed "
+                "ragged_dot) — portable fallback",
+    available=_avail_ragged_wgrad,
+    run=_run_wgrad_xla_ragged)
+register_wgrad_backend(
+    "xla_exact",
+    description="dense one-hot f32 oracle for the ragged contraction",
+    available=_avail_always,
+    run=_run_wgrad_xla_exact)
+
+
 # ---------------------------------------------------------------------------
 # Public entry points
 # ---------------------------------------------------------------------------
@@ -340,6 +492,52 @@ def grouped_gemm(x, w, group_sizes, *, backend: Optional[str] = None,
                             num_groups=w.shape[0], config=cfg, plan=plan)
 
 
+def grouped_gemm_wgrad(x, dy, group_sizes, *,
+                       num_groups: Optional[int] = None,
+                       backend: Optional[str] = None,
+                       config: Optional[KernelConfig] = None,
+                       out_dtype=None,
+                       plan: Optional[TilePlan] = None):
+    """Ragged-contraction grouped GEMM ``dw[g] = x_g^T @ dy_g`` through
+    the wgrad registry.
+
+    x: [M, K] float; dy: [M, N] float; group_sizes: [G] int,
+    ``sum <= M`` (tail rows are excluded from the contraction).  Returns
+    [G, K, N] (default f32 — wgrad is the highest-precision GEMM of the
+    step).  ``plan`` is the routing decision's :class:`TilePlan` — the
+    same object the forward/dgrad GEMMs consumed; the schedule is
+    orientation-agnostic, so nothing is rebuilt here.
+
+    An *auto-resolved* plan backend whose tile shapes don't divide
+    (K, N) falls back to the first tile-free backend (the bf16 path calls
+    in with arbitrary model dims); an explicitly requested one raises.
+    """
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
+    if cfg.out_dtype is None:
+        cfg = cfg.with_(out_dtype=jnp.float32)
+    num_groups = num_groups if num_groups is not None \
+        else group_sizes.shape[0]
+    name = resolve_wgrad_backend(cfg.backend)
+    k, n = x.shape[1], dy.shape[1]
+    if name in PLAN_BACKENDS and not cfg.compatible(k, n):
+        explicit = cfg.backend not in (None, "auto") \
+            and _ALIASES.get(cfg.backend, cfg.backend) in _WGRAD_REGISTRY
+        if explicit:
+            cfg.validate(x.shape[0], k, n)   # raises with the shape message
+        for fallback in ("xla_ragged", "xla_exact"):
+            ok, _ = _WGRAD_REGISTRY[fallback].available()
+            if ok:
+                name = fallback
+                break
+        else:
+            raise BackendUnavailableError(
+                name, f"tile shapes (block_k={cfg.block_k}, "
+                      f"block_n={cfg.block_n}) do not divide (K={k}, N={n})"
+                      " and no tile-free wgrad backend is available")
+    return _WGRAD_REGISTRY[name].run(
+        x, dy, group_sizes, num_groups=num_groups, config=cfg, plan=plan)
+
+
 def quantize_tilewise(x, *, backend: Optional[str] = None):
     """1x128 per-tile fp8 activation quantization through the registry.
 
@@ -364,7 +562,28 @@ def quantize_tilewise(x, *, backend: Optional[str] = None):
     return _ref.quantize_tilewise_ref(x)
 
 
-def quantize_blockwise(w):
-    """128x128 weight quantization (XLA everywhere — weights are quantized
-    once per step outside the hot loop)."""
+def quantize_blockwise(w, *, backend: Optional[str] = None):
+    """128x128 weight quantization through the registry seam.
+
+    No kernel backend implements this yet (weights are quantized once per
+    step outside the hot loop, so XLA ref math is fine everywhere), but
+    resolution runs here so a future quant kernel plugs in at ONE place
+    and the batched path below inherits it.  Same refusal semantics as
+    :func:`quantize_tilewise`: auto-resolution failures fall back to ref,
+    an explicitly requested unavailable backend raises.
+    """
+    explicit = backend not in (None, "auto")
+    try:
+        resolve_backend(backend)
+    except BackendUnavailableError:
+        if explicit:
+            raise
     return _ref.quantize_blockwise_ref(w)
+
+
+def quantize_blockwise_batched(w, *, backend: Optional[str] = None):
+    """[G, K, N] -> (fp8[G, K, N], f32[G, KB, NB]) — vmap of the
+    registry-routed :func:`quantize_blockwise`, so a future quant kernel
+    covers the batched (per-expert) path automatically."""
+    return jax.vmap(
+        lambda wg: quantize_blockwise(wg, backend=backend))(w)

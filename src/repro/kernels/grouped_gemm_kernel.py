@@ -74,7 +74,8 @@ def _gmm_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,  # prefetch
                 a_ref, sa_ref, b_ref, sb_ref,                      # VMEM in
                 out_ref,                                           # VMEM out
                 acc_ref,                                           # scratch
-                *, block_m, block_n, block_k, k_steps, out_dtype):
+                *, block_m, block_n, block_k, k_steps, num_groups,
+                out_dtype):
     n_i = pl.program_id(0)
     t = pl.program_id(1)
     k_i = pl.program_id(2)
@@ -109,15 +110,25 @@ def _gmm_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,  # prefetch
     @pl.when(k_i == k_steps - 1)
     def _store():
         # Masked RMW — the two-phase overlapping-store analogue.  Rows of
-        # this tile owned by group g are [start, end); everything else is
-        # preserved from the previous (adjacent) visit's contents.
+        # this tile owned by group g are [start, end); rows owned by *no*
+        # group (>= sum(group_sizes) — the capacity-buffer tail) are
+        # zero-filled so the output is fully defined (the fp8 backward's
+        # dx feeds a scatter-add; garbage tails would corrupt real token
+        # gradients); everything else is preserved from the previous
+        # (adjacent) visit's contents.  Padding visits in the schedule
+        # sweep the tail tiles precisely so this zero-fill reaches every
+        # unowned row (see make_group_metadata).
         start = group_offsets_ref[g]
         end = group_offsets_ref[g + 1]
+        total = group_offsets_ref[num_groups]
         rows = m_tile * block_m + jax.lax.broadcasted_iota(
             jnp.int32, (block_m, block_n), 0)
-        mask = (rows >= start) & (rows < end)
+        owned = (rows >= start) & (rows < end)
+        unowned = rows >= total
         prev = out_ref[...]
-        out_ref[...] = jnp.where(mask, acc_ref[...].astype(out_dtype), prev)
+        out_ref[...] = jnp.where(
+            owned, acc_ref[...].astype(out_dtype),
+            jnp.where(unowned, jnp.zeros_like(prev), prev))
 
 
 @functools.partial(
@@ -136,7 +147,12 @@ def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
     s_a:    [M, KB]  f32      — 1x128 tile scales (KB = ceil(K/128))
     b_fp8:  [G, K, N] fp8
     s_b:    [G, KB, NB] f32   — 128x128 block scales
-    group_sizes: [G] int32, sum == M
+    group_sizes: [G] int32, sum <= M.  Rows in ``[sum(group_sizes), M)``
+            (the unowned tail of a capacity buffer) come back as DEFINED
+            zeros — the schedule's padding visits sweep the tail tiles and
+            the masked store zero-fills every row no group owns, so
+            downstream consumers (the fp8 backward's take-VJP scatter-add)
+            never see uninitialized memory.
     plan:   optional precomputed :class:`TilePlan` for this
             ``(group_sizes, M, block_m)`` — pass it to amortize the
             schedule across the several GEMMs of one routing decision
@@ -149,11 +165,19 @@ def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
     """
     m, k = a_fp8.shape
     g, k2, n = b_fp8.shape
-    assert k == k2, (k, k2)
+    if k != k2:
+        raise ValueError(
+            f"A and B disagree on K: a_fp8 is [M={m}, K={k}] but b_fp8 is "
+            f"[G={g}, K={k2}, N={n}]")
     num_groups = num_groups or g
     validate_kernel_config(m, k, n, block_m, block_n, block_k)
     kb = s_a.shape[1]
-    assert kb == (k + QUANT_BLOCK - 1) // QUANT_BLOCK
+    expected_kb = (k + QUANT_BLOCK - 1) // QUANT_BLOCK
+    if kb != expected_kb:
+        raise ValueError(
+            f"s_a has {kb} scale columns but K={k} needs "
+            f"ceil(K/{QUANT_BLOCK}) = {expected_kb} (s_a shape "
+            f"{s_a.shape}, a_fp8 shape {a_fp8.shape})")
 
     if m == 0:
         return jnp.zeros((0, n), out_dtype)
@@ -169,7 +193,7 @@ def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
 
     kernel = functools.partial(
         _gmm_kernel, block_m=block_m, block_n=block_n, block_k=block_k,
-        k_steps=k_steps, out_dtype=out_dtype)
+        k_steps=k_steps, num_groups=num_groups, out_dtype=out_dtype)
 
     def _run_kernel(group_offsets, group_ids, m_tile_ids):
         return pl.pallas_call(

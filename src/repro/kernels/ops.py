@@ -23,11 +23,17 @@ from repro.kernels.dispatch import (        # noqa: F401  (re-exports)
     gmm_xla_exact,
     grouped_gemm,
     grouped_gemm_fp8,
+    grouped_gemm_wgrad,
     make_tile_plan,
     quantize_blockwise,
+    quantize_blockwise_batched,
     quantize_tilewise,
     register_backend,
+    register_wgrad_backend,
     resolve_backend,
     resolve_config,
+    resolve_wgrad_backend,
     set_default_backend,
+    wgrad_availability,
+    wgrad_backend_names,
 )

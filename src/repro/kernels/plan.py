@@ -212,16 +212,27 @@ def make_group_metadata(group_sizes: jax.Array, m: int, block_m: int,
     Returns (group_offsets[G+1], group_ids[T], m_tile_ids[T]) where
     T = ceil(m/block_m) + num_groups - 1 is the static worst-case visit
     count: every tile is visited once, plus one extra visit per group
-    boundary that splits a tile.  Padding visits replicate the last real
-    visit — they redo an identical masked write, which is idempotent
-    (the paper's "safe overlapping write": duplicated writes of identical
-    data are harmless).
+    boundary that splits a tile.
 
-    When every group is empty (``num_real == 0``) the schedule degenerates
-    to all-zero visit ids — a valid (group 0, tile 0) visit whose masked
-    write covers no rows.  Callers that want defined output for that case
-    short-circuit on ``sum(group_sizes) == 0`` (``gmm_pallas`` returns
-    zeros).
+    Padding visits (t >= num_real) sweep the *tail tiles* — the output
+    tiles entirely beyond ``sum(group_sizes)`` that no group owns — so the
+    kernel's store can zero-fill every unowned row (rows in
+    ``[sum(group_sizes), m)`` are DEFINED zeros, not garbage; the fp8
+    backward's ``dx`` tail feeds a scatter-add and must not pollute real
+    token gradients).  The worst-case visit count always suffices: the
+    number of unused padding visits, ``T - num_real``, is at least
+    ``num_tiles - ceil(total/block_m)``, the tail-tile count.  When there
+    is no tail, padding visits clamp to the last real (group, tile) visit
+    and redo an identical masked write — idempotent (the paper's "safe
+    overlapping write").  Consumers that *accumulate* per visit instead of
+    storing (the wgrad kernel) must therefore skip duplicate visits:
+    ``(group_ids[t], m_tile_ids[t]) == (group_ids[t-1], m_tile_ids[t-1])``
+    identifies them.
+
+    When every group is empty (``num_real == 0``) every visit is a padding
+    visit pinned to group 0; the sweep covers all tiles and the kernel
+    zero-fills the whole buffer (``gmm_pallas`` still short-circuits to
+    ``jnp.zeros`` to skip the launch).
     """
     group_sizes = group_sizes.astype(jnp.int32)
     group_offsets = jnp.concatenate(
@@ -239,10 +250,10 @@ def make_group_metadata(group_sizes: jax.Array, m: int, block_m: int,
 
     visit_ends = jnp.cumsum(tiles_per)            # [G]
     t = jnp.arange(max_visits, dtype=jnp.int32)
-    # group that owns visit t (padding visits clamp to the last real one).
-    # num_real == 0 would clamp to -1 and feed searchsorted garbage — pin
-    # the whole schedule to (group 0, tile 0) instead (zero-visit schedule:
-    # the masked store owns no rows).
+    # group that owns visit t (padding visits keep the last real group's
+    # id — its row range never intersects a tail tile, so their masked
+    # store owns no rows).  num_real == 0 would clamp to -1 and feed
+    # searchsorted garbage — pin those schedules to group 0 (empty range).
     num_real = visit_ends[-1]
     t_clamped = jnp.maximum(jnp.minimum(t, num_real - 1), 0)
     group_ids = jnp.searchsorted(visit_ends, t_clamped, side="right")
@@ -252,9 +263,17 @@ def make_group_metadata(group_sizes: jax.Array, m: int, block_m: int,
     m_tile_ids = (first_tile[group_ids]
                   + (t_clamped - visits_before[group_ids])).astype(jnp.int32)
     m_tile_ids = jnp.clip(m_tile_ids, 0, max(num_tiles - 1, 0))
-    empty = num_real == 0
-    group_ids = jnp.where(empty, 0, group_ids)
-    m_tile_ids = jnp.where(empty, 0, m_tile_ids)
+    # padding visits sweep the tail tiles (entirely beyond sum(sizes)) so
+    # the kernel zero-fills them; with no tail they clamp to the last real
+    # tile and redo its idempotent masked write (see docstring)
+    total = ends[-1]
+    last_real_tile = (total + block_m - 1) // block_m - 1      # -1 if total==0
+    pad_tile = jnp.minimum(last_real_tile + 1 + (t - num_real),
+                           max(num_tiles - 1, 0))
+    m_tile_ids = jnp.where(t >= num_real,
+                           jnp.maximum(pad_tile, 0).astype(jnp.int32),
+                           m_tile_ids)
+    group_ids = jnp.where(num_real == 0, 0, group_ids)
     return group_offsets, group_ids, m_tile_ids
 
 
@@ -419,6 +438,28 @@ def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
                (a_bytes + b_bytes + c_bytes) / spec.hbm_bw)
 
 
+def estimate_cost_s_wgrad(m: int, k: int, n: int, g: int,
+                          config: KernelConfig,
+                          spec: Optional[DeviceSpec] = None) -> float:
+    """Roofline estimate of the ragged-contraction (wgrad) grouped GEMM
+    ``dw[g] = x_g^T @ dy_g`` under ``config``.  Same visit inflation as the
+    forward (the contraction walks the same M-tile schedule); operand
+    traffic differs: x is re-fetched per N step, dy per K step, and the
+    dense ``[G, K, N]`` f32 output flushes once per group."""
+    spec = spec or device_spec()
+    bm = config.block_m
+    num_tiles = -(-m // bm)
+    visits = num_tiles + max(g - 1, 0)
+    k_steps = -(-k // config.block_k)
+    n_steps = -(-n // config.block_n)
+    flops = 2.0 * visits * bm * k * n
+    x_bytes = visits * n_steps * bm * k * 2            # bf16 x per N step
+    dy_bytes = visits * k_steps * bm * n * 2           # bf16 dy per K step
+    dw_bytes = g * k * n * 4                           # f32 dw flush
+    return max(flops / spec.peak_flops,
+               (x_bytes + dy_bytes + dw_bytes) / spec.hbm_bw)
+
+
 # ---------------------------------------------------------------------------
 # Persistent autotune cache
 # ---------------------------------------------------------------------------
@@ -444,8 +485,11 @@ def _m_bucket(m: int) -> int:
 
 
 def cache_key(device_kind: str, backend: str, m: int, k: int, n: int,
-              g: int) -> str:
-    return f"{device_kind}|{backend}|M{_m_bucket(m)}|K{k}|N{n}|G{g}"
+              g: int, op: str = "gemm") -> str:
+    # the forward orientation keeps the historical key format so existing
+    # caches stay valid; other op families (wgrad) get a suffix
+    suffix = "" if op == "gemm" else f"|{op}"
+    return f"{device_kind}|{backend}|M{_m_bucket(m)}|K{k}|N{n}|G{g}{suffix}"
 
 
 def _read_cache_file(path: str) -> "dict[str, dict]":
@@ -493,22 +537,33 @@ def clear_cache_memo() -> None:
 
 def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
                        *, iters: int = 3, warmup: int = 1,
-                       seed: int = 0) -> float:
-    """Median wall seconds of one grouped GEMM under ``config`` on random
-    operands (the live-backend measurement behind pool selection)."""
+                       seed: int = 0, op: str = "gemm") -> float:
+    """Median wall seconds of one grouped GEMM (``op="gemm"``) or ragged
+    wgrad contraction (``op="wgrad"``) under ``config`` on random operands
+    (the live-backend measurement behind pool selection)."""
     import numpy as np
     from repro.kernels import dispatch, ref
 
     rng = np.random.default_rng(seed)
     sizes = rng.multinomial(m, np.full(g, 1.0 / g)).astype(np.int32)
-    a8, sa = ref.quantize_tilewise_ref(
-        jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
-    b8, sb = jax.vmap(ref.quantize_blockwise_ref)(
-        jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32))
     gs = jnp.asarray(sizes)
 
-    def run():
-        return dispatch.grouped_gemm_fp8(a8, sa, b8, sb, gs, config=config)
+    if op == "wgrad":
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        dy = jnp.asarray(rng.standard_normal((m, n)), jnp.bfloat16)
+
+        def run():
+            return dispatch.grouped_gemm_wgrad(x, dy, gs, num_groups=g,
+                                               config=config)
+    else:
+        a8, sa = ref.quantize_tilewise_ref(
+            jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
+        b8, sb = jax.vmap(ref.quantize_blockwise_ref)(
+            jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32))
+
+        def run():
+            return dispatch.grouped_gemm_fp8(a8, sa, b8, sb, gs,
+                                             config=config)
 
     for _ in range(warmup):
         jax.block_until_ready(run())
@@ -528,8 +583,15 @@ def autotune(m: int, k: int, n: int, g: int, *,
              measure: bool = True,
              max_candidates: int = 4,
              refresh: bool = False,
-             seed: int = 0) -> KernelConfig:
+             seed: int = 0,
+             op: str = "gemm") -> KernelConfig:
     """Select a ``KernelConfig`` for the shape class of (M, K, N, G).
+
+    ``op`` picks the operation family: ``"gemm"`` is the forward/dgrad
+    orientation (ragged M output rows), ``"wgrad"`` the ragged-contraction
+    orientation (``dw[g] = x_g^T @ dy_g`` — M is contracted, output is the
+    dense ``[G, K, N]``).  The two rank by different roofline terms and
+    cache under distinct keys: a routing decision tunes once per family.
 
     Pool candidates are ranked by the roofline cost model, the top
     ``max_candidates`` are measured on the live backend (skipped with
@@ -539,9 +601,12 @@ def autotune(m: int, k: int, n: int, g: int, *,
     """
     from repro.kernels import dispatch
 
-    resolved = dispatch.resolve_backend(backend)
+    if op not in ("gemm", "wgrad"):
+        raise ValueError(f"unknown autotune op {op!r}; use 'gemm' or 'wgrad'")
+    resolved = (dispatch.resolve_wgrad_backend(backend) if op == "wgrad"
+                else dispatch.resolve_backend(backend))
     kind = _device_kind()
-    key = cache_key(kind, resolved, m, k, n, g)
+    key = cache_key(kind, resolved, m, k, n, g, op=op)
     entries = load_cache(cache_path)
     if not refresh and key in entries:
         entry = entries[key]
@@ -552,26 +617,29 @@ def autotune(m: int, k: int, n: int, g: int, *,
         if entry.get("source") == "measured" or not wants_measured:
             return KernelConfig.from_dict(entry["config"])
 
-    cands = candidate_pool(k, n, pool)
+    # wgrad's output is never transposed — forward/dgrad legality demands
+    # both orientations, wgrad only its own
+    cands = candidate_pool(k, n, pool,
+                           require_transposable=(op != "wgrad"))
     if not cands:
         raise ValueError(f"no pool candidate is legal for K={k}, N={n}")
     spec = device_spec(kind)
-    ranked = sorted(cands,
-                    key=lambda c: estimate_cost_s(m, k, n, g, c, spec))
+    cost = estimate_cost_s_wgrad if op == "wgrad" else estimate_cost_s
+    ranked = sorted(cands, key=lambda c: cost(m, k, n, g, c, spec))
     ranked = [c.with_(backend=resolved) for c in ranked]
 
     if measure and not dispatch.backend_ignores_tiles(resolved):
-        timed = [(_measure_candidate(c, m, k, n, g, seed=seed), c)
+        timed = [(_measure_candidate(c, m, k, n, g, seed=seed, op=op), c)
                  for c in ranked[:max_candidates]]
         best_s, best = min(timed, key=lambda tc: tc[0])
         source = "measured"
     else:
         # tile-shape-independent backends (the XLA paths) or measure=False:
         # cost-model order is the selection
-        best, best_s = ranked[0], estimate_cost_s(m, k, n, g, ranked[0], spec)
+        best, best_s = ranked[0], cost(m, k, n, g, ranked[0], spec)
         source = "cost_model"
 
     entries[key] = {"config": best.to_dict(), "seconds": best_s,
-                    "source": source, "pool_size": len(cands)}
+                    "source": source, "pool_size": len(cands), "op": op}
     save_cache(entries, cache_path)
     return best

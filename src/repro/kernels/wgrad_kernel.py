@@ -1,0 +1,184 @@
+"""Ragged-contraction (wgrad) grouped GEMM — Pallas TPU kernel.
+
+``dw[g] = x_g^T @ dy_g`` where the *contraction* dimension is the ragged M
+axis: groups own contiguous, dynamically-sized row ranges of the
+concatenated token buffer, and each group's rows contract against the same
+rows of the upstream gradient.  This is the last GEMM of the fp8 training
+step (paper's training workload) and the ROADMAP's "N-side raggedness"
+item — before this kernel the backward detoured through XLA's
+``ragged_dot_general`` fallback (``compat.ragged_wgrad``).
+
+The forward kernel's insight transfers unchanged: the *schedule* depends
+only on ``(group_sizes, M, block_m)``, so the same :class:`TilePlan` built
+once per routing decision serves gate/up/down forwards, both dgrads, and
+every wgrad.  What changes is the role of a visit:
+
+  * the grid walks ``(K tiles, N tiles, visits)`` with the visit axis
+    innermost; visit t touches M-tile ``m_tile_ids[t]`` on behalf of group
+    ``group_ids[t]``;
+  * instead of a masked *store* of an output row tile, each visit performs
+    a masked *accumulation* into the group's dense ``[block_k, block_n]``
+    output tile: rows of the M-tile owned by other groups (or beyond
+    ``sum(group_sizes)``) are zeroed before the transposed dot, so
+    boundary tiles contribute exactly their owned rows;
+  * consecutive visits of one group share the output block (``group_ids``
+    is non-decreasing), so Pallas keeps it resident in VMEM across the
+    group's M-tiles and flushes once per group — the accumulation analogue
+    of the forward's "safe overlapping write";
+  * padding visits either sweep tail tiles (no owned rows -> zero
+    contribution) or duplicate the last real visit (detected by comparing
+    ``(group_ids, m_tile_ids)`` against the previous visit and skipped —
+    accumulation, unlike the forward's store, is not idempotent).
+
+Groups that receive zero rows are never visited, so their output blocks
+are undefined on exit; a ``jnp.where`` epilogue pins them to the
+mathematically correct zeros.
+
+Operands arrive un-quantized (bf16/f32): DeepSeek-V3 (and the paper) keep
+wgrad at the highest precision of the three training GEMMs, so there is no
+scale bookkeeping here — just f32 accumulation of bf16 products, matching
+``compat.ragged_wgrad`` numerics.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro import compat
+from repro.kernels.plan import KernelConfig, TilePlan, make_tile_plan
+
+
+def _gmm_wgrad_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
+                      x_ref, dy_ref,                     # VMEM in
+                      out_ref,                           # VMEM out
+                      acc_ref,                           # scratch
+                      *, block_m, block_k, block_n, max_visits, out_dtype):
+    t = pl.program_id(2)
+
+    g = group_ids_ref[t]
+    m_tile = m_tile_ids_ref[t]
+    prev_g = group_ids_ref[jnp.maximum(t - 1, 0)]
+    prev_tile = m_tile_ids_ref[jnp.maximum(t - 1, 0)]
+    next_g = group_ids_ref[jnp.minimum(t + 1, max_visits - 1)]
+
+    # visit-run boundaries: group_ids is non-decreasing, so a group's
+    # visits are adjacent and its output block stays resident between them
+    first = (t == 0) | (g != prev_g)
+    last = (t == max_visits - 1) | (next_g != g)
+    # padding visits with no tail tiles to sweep replicate the last real
+    # visit; re-accumulating it would double-count — skip duplicates
+    dup = (t > 0) & (g == prev_g) & (m_tile == prev_tile)
+
+    @pl.when(first)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    start = group_offsets_ref[g]
+    end = group_offsets_ref[g + 1]
+    rows = m_tile * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, 1), 0)
+    owned = (rows >= start) & (rows < end) & jnp.logical_not(dup)
+
+    # mask BOTH operands: rows beyond M (the block-padded tail of the last
+    # tile) or beyond sum(group_sizes) may hold garbage/NaN, and 0 * NaN
+    # would still poison the accumulation
+    x = jnp.where(owned, x_ref[...].astype(jnp.float32), 0.0)    # (bm, bk)
+    dy = jnp.where(owned, dy_ref[...].astype(jnp.float32), 0.0)  # (bm, bn)
+    acc_ref[...] += jax.lax.dot_general(
+        x, dy, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _store():
+        out_ref[0] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "block_m", "block_n", "block_k",
+                     "out_dtype", "interpret"))
+def gmm_pallas_wgrad(x: jax.Array, dy: jax.Array, group_sizes: jax.Array, *,
+                     num_groups: int | None = None,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128,
+                     out_dtype: Any = jnp.float32, interpret: bool = False,
+                     plan: TilePlan | None = None):
+    """Padding-free ragged-contraction grouped GEMM (wgrad orientation).
+
+    x:  [M, K] float — concatenated groups, arbitrary (ragged) M^g,
+        ``sum(group_sizes) <= M`` (rows beyond the last group, and any
+        garbage they hold, are excluded from the contraction)
+    dy: [M, N] float — upstream gradient over the same row buffer
+    group_sizes: [G] int32
+    plan: optional precomputed :class:`TilePlan` for this
+        ``(group_sizes, M)`` — the SAME plan the forward/dgrad GEMMs of
+        this routing decision used (the schedule is orientation-agnostic).
+        When given, its ``block_m`` governs the contraction tiling and the
+        ``block_m`` argument is ignored.  The usual TilePlan contract
+        applies: it must have been built from these ``group_sizes``.
+    returns [G, K, N] out_dtype with ``dw[g] = x_g^T @ dy_g`` in f32
+        accumulation; groups with zero rows come back exactly zero.
+    """
+    m, k = x.shape
+    m2, n = dy.shape
+    if m != m2:
+        raise ValueError(
+            f"x and dy disagree on M: x is [M={m}, K={k}] but dy is "
+            f"[M={m2}, N={n}]")
+    num_groups = num_groups or group_sizes.shape[0]
+    if plan is not None:
+        block_m = plan.block_m
+        plan.check_against(m, block_m, num_groups)
+    KernelConfig(block_m=block_m, block_n=block_n,
+                 block_k=block_k).validate(m, k, n)
+
+    if m == 0:
+        return jnp.zeros((num_groups, k, n), out_dtype)
+
+    if plan is None:
+        plan = make_tile_plan(group_sizes, m, block_m=block_m,
+                              num_groups=num_groups)
+    grid = (k // block_k, n // block_n, plan.max_visits)
+
+    kernel = functools.partial(
+        _gmm_wgrad_kernel, block_m=block_m, block_k=block_k,
+        block_n=block_n, max_visits=plan.max_visits, out_dtype=out_dtype)
+
+    def _run_kernel(group_offsets, group_ids, m_tile_ids):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=3,
+                grid=grid,
+                in_specs=[
+                    # x tile: globally block-aligned copy of the visit's
+                    # M-tile, K-slice
+                    pl.BlockSpec((block_m, block_k),
+                                 lambda k_i, n_i, t, go, gi, mi: (mi[t], k_i)),
+                    # dy tile: same M-tile, N-slice
+                    pl.BlockSpec((block_m, block_n),
+                                 lambda k_i, n_i, t, go, gi, mi: (mi[t], n_i)),
+                ],
+                out_specs=pl.BlockSpec(
+                    (1, block_k, block_n),
+                    lambda k_i, n_i, t, go, gi, mi: (gi[t], k_i, n_i)),
+                scratch_shapes=[pltpu.VMEM((block_k, block_n), jnp.float32)],
+            ),
+            out_shape=jax.ShapeDtypeStruct((num_groups, k, n), out_dtype),
+            compiler_params=compat.tpu_compiler_params(
+                dimension_semantics=("parallel", "parallel", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(group_offsets, group_ids, m_tile_ids, x, dy)
+
+    dw = _run_kernel(plan.group_offsets, plan.group_ids, plan.m_tile_ids)
+    # empty groups are never visited, so their output blocks are undefined
+    # on exit — pin them to the mathematically correct zeros
+    nonempty = (plan.group_offsets[1:] - plan.group_offsets[:-1]) > 0
+    return jnp.where(nonempty[:, None, None], dw,
+                     jnp.zeros((), out_dtype))

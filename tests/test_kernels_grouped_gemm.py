@@ -108,13 +108,21 @@ def test_bitwise_equivalence_vs_padded_baseline():
         "padding-free kernel must be bitwise-identical to padded baseline"
 
 
-def test_unwritten_rows_do_not_pollute():
-    """Rows beyond sum(group_sizes) are undefined — but valid rows must be
-    exactly right even when the buffer is larger (MoE capacity buffers)."""
-    sizes = [60, 30]
+@pytest.mark.parametrize("sizes,m_buf", [
+    ([60, 30], 256),        # tail spans a partially-owned tile + 1 full tile
+    ([100, 0, 37], 512),    # empty group; tail spans several whole tiles
+    ([128], 384),           # tail starts exactly on a tile boundary
+    ([5], 128),             # single sub-block group
+])
+def test_unowned_rows_are_exactly_zero(sizes, m_buf):
+    """Rows beyond sum(group_sizes) are DEFINED zeros (the schedule's
+    padding visits sweep the tail tiles and the masked store zero-fills
+    every row no group owns); valid rows stay exactly right.  Pre-fix,
+    those rows were uninitialized memory (NaN in interpret mode) and the
+    fp8 backward scatter-added them into real token gradients."""
     rng = np.random.default_rng(5)
     g = len(sizes)
-    m_buf = 256                       # capacity > sum(sizes) = 90
+    total = int(np.sum(sizes))
     a = jnp.asarray(rng.standard_normal((m_buf, 128)), jnp.float32)
     b = jnp.asarray(rng.standard_normal((g, 128, 128)), jnp.float32)
     a8, sa = ref.quantize_tilewise_ref(a)
@@ -123,9 +131,12 @@ def test_unwritten_rows_do_not_pollute():
     out = gmm_pallas(a8, sa, b8, sb, gs, out_dtype=jnp.float32,
                      interpret=True)
     oracle = ref.grouped_gemm_blockscaled_ref(
-        a8[:90], sa[:90], b8, sb, sizes, out_dtype=jnp.float32)
-    np.testing.assert_allclose(np.asarray(out[:90]), np.asarray(oracle),
+        a8[:total], sa[:total], b8, sb, sizes, out_dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(out[:total]), np.asarray(oracle),
                                rtol=1e-5, atol=1e-4)
+    tail = np.asarray(out[total:])
+    assert np.all(tail == 0.0), \
+        f"unowned rows must be zero, got {tail[np.nonzero(tail)][:4]}"
 
 
 def test_group_metadata():
@@ -151,6 +162,19 @@ def test_validate_config_rejects_bad_blocks():
         validate_kernel_config(100, 100, 128, 128, 128, 128)  # K % block_k
     with pytest.raises(ValueError):
         validate_kernel_config(100, 128, 100, 128, 128, 128)  # N % block_n
+
+
+def test_operand_shape_mismatches_raise_value_error():
+    """Shape guards survive ``python -O`` (ValueError, not assert)."""
+    rng = np.random.default_rng(21)
+    a8, sa, b8, sb, gs = _quantize_inputs(rng, [64], 128, 128)
+    b8_bad = jnp.zeros((1, 256, 128), b8.dtype)        # K mismatch
+    sb_bad = jnp.zeros((1, 2, 1), sb.dtype)
+    with pytest.raises(ValueError, match="disagree on K"):
+        gmm_pallas(a8, sa, b8_bad, sb_bad, gs, interpret=True)
+    sa_bad = jnp.zeros((64, 3), sa.dtype)              # wrong scale cols
+    with pytest.raises(ValueError, match="scale columns"):
+        gmm_pallas(a8, sa_bad, b8, sb, gs, interpret=True)
 
 
 def test_xla_backends_match_oracle():

@@ -78,6 +78,36 @@ def test_capacity_helper_bounds():
         _capacity(10000, 8, 1.0) == 10000
 
 
+def test_dense_dispatch_fractional_capacity_keeps_ragged_tokens():
+    """REGRESSION: the dense (GShard-style) dispatch truncated
+    ``capacity_factor`` with ``int()``, so 1.5 became 1x and tokens the
+    ragged path keeps were silently dropped.  With 12 of 32 tokens routed
+    to one expert and capacity_factor=1.5 (per-expert cap 12, truncated
+    cap 8), dense and ragged dispatch must now agree."""
+    import dataclasses
+    cfg = _cfg(num_experts=4, top_k=1, capacity_factor=1.5,
+               num_shared_experts=0)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    # one-hot tokens turn the router matrix into per-token logits: token t
+    # goes to assign[t]
+    assign = np.array([0] * 12 + [1] * 7 + [2] * 7 + [3] * 6)
+    router = np.zeros((cfg.d_model, 4), np.float32)
+    router[np.arange(32), assign] = 10.0
+    params = dict(params, router=jnp.asarray(router))
+    x = jnp.eye(32, cfg.d_model, dtype=jnp.float32)
+
+    y_ragged, aux_r = moe_apply(params, x, cfg)
+    y_dense, aux_d = moe_apply(
+        params, x, dataclasses.replace(cfg, dispatch="dense"))
+    # every expert-0 token must survive the dense capacity bucket
+    # (pre-fix, 4 of the 12 came back as zero rows)
+    e0_norms = np.linalg.norm(np.asarray(y_dense[:12], np.float32), axis=1)
+    assert np.all(e0_norms > 0), f"dense dispatch dropped tokens: {e0_norms}"
+    np.testing.assert_allclose(np.asarray(y_dense, np.float32),
+                               np.asarray(y_ragged, np.float32),
+                               rtol=5e-2, atol=5e-2)
+
+
 def test_ep_size_selection():
     assert ep_size_for(_cfg(num_experts=64), 16) == 16
     assert ep_size_for(_cfg(num_experts=60), 16) == 1   # qwen2-moe -> TP

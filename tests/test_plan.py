@@ -139,9 +139,26 @@ def test_metadata_all_groups_empty_is_safe():
     gs = jnp.zeros((4,), jnp.int32)
     offs, gids, tids = make_group_metadata(gs, 256, 128, 4)
     assert np.asarray(offs).tolist() == [0] * 5
-    # zero-visit schedule: every visit pinned to (group 0, tile 0),
-    # nothing negative / out of range
-    assert np.all(np.asarray(gids) == 0) and np.all(np.asarray(tids) == 0)
+    # zero real visits: every visit is a padding visit pinned to group 0
+    # (whose row range is empty) sweeping the tail tiles so the kernel
+    # zero-fills the whole buffer; nothing negative / out of range
+    assert np.all(np.asarray(gids) == 0)
+    tids = np.asarray(tids)
+    assert np.all((tids >= 0) & (tids < 2))
+    # the sweep covers every tile (both tiles of the 256-row buffer)
+    assert set(tids.tolist()) == {0, 1}
+
+
+def test_metadata_padding_visits_sweep_tail_tiles():
+    """sum(group_sizes) < M: the padding visits walk the tiles beyond the
+    last owned row (so the kernel's store zero-fills them) instead of
+    replicating the last real visit."""
+    gs = jnp.asarray([60, 30], jnp.int32)         # total=90, 2 tiles of 128
+    offs, gids, tids = make_group_metadata(gs, 256, 128, 2)
+    real = [(int(g), int(t)) for g, t in zip(gids, tids)]
+    # real visits: both groups in tile 0; the one padding visit covers
+    # tail tile 1 (keeping the last real group id — empty range there)
+    assert real == [(0, 0), (1, 0), (1, 1)]
 
 
 def test_metadata_m_zero_is_safe():
@@ -409,6 +426,29 @@ def test_quantize_tilewise_explicit_unavailable_still_raises(monkeypatch):
     monkeypatch.setattr(compat, "has_tpu", lambda: False)
     with pytest.raises(dispatch.BackendUnavailableError):
         dispatch.quantize_tilewise(jnp.ones((8, 128)), backend="pallas")
+
+
+def test_quantize_blockwise_batched_routes_through_dispatch(monkeypatch):
+    """Satellite: the batched (per-expert) weight quantization goes
+    through the registry seam like the unbatched form — a future quant
+    kernel covers both — with the same refusal semantics."""
+    from repro import compat
+    from repro.core import quantization as q
+    w = jnp.ones((2, 128, 128), jnp.float32)
+    q8, s = q.quantize_blockwise_batched(w)
+    qr, sr = jax.vmap(ref.quantize_blockwise_ref)(w)
+    np.testing.assert_array_equal(np.asarray(q8, np.float32),
+                                  np.asarray(qr, np.float32))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(sr))
+    monkeypatch.setattr(compat, "has_tpu", lambda: False)
+    with pytest.raises(dispatch.BackendUnavailableError):
+        q.quantize_blockwise_batched(w, backend="pallas")
+    # auto-resolution failure still serves ref (never refuses pure quant)
+    dispatch.set_default_backend("pallas")
+    try:
+        q.quantize_blockwise_batched(w)        # must not raise
+    finally:
+        dispatch.set_default_backend(None)
 
 
 def test_explicit_auto_escapes_pinned_backend(monkeypatch):

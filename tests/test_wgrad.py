@@ -1,0 +1,289 @@
+"""Ragged-contraction (wgrad) grouped GEMM subsystem: the Pallas kernel
+vs the xla_exact oracle over ragged shapes (empty groups, sum < M), the
+wgrad dispatch family's resolution/fallback semantics, plan reuse across
+forward + dgrad + wgrad, and the wgrad-orientation autotuner."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core.grouped_gemm import grouped_linear
+from repro.kernels import dispatch
+from repro.kernels import plan as plan_mod
+from repro.kernels.plan import KernelConfig, make_tile_plan
+from repro.kernels.wgrad_kernel import gmm_pallas_wgrad
+
+
+def _inputs(sizes, m_buf, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m_buf, k)), jnp.bfloat16)
+    dy = jnp.asarray(rng.standard_normal((m_buf, n)), jnp.bfloat16)
+    return x, dy, jnp.asarray(sizes, jnp.int32)
+
+
+# (sizes, m_buf, K, N): ragged, empty groups, sum < M (capacity tails),
+# sub-block groups, exact multiples
+CASES = [
+    ([128, 128], 256, 128, 128),
+    ([100, 0, 37, 163], 300, 256, 256),
+    ([60, 30], 256, 128, 128),              # sum=90 << m_buf
+    ([1, 1, 1, 1], 64, 128, 256),
+    ([0, 0, 512], 512, 128, 384),
+    ([5, 250, 3, 127, 129], 600, 384, 128),
+    ([0, 0, 0], 128, 128, 128),             # every group empty
+]
+
+
+@pytest.mark.parametrize("sizes,m_buf,k,n", CASES)
+def test_wgrad_kernel_matches_exact_oracle(sizes, m_buf, k, n):
+    x, dy, gs = _inputs(sizes, m_buf, k, n, seed=sum(sizes) + m_buf)
+    got = gmm_pallas_wgrad(x, dy, gs, interpret=True)
+    want = dispatch.wgrad_xla_exact(x, dy, gs, num_groups=len(sizes))
+    assert got.shape == (len(sizes), k, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("sizes,m_buf,k,n", CASES[:3])
+def test_wgrad_xla_ragged_matches_exact_oracle(sizes, m_buf, k, n):
+    if not dispatch.wgrad_availability("xla_ragged")[0]:
+        pytest.skip("no ragged wgrad in this jax")
+    x, dy, gs = _inputs(sizes, m_buf, k, n, seed=1)
+    got = dispatch.wgrad_xla_ragged(x, dy, gs, num_groups=len(sizes))
+    want = dispatch.wgrad_xla_exact(x, dy, gs, num_groups=len(sizes))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_wgrad_empty_groups_exactly_zero():
+    x, dy, gs = _inputs([100, 0, 37, 163], 300, 256, 128, seed=2)
+    dw = gmm_pallas_wgrad(x, dy, gs, interpret=True)
+    assert float(jnp.abs(dw[1]).max()) == 0.0
+    assert float(jnp.abs(dw[0]).max()) > 0.0
+
+
+def test_wgrad_tail_rows_excluded_even_when_nan():
+    """Rows beyond sum(group_sizes) must not leak into the contraction —
+    even when they hold NaN (the pre-fix forward left exactly that in dx
+    tails, and capacity buffers carry arbitrary garbage)."""
+    x, dy, gs = _inputs([60, 30], 256, 128, 128, seed=3)
+    x_nan = x.at[90:].set(jnp.nan)
+    dy_nan = dy.at[90:].set(jnp.nan)
+    dw = gmm_pallas_wgrad(x_nan, dy_nan, gs, interpret=True)
+    want = dispatch.wgrad_xla_exact(x[:90], dy[:90], gs, num_groups=2)
+    assert bool(jnp.isfinite(dw).all())
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("block_m", [64, 128, 256])
+@pytest.mark.parametrize("block_k,block_n", [(128, 128), (128, 256)])
+def test_wgrad_block_shape_sweep(block_m, block_k, block_n):
+    x, dy, gs = _inputs([97, 31, 0, 200], 384, 256, 256, seed=7)
+    got = gmm_pallas_wgrad(x, dy, gs, block_m=block_m, block_k=block_k,
+                           block_n=block_n, interpret=True)
+    want = dispatch.wgrad_xla_exact(x, dy, gs, num_groups=4)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_wgrad_precomputed_plan_bitwise_equals_plan_free():
+    sizes = [100, 0, 37, 163]
+    x, dy, gs = _inputs(sizes, 300, 256, 128, seed=11)
+    plan = make_tile_plan(gs, 300, block_m=128)
+    free = gmm_pallas_wgrad(x, dy, gs, interpret=True)
+    planned = gmm_pallas_wgrad(x, dy, gs, interpret=True, plan=plan)
+    np.testing.assert_array_equal(np.asarray(free), np.asarray(planned))
+
+
+def test_wgrad_plan_governs_block_m():
+    """A plan's block_m wins over the kwarg: the schedule IS the tiling."""
+    sizes = [100, 44]
+    x, dy, gs = _inputs(sizes, 144, 128, 128, seed=13)
+    plan64 = make_tile_plan(gs, 144, block_m=64)
+    got = gmm_pallas_wgrad(x, dy, gs, block_m=128, interpret=True,
+                           plan=plan64)
+    want = dispatch.wgrad_xla_exact(x, dy, gs, num_groups=2)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_wgrad_plan_mismatch_rejected():
+    x, dy, gs = _inputs([64, 64], 128, 128, 128)
+    plan = make_tile_plan(gs, 256, block_m=128)        # wrong m
+    with pytest.raises(ValueError, match="TilePlan built for"):
+        gmm_pallas_wgrad(x, dy, gs, interpret=True, plan=plan)
+
+
+def test_wgrad_m_zero_returns_zeros():
+    x, dy, gs = _inputs([0], 0, 128, 128)
+    dw = gmm_pallas_wgrad(x, dy, gs, interpret=True)
+    assert dw.shape == (1, 128, 128)
+    assert np.all(np.asarray(dw) == 0.0)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch family
+# ---------------------------------------------------------------------------
+
+def test_wgrad_registry_names_and_matrix():
+    names = dispatch.wgrad_backend_names()
+    for expected in ("pallas", "pallas_interpret", "xla_ragged",
+                     "xla_exact"):
+        assert expected in names
+    ok, _ = dispatch.wgrad_availability("pallas_interpret")
+    assert ok
+    ok, _ = dispatch.wgrad_availability("xla_exact")
+    assert ok
+
+
+def test_wgrad_dispatch_entry_routes_and_defaults_f32():
+    x, dy, gs = _inputs([40, 24], 64, 128, 128, seed=17)
+    dw = dispatch.grouped_gemm_wgrad(x, dy, gs,
+                                     backend="pallas_interpret")
+    assert dw.dtype == jnp.float32
+    want = dispatch.wgrad_xla_exact(x, dy, gs, num_groups=2)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_wgrad_gemm_only_backend_falls_back_to_auto():
+    """padded_baseline exists only in the gemm family — a training config
+    pinning it must not strand the backward."""
+    x, dy, gs = _inputs([40, 24], 64, 128, 128, seed=19)
+    dw = dispatch.grouped_gemm_wgrad(x, dy, gs, backend="padded_baseline")
+    assert dw.shape == (2, 128, 128)
+    with pytest.raises(ValueError, match="unknown backend"):
+        dispatch.grouped_gemm_wgrad(x, dy, gs, backend="no_such_backend")
+
+
+def test_wgrad_incompatible_dims_fall_back_when_auto():
+    """Auto-resolved plan backends with tile shapes that don't divide
+    (K, N) fall back to a tile-free entry (the bf16 path calls in with
+    arbitrary model dims); an explicit request raises."""
+    x = jnp.ones((16, 100), jnp.bfloat16)
+    dy = jnp.ones((16, 60), jnp.bfloat16)
+    gs = jnp.asarray([10, 6], jnp.int32)
+    dw = dispatch.grouped_gemm_wgrad(x, dy, gs)        # must not raise
+    assert dw.shape == (2, 100, 60)
+    with pytest.raises(ValueError, match="block_k"):
+        dispatch.grouped_gemm_wgrad(x, dy, gs, backend="pallas_interpret")
+
+
+def test_wgrad_explicit_unavailable_raises(monkeypatch):
+    from repro import compat
+    monkeypatch.setattr(compat, "has_tpu", lambda: False)
+    x, dy, gs = _inputs([8], 8, 128, 128)
+    with pytest.raises(dispatch.BackendUnavailableError):
+        dispatch.grouped_gemm_wgrad(x, dy, gs, backend="pallas")
+
+
+# ---------------------------------------------------------------------------
+# _fp8_bwd through the registry: oracle-pinned over ragged shapes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes,m_buf", [([40, 0, 57], 97),
+                                         ([60, 30], 256),
+                                         ([0, 0, 64], 128)])
+def test_fp8_bwd_wgrad_pinned_to_exact_oracle(sizes, m_buf):
+    """The grouped_linear fp8 backward's dw, computed through the wgrad
+    registry's kernel, must agree with the xla_exact oracle backend over
+    ragged shapes including empty groups and sum(group_sizes) < M."""
+    rng = np.random.default_rng(sum(sizes))
+    k = n = 128
+    x = jnp.asarray(rng.standard_normal((m_buf, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((len(sizes), k, n)), jnp.float32)
+    gs = jnp.asarray(sizes, jnp.int32)
+
+    def gw(backend):
+        def loss(w):
+            y = grouped_linear(x, w, gs, precision="fp8", backend=backend)
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+        return jax.grad(loss)(w)
+
+    gw_pal = gw("pallas_interpret")
+    gw_ora = gw("xla_exact")
+    assert bool(jnp.isfinite(gw_pal).all())
+    np.testing.assert_allclose(np.asarray(gw_pal), np.asarray(gw_ora),
+                               rtol=5e-2, atol=5e-1)
+
+
+def test_one_tile_plan_serves_forward_dgrad_and_wgrad(monkeypatch):
+    """Build-count pin: one grouped_linear fp8 forward+backward on a plan
+    backend builds group metadata EXACTLY once — the single TilePlan is
+    consumed by the forward GEMM, the dgrad, and the wgrad kernel."""
+    rng = np.random.default_rng(23)
+    x = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 128, 128)), jnp.float32)
+    gs = jnp.asarray([60, 0, 30], jnp.int32)
+
+    calls = []
+    inner = plan_mod.make_group_metadata
+
+    def counting(*a, **kw):
+        calls.append(a)
+        return inner(*a, **kw)
+
+    monkeypatch.setattr(plan_mod, "make_group_metadata", counting)
+
+    def loss(x, w):
+        y = grouped_linear(x, w, gs, precision="fp8",
+                           backend="pallas_interpret")
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    jax.grad(loss, argnums=(0, 1))(x, w)
+    assert len(calls) == 1, \
+        f"expected one metadata build for fwd+dgrad+wgrad, saw {len(calls)}"
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: wgrad orientation
+# ---------------------------------------------------------------------------
+
+def test_autotune_wgrad_caches_under_distinct_key(tmp_path):
+    cache = str(tmp_path / "c.json")
+    cfg_g = plan_mod.autotune(256, 128, 128, 4, backend="pallas_interpret",
+                              cache_path=cache, measure=False)
+    cfg_w = plan_mod.autotune(256, 128, 128, 4, backend="pallas_interpret",
+                              cache_path=cache, measure=False, op="wgrad")
+    entries = plan_mod.load_cache(cache)
+    assert len(entries) == 2
+    key_w = plan_mod.cache_key(plan_mod._device_kind(), "pallas_interpret",
+                               256, 128, 128, 4, op="wgrad")
+    assert key_w in entries and entries[key_w]["op"] == "wgrad"
+    # and the wgrad entry reloads identically
+    plan_mod.clear_cache_memo()
+    again = plan_mod.autotune(256, 128, 128, 4, backend="pallas_interpret",
+                              cache_path=cache, measure=False, op="wgrad")
+    assert again == cfg_w
+
+
+def test_autotune_wgrad_measures_the_wgrad_dispatch(tmp_path, monkeypatch):
+    cache = str(tmp_path / "c.json")
+    seen_ops = []
+    real = plan_mod._measure_candidate
+
+    def spying(*a, **kw):
+        seen_ops.append(kw.get("op", "gemm"))
+        return real(*a, iters=1, warmup=0,
+                    **{k: v for k, v in kw.items()
+                       if k not in ("iters", "warmup")})
+
+    monkeypatch.setattr(plan_mod, "_measure_candidate", spying)
+    plan_mod.autotune(256, 128, 128, 4, backend="pallas_interpret",
+                      cache_path=cache, max_candidates=1, op="wgrad")
+    assert seen_ops and all(op == "wgrad" for op in seen_ops)
+
+
+def test_autotune_rejects_unknown_op():
+    with pytest.raises(ValueError, match="unknown autotune op"):
+        plan_mod.autotune(256, 128, 128, 4, op="dgrad")
+
+
+def test_wgrad_pool_skips_transposability_requirement():
+    """wgrad never transposes its output: for (K=128, N=256) the bn=256
+    entries are wgrad-legal even though the fwd/dgrad pool rejects them."""
+    fwd = plan_mod.candidate_pool(128, 256)
+    assert all(c.block_n == 128 for c in fwd)
+    wg = plan_mod.candidate_pool(128, 256, require_transposable=False)
+    assert any(c.block_n == 256 for c in wg)
