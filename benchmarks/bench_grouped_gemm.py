@@ -61,6 +61,11 @@ def _wgrad(x, dy, gs, config):
     return dispatch.grouped_gemm_wgrad(x, dy, gs, config=config)
 
 
+@functools.partial(jax.jit, static_argnames=("config",))
+def _wgrad_fp8(x8, sx, d8, sd, gs, config):
+    return dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs, config=config)
+
+
 def _select_config(m, k, n, g, backend, *, measure, op="gemm"):
     """Tile-shape selection for one case: an installed pin
     (``benchmarks.run --pin-config`` / ``plan.set_default_config``) wins;
@@ -133,6 +138,39 @@ def bench_wgrad_cases(report, cases, *, backend=None, measure_autotune=True):
                f"@{resolved};xla_ragged_us={t_ragged * 1e6:.1f}")
 
 
+def bench_wgrad_fp8_cases(report, cases, *, backend=None,
+                          measure_autotune=True):
+    """The all-fp8 step's wgrad (arXiv 2505.20524): same ragged
+    contraction, fp8 operands + 1x128 tile scales dequantized per visit.
+    Reports the fp8 registry path's time plus the bf16 wgrad's for the
+    same shape — the delta is what halving the contraction's operand
+    bytes buys (and costs in per-visit rescale VPU work)."""
+    rng = np.random.default_rng(0)
+    for m, n, k, g in cases:
+        cfg = _select_config(m, k, n, g, backend, measure=measure_autotune,
+                             op="wgrad_fp8")
+        # the bf16 baseline times under ITS OWN tuned tiles — timing it
+        # under the fp8-tuned config would conflate tile-shape choice
+        # with operand precision in the reported delta
+        cfg_bf16 = _select_config(m, k, n, g, backend,
+                                  measure=measure_autotune, op="wgrad")
+        sizes = generate_group_sizes(m, g, seed=m + g)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        dy = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        x8, sx = ref.quantize_tilewise_ref(x)
+        d8, sd = ref.quantize_tilewise_ref(dy)
+        gs = jnp.asarray(sizes)
+        t_ours = time_fn(_wgrad_fp8, x8, sx, d8, sd, gs, cfg)
+        t_bf16 = time_fn(_wgrad, x.astype(jnp.bfloat16),
+                         dy.astype(jnp.bfloat16), gs, cfg_bf16)
+        resolved = dispatch.resolve_wgrad_backend(cfg.backend,
+                                                  precision="fp8")
+        report(f"wgrad_fp8/M{m}_N{n}_K{k}_G{g}",
+               t_ours * 1e6,
+               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"@{resolved};bf16_wgrad_us={t_bf16 * 1e6:.1f}")
+
+
 CASES = [(m, nk, nk, g) for m in (2048, 8192) for g in (4, 8, 16, 32)
          for nk in (256, 512)]
 SMOKE_CASES = [(256, 128, 128, 4)]   # tiny: interpret-mode friendly
@@ -141,6 +179,7 @@ SMOKE_CASES = [(256, 128, 128, 4)]   # tiny: interpret-mode friendly
 def run(report):
     bench_cases(report, CASES, backend="xla_ragged")
     bench_wgrad_cases(report, CASES[:4], backend="xla_ragged")
+    bench_wgrad_fp8_cases(report, CASES[:4], backend="xla_ragged")
 
 
 def main() -> None:
@@ -160,14 +199,17 @@ def main() -> None:
     if args.smoke:
         # measured pool selection even on plan-consuming backends — the
         # shape is tiny, and it exercises selection + cache persistence
-        # for BOTH op families (gemm + wgrad keys)
+        # for ALL op families (gemm + wgrad + wgrad_fp8 keys)
         bench_cases(report, SMOKE_CASES, backend=args.backend,
                     measure_autotune=True)
         bench_wgrad_cases(report, SMOKE_CASES, backend=args.backend,
                           measure_autotune=True)
+        bench_wgrad_fp8_cases(report, SMOKE_CASES, backend=args.backend,
+                              measure_autotune=True)
     else:
         bench_cases(report, CASES, backend=args.backend)
         bench_wgrad_cases(report, CASES, backend=args.backend)
+        bench_wgrad_fp8_cases(report, CASES, backend=args.backend)
 
 
 if __name__ == "__main__":

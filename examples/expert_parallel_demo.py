@@ -51,8 +51,11 @@ def main():
     y_ep = fn(params, x)
 
     err = float(jnp.max(jnp.abs(y_ep - y_ref)))
-    print(f"EP(4-way) vs single-device max |err|: {err:.2e}")
-    assert err < 1e-3
+    rel = err / max(float(jnp.max(jnp.abs(y_ref))), 1e-6)
+    print(f"EP(4-way) vs single-device max |err|: {err:.2e} (rel {rel:.2e})")
+    # relative criterion: the EP reduction reassociates bf16 partial sums,
+    # so the tolerable absolute error scales with the output magnitude
+    assert rel < 1e-3
 
     hlo = fn.lower(params, x).compile().as_text()
     colls = re.findall(r"(all-reduce|all-gather|reduce-scatter|"

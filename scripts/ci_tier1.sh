@@ -35,6 +35,7 @@ x = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
 w = jnp.asarray(rng.standard_normal((3, 128, 128)), jnp.float32)
 gs = jnp.asarray([60, 0, 30], jnp.int32)          # sum=90 < 256
 
+gw_fp8 = None
 for precision in ("fp8", "bf16"):
     kw = {"backend": "pallas_interpret"} if precision == "fp8" else {}
     def loss(x, w):
@@ -44,6 +45,52 @@ for precision in ("fp8", "bf16"):
     assert bool(jnp.isfinite(gx).all()) and bool(jnp.isfinite(gw).all()), precision
     if precision == "fp8":
         assert np.all(np.asarray(gx[90:]) == 0.0), "fp8 tail dx must be zero"
+        gw_fp8 = gw          # fp8 forward + bf16 wgrad: the recipe baseline
     assert float(jnp.abs(gw[1]).max()) == 0.0, f"{precision}: empty-group dw"
     print(f"grad smoke [{precision}] OK")
+
+# All-fp8 step: the fp8-operand wgrad (wgrad_precision="fp8") must stay
+# finite, keep the tail-dx/empty-group guarantees, and agree with the
+# SAME fp8 forward's bf16 wgrad within fp8 quantization tolerance — the
+# baseline is gw_fp8 (fp8 fwd + bf16 wgrad), so the deviation isolates
+# the wgrad's operand precision, not the forward's quantization noise.
+def loss8(x, w):
+    y = grouped_linear(x, w, gs, precision="fp8", backend="pallas_interpret",
+                       wgrad_precision="fp8")
+    return jnp.sum(y.astype(jnp.float32) ** 2)
+gx8, gw8 = jax.grad(loss8, argnums=(0, 1))(x, w)
+assert bool(jnp.isfinite(gx8).all()) and bool(jnp.isfinite(gw8).all())
+assert np.all(np.asarray(gx8[90:]) == 0.0), "fp8-wgrad tail dx must be zero"
+assert float(jnp.abs(gw8[1]).max()) == 0.0, "fp8-wgrad empty-group dw"
+rel = (np.abs(np.asarray(gw8) - np.asarray(gw_fp8)).max()
+       / max(np.abs(np.asarray(gw_fp8)).max(), 1e-6))
+assert rel < 0.1, f"fp8 wgrad deviates {rel:.3f} from bf16 wgrad"
+print("grad smoke [fp8 wgrad_precision=fp8] OK")
+
+# Quantize-once gate: ONE tilewise quantization of the shared activation
+# buffer serves the MoE gate+up forward, and the backward's fp8 wgrad
+# reuses the residual instead of re-quantizing (down from three).
+from repro.core import moe as moe_mod
+from repro.core import quantization as qz
+from repro.kernels.plan import KernelConfig
+cfg = moe_mod.MoEConfig(num_experts=4, top_k=2, d_model=128, d_ff_expert=256,
+                        precision="fp8", backend="pallas_interpret",
+                        kernel_config=KernelConfig(wgrad_precision="fp8"))
+params = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
+xt = jax.random.normal(jax.random.PRNGKey(1), (32, 128))
+cap = moe_mod._capacity(32 * cfg.top_k, 1, cfg.capacity_factor)
+calls, real = [], qz.quantize_tilewise
+qz.quantize_tilewise = lambda a, **kw: calls.append(a.shape) or real(a, **kw)
+try:
+    jax.grad(lambda p, x: jnp.mean(
+        moe_mod.moe_apply(p, x, cfg)[0].astype(jnp.float32) ** 2),
+        argnums=(0, 1))(params, xt)
+finally:
+    qz.quantize_tilewise = real
+xs_like = [s for s in calls if s == (cap, cfg.d_model)]
+# (cap, d_model): the shared xs once + the down GEMM's dy once — a second
+# xs quantization anywhere (gate/up forward or any backward) would add one
+assert len(calls) == 5 and len(xs_like) == 2, \
+    f"quantize-once violated: {calls}"
+print("quantize-once count OK")
 EOF

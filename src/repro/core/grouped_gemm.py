@@ -9,16 +9,24 @@ Precision modes
                padding-free grouped GEMM kernel (paper);
                backward: dgrad in fp8 through the same kernel
                (dy quantized 1x128, w^T re-quantized 128x128),
-               wgrad in bf16 through the *wgrad registry*
-               (``dispatch.grouped_gemm_wgrad``): the padding-free
-               ragged-contraction kernel where available, XLA's
-               ``ragged_wgrad`` as the portable fallback.  All three
-               GEMMs of the step consume ONE :class:`TilePlan`.  This
-               mirrors the DeepSeek-V3 recipe the paper builds on (wgrad
-               highest precision: bf16 operands, f32 accumulation).
+               wgrad through the *wgrad registry*
+               (``dispatch.grouped_gemm_wgrad``): bf16 operands by
+               default (the DeepSeek-V3 recipe — wgrad highest
+               precision), or fp8 operands with per-visit dequantization
+               under ``wgrad_precision="fp8"`` (arXiv 2505.20524's
+               all-fp8 step; ``dispatch.grouped_gemm_wgrad_fp8``).  All
+               three GEMMs of the step consume ONE :class:`TilePlan`.
   * ``bf16`` — ragged_dot in bf16 both ways (numerics baseline; also the
                portable GSPMD path the multi-pod dry-run lowers); its
                wgrad routes through the same registry.
+
+Quantize-once: a :class:`~repro.core.quantization.QuantizedActivation`
+passed as ``quantized=`` replaces the forward's ``quantize_tilewise`` of
+``x`` — several GEMMs sharing one activation buffer (the MoE gate/up
+pair) amortize ONE quantization, and under ``wgrad_precision="fp8"`` the
+VJP saves ``(a8, s_a)`` as residuals so the backward never re-quantizes
+``x`` either.  The backward's single ``quantize_tilewise(dy)`` likewise
+serves both the dgrad and the fp8 wgrad.
 
 The group structure (``group_sizes``) is data-dependent and never padded —
 that is the paper's whole point.
@@ -64,15 +72,20 @@ def _wgrad(x, dy, group_sizes, num_groups, *, config=None, plan=None):
 # fp8 path with custom VJP
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
-def _grouped_linear_fp8(x, w, group_sizes, plan, config):
-    y, _ = _fp8_fwd(x, w, group_sizes, plan, config)
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _grouped_linear_fp8(x, w, group_sizes, plan, qa, config):
+    y, _ = _fp8_fwd(x, w, group_sizes, plan, qa, config)
     return y
 
 
-def _fp8_fwd(x, w, group_sizes, plan, config):
-    a8, sa = q.quantize_tilewise(x.astype(jnp.float32),
-                                 backend=config.backend)
+def _fp8_fwd(x, w, group_sizes, plan, qa, config):
+    # quantize-once: a caller-supplied QuantizedActivation (the MoE layer
+    # shares one across the gate/up GEMMs) replaces the tilewise quant of x
+    if qa is None:
+        a8, sa = q.quantize_tilewise(x.astype(jnp.float32),
+                                     backend=config.backend)
+    else:
+        a8, sa = qa.q, qa.scale
     b8, sb = q.quantize_blockwise_batched(w.astype(jnp.float32),
                                           backend=config.backend)
     # plan-once/run-many: one TilePlan per group_sizes serves this forward
@@ -84,14 +97,24 @@ def _fp8_fwd(x, w, group_sizes, plan, config):
                               num_groups=w.shape[0])
     y = dispatch.grouped_gemm_fp8(a8, sa, b8, sb, group_sizes,
                                   config=config, plan=plan)
-    return y, (x, w, group_sizes, plan)
+    if config.wgrad_precision == "fp8":
+        # the residual IS the quantized activation: the backward's fp8
+        # wgrad dequantizes per visit instead of re-quantizing x (and the
+        # raw x can be freed — only a dtype stub is kept for the dx cast)
+        x_raw, x_res = x[:0], (a8, sa)
+    else:
+        # DeepSeek recipe: wgrad contracts the highest-precision operand
+        x_raw, x_res = x, None
+    qa_marker = () if qa is not None else None     # structure-only flag
+    return y, (x_raw, x_res, w, group_sizes, plan, qa_marker)
 
 
 def _fp8_bwd(config, res, dy):
-    x, w, group_sizes, plan = res
+    x_raw, x_res, w, group_sizes, plan, qa_marker = res
     num_groups = w.shape[0]
     # dgrad: dx = dy @ w^T  (fp8 through the padding-free kernel, reusing
-    # the forward's TilePlan — same group_sizes, same schedule)
+    # the forward's TilePlan — same group_sizes, same schedule).  This one
+    # quantize_tilewise(dy) also feeds the fp8 wgrad below.
     d8, sd = q.quantize_tilewise(dy.astype(jnp.float32),
                                  backend=config.backend)
     wt = jnp.swapaxes(w, 1, 2)                       # [G, N, K]
@@ -100,12 +123,27 @@ def _fp8_bwd(config, res, dy):
     dx = dispatch.grouped_gemm_fp8(d8, sd, bt8, sbt, group_sizes,
                                    config=config.with_(out_dtype=jnp.float32),
                                    plan=plan)
-    # wgrad: bf16 ragged contraction (highest-precision operand, DeepSeek
-    # keeps wgrad un-quantized on the K axis) through the wgrad registry,
-    # reusing the SAME TilePlan as the forward and the dgrad above — the
-    # contraction schedule depends only on the routing decision
-    dw = _wgrad(x, dy, group_sizes, num_groups, config=config, plan=plan)
-    return dx.astype(x.dtype), dw.astype(w.dtype), None, None
+    # wgrad through the registry, reusing the SAME TilePlan as the forward
+    # and the dgrad above — the contraction schedule depends only on the
+    # routing decision
+    if config.wgrad_precision == "fp8":
+        a8, sa = x_res
+        dw = dispatch.grouped_gemm_wgrad_fp8(
+            a8, sa, d8, sd, group_sizes, num_groups=num_groups,
+            config=config, out_dtype=jnp.float32, plan=plan)
+    else:
+        dw = _wgrad(x_raw, dy, group_sizes, num_groups, config=config,
+                    plan=plan)
+    # zero cotangent for a supplied QuantizedActivation (its producer is
+    # stop_gradient-ed; gradients to the activation flow through dx)
+    dqa = None
+    if qa_marker is not None:
+        m, k = dy.shape[0], w.shape[1]
+        kb = (k + q.QUANT_BLOCK - 1) // q.QUANT_BLOCK
+        dqa = q.QuantizedActivation(
+            jnp.zeros((m, k), jnp.float8_e4m3fn),
+            jnp.zeros((m, kb), jnp.float32))
+    return dx.astype(x_raw.dtype), dw.astype(w.dtype), None, None, dqa
 
 
 _grouped_linear_fp8.defvjp(_fp8_fwd, _fp8_bwd)
@@ -147,7 +185,9 @@ def grouped_linear(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
                    precision: str = "bf16", backend: str | None = None,
                    out_dtype: Any = None,
                    config: KernelConfig | None = None,
-                   plan: TilePlan | None = None) -> jax.Array:
+                   plan: TilePlan | None = None,
+                   quantized: "q.QuantizedActivation | None" = None,
+                   wgrad_precision: str | None = None) -> jax.Array:
     """Padding-free grouped linear: rows of ``x`` are grouped by
     ``group_sizes`` (concatenated, ragged); group g matmuls ``w[g]``.
 
@@ -165,14 +205,47 @@ def grouped_linear(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
     gate/up/down GEMMs of one MoE application) so the schedule is built
     once per routing decision.  Without one, the fp8 path still builds a
     single plan per call and reuses it for the backward dgrad and wgrad.
+
+    ``quantized`` (fp8 path only) is the quantize-once analogue of
+    ``plan``: a :class:`~repro.core.quantization.QuantizedActivation`
+    built from exactly this ``x`` (see
+    :func:`~repro.core.quantization.quantize_activation`) replaces the
+    forward's ``quantize_tilewise`` — pass the same record to every
+    grouped_linear consuming the same activation buffer (the MoE gate/up
+    pair).  It must be the quantization OF ``x``; a mismatched record
+    gives silently wrong output.
+
+    ``wgrad_precision`` (fp8 path only) picks the backward wgrad's
+    operand precision: ``"bf16"`` (default — the DeepSeek recipe keeps
+    the wgrad at the highest precision) or ``"fp8"`` (the all-fp8 step of
+    arXiv 2505.20524: the VJP saves the quantized activation as its
+    residual and the wgrad kernel dequantizes per visit).  Overrides the
+    ``config``'s ``wgrad_precision`` field.
     """
     if precision == "fp8":
         # explicit out_dtype > config's pinned out_dtype > x.dtype
-        cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
+        cfg = resolve_config(config, backend=backend, out_dtype=out_dtype,
+                             wgrad_precision=wgrad_precision)
         if cfg.out_dtype is None:
             cfg = cfg.with_(out_dtype=x.dtype)
-        return _grouped_linear_fp8(x, w, group_sizes, plan, cfg)
+        return _grouped_linear_fp8(x, w, group_sizes, plan, quantized, cfg)
     if precision == "bf16":
+        if quantized is not None:
+            warnings.warn(
+                "grouped_linear(precision='bf16') ignores quantized=...: "
+                "the bf16 path never quantizes; use precision='fp8' to "
+                "consume a QuantizedActivation", stacklevel=2)
+        # the kwarg AND a config-carried field both reach here — dropping
+        # the config's wgrad_precision silently would be the same trap
+        # the backend= kwarg warning exists for
+        eff_wgrad = wgrad_precision if wgrad_precision is not None \
+            else resolve_config(config).wgrad_precision
+        if eff_wgrad == "fp8":
+            warnings.warn(
+                "grouped_linear(precision='bf16') ignores "
+                "wgrad_precision='fp8': the fp8-operand wgrad needs the "
+                "fp8 forward's quantized residual; use precision='fp8'",
+                stacklevel=2)
         if backend is not None and backend != "auto":
             # the bf16 forward has exactly one implementation (ragged_dot)
             # — honouring this request is impossible, and dropping it
@@ -193,10 +266,16 @@ def grouped_linear(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
 
 def dense_linear_fp8(x: jax.Array, w: jax.Array, *,
                      backend: str | None = None,
+                     out_dtype: Any = None,
                      config: KernelConfig | None = None) -> jax.Array:
     """The G=1 degenerate case — DeepSeek-style fp8 linear for dense layers
-    (optional beyond-paper feature for the dense architectures)."""
+    (optional beyond-paper feature for the dense architectures).
+
+    ``out_dtype`` forwards like :func:`grouped_linear`'s (explicit kwarg >
+    the ``config``'s pinned ``out_dtype`` > ``x.dtype``) instead of being
+    silently dropped."""
     m = x.shape[0]
     gs = jnp.array([m], jnp.int32)
     return grouped_linear(x, w[None], gs, precision="fp8",
-                          backend=backend, config=config)
+                          backend=backend, out_dtype=out_dtype,
+                          config=config)

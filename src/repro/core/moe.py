@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.grouped_gemm import grouped_linear
+from repro.core.quantization import quantize_activation
 from repro.kernels import dispatch
 from repro.kernels.plan import KernelConfig, make_tile_plan, resolve_config
 
@@ -48,7 +49,9 @@ class MoEConfig:
     # "pallas" / "pallas_interpret" / "xla_ragged"; None == "auto")
     backend: Optional[str] = None
     # tile shapes etc. for the expert GEMMs; None -> installed/per-device
-    # default (``backend`` above overrides the config's backend field)
+    # default (``backend`` above overrides the config's backend field).
+    # ``kernel_config.wgrad_precision="fp8"`` opts the expert GEMMs'
+    # backward into the all-fp8 wgrad (bf16 stays the default recipe)
     kernel_config: Optional[KernelConfig] = None
     router_dtype: Any = jnp.float32
     # expert-compute dispatch:
@@ -74,7 +77,9 @@ def ep_size_for(cfg: MoEConfig, model_axis_size: int) -> int:
 
 def init_moe_params(key, cfg: MoEConfig, dtype=jnp.float32):
     d, f, e = cfg.d_model, cfg.d_ff_expert, cfg.num_experts
-    ks = jax.random.split(key, 6)
+    # 7 splits: every param draws from its own subkey — reusing the parent
+    # ``key`` for shared_down correlated its init with the subkey stream
+    ks = jax.random.split(key, 7)
     scale_in = d ** -0.5
     scale_mid = f ** -0.5
     p = {
@@ -87,7 +92,7 @@ def init_moe_params(key, cfg: MoEConfig, dtype=jnp.float32):
         fs = f * cfg.num_shared_experts
         p["shared_gate"] = jax.random.normal(ks[4], (d, fs), dtype) * scale_in
         p["shared_up"] = jax.random.normal(ks[5], (d, fs), dtype) * scale_in
-        p["shared_down"] = (jax.random.normal(key, (fs, d), dtype)
+        p["shared_down"] = (jax.random.normal(ks[6], (fs, d), dtype)
                             * fs ** -0.5)
     return p
 
@@ -97,11 +102,22 @@ def _capacity(num_slots: int, ep_size: int, cf: float,
     """Static EP capacity, rounded up to the active tile height so the
     packed buffer stays an integral number of kernel M-tiles (``align`` =
     ``KernelConfig.block_m``; non-default tile shapes would otherwise
-    silently mis-bucket capacity)."""
+    silently mis-bucket capacity).
+
+    The clamp is the aligned *ceiling* of ``num_slots``, not ``num_slots``
+    itself — ``min(num_slots, ...)`` used to return an unaligned capacity
+    whenever ``num_slots`` wasn't tile-aligned, breaking this docstring's
+    invariant and splitting autotune cache keys across M buckets.  The
+    capacity may therefore exceed ``num_slots`` by up to ``align - 1``
+    dead rows; the packed buffer's tail rows beyond ``sum(group_sizes)``
+    are defined zeros on every kernel path, so the slack is harmless.
+    TP mode (``ep_size == 1``) keeps the exact ``num_slots`` buffer: every
+    slot is real, nothing is clamped, and the kernel handles ragged M."""
     if ep_size == 1:
         return num_slots
+    cap_all = -(-num_slots // align) * align      # aligned ceiling
     c = -(-int(num_slots / ep_size * cf) // align) * align
-    return min(num_slots, max(c, align))
+    return min(cap_all, max(c, align))
 
 
 def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
@@ -136,6 +152,14 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
     is_local = (local_id >= 0) & (local_id < e_loc)
     sort_key = jnp.where(is_local, local_id, e_loc)         # dead rows last
     order = jnp.argsort(sort_key)                           # stable
+    if cap > num_slots:
+        # tile-aligned capacity can exceed the slot count by < block_m;
+        # replicate the last slot into the padding rows.  The replica may
+        # duplicate a REAL token's row — that is safe only because those
+        # rows sit beyond sum(group_sizes): every kernel path zero-fills
+        # them forward and backward, and the combine's `valid` mask below
+        # excludes them — do not weaken either of those invariants
+        order = jnp.pad(order, (0, cap - num_slots), mode="edge")
     sel = order[:cap]                                       # packed slots
 
     gs_full = jnp.bincount(jnp.where(is_local, local_id, e_loc),
@@ -181,14 +205,21 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
         # configure-once/select-cheaply descriptor pool, at the layer
         # level.  The XLA backends don't consume plans; skip the build.
         tile_plan = None
-        if cfg.precision == "fp8" and dispatch.backend_uses_plan(
-                kcfg.backend):
-            tile_plan = make_tile_plan(gs, cap, block_m=kcfg.block_m,
-                                       num_groups=e_loc)
+        qx = None
+        if cfg.precision == "fp8":
+            if dispatch.backend_uses_plan(kcfg.backend):
+                tile_plan = make_tile_plan(gs, cap, block_m=kcfg.block_m,
+                                           num_groups=e_loc)
+            # quantize once per routing decision, like the plan: ONE
+            # 1x128 tilewise quantization of the packed buffer serves the
+            # gate AND up GEMMs (and, under wgrad_precision="fp8", their
+            # backward wgrads via the VJP residual) — previously each
+            # GEMM re-quantized the same xs
+            qx = quantize_activation(xs, backend=kcfg.backend)
         glin = functools.partial(grouped_linear, precision=cfg.precision,
                                  config=kcfg, plan=tile_plan)
-        g = glin(xs, params["w_gate"], gs)                  # [cap, f_loc]
-        u = glin(xs, params["w_up"], gs)
+        g = glin(xs, params["w_gate"], gs, quantized=qx)    # [cap, f_loc]
+        u = glin(xs, params["w_up"], gs, quantized=qx)
         h = jax.nn.silu(g) * u                              # bf16 act (I5)
         y = glin(h, params["w_down"], gs)                   # [cap, d]
 

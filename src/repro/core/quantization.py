@@ -3,8 +3,17 @@
 1x128 per-tile activation quant + 128x128 per-block weight quant — the
 paper's (= DeepSeek-V3's) scheme.  ``quantize_*_ste`` are the autodiff-safe
 entry points used by the training path.
+
+:class:`QuantizedActivation` is the quantize-once record: one
+``quantize_tilewise`` of a shared activation buffer, carried alongside the
+:class:`~repro.kernels.plan.TilePlan` through ``grouped_linear`` so every
+GEMM consuming the same buffer (the MoE gate and up projections, and —
+under ``wgrad_precision="fp8"`` — the backward's wgrad via the VJP
+residual) amortizes the quantization like the schedule metadata.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -14,6 +23,44 @@ from repro.kernels import ref as kref
 
 QUANT_BLOCK = kref.QUANT_BLOCK
 FP8_MAX = kref.FP8_MAX
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantizedActivation:
+    """1x128-tile fp8 representation of one activation buffer.
+
+    ``q``: [M, K] fp8 e4m3; ``scale``: [M, ceil(K/128)] f32 with
+    ``x ≈ q * repeat(scale, 128, axis=1)``.  A registered pytree, so it
+    rides through ``jit``/``shard_map`` and custom_vjp arguments next to
+    the TilePlan.
+
+    CONTRACT: a record is only valid for the exact buffer it was built
+    from — passing it to ``grouped_linear(x, ...)`` with a *different*
+    ``x`` produces silently wrong output (the forward consumes ``(q,
+    scale)`` wholesale and only uses ``x`` for dtype/VJP bookkeeping).
+    Build it with :func:`quantize_activation` at the point the buffer is
+    produced, never cache it across routing decisions.
+    """
+    q: jax.Array       # [M, K] fp8 e4m3
+    scale: jax.Array   # [M, ceil(K/128)] f32
+
+
+jax.tree_util.register_pytree_node(
+    QuantizedActivation,
+    lambda qa: ((qa.q, qa.scale), None),
+    lambda _, children: QuantizedActivation(*children))
+
+
+def quantize_activation(x, *, backend=None) -> QuantizedActivation:
+    """ONE ``quantize_tilewise`` call producing the shareable record.
+
+    The input is ``stop_gradient``-ed: gradients flow to the activation
+    through ``grouped_linear``'s custom VJP (which returns a zero
+    cotangent for the record itself), not through the quantization graph.
+    """
+    q8, s = quantize_tilewise(
+        jax.lax.stop_gradient(x).astype(jnp.float32), backend=backend)
+    return QuantizedActivation(q8, s)
 
 
 @jax.custom_vjp

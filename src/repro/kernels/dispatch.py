@@ -45,6 +45,19 @@ names are shared across families so one ``KernelConfig.backend`` rides a
 whole training step: forward and dgrad through the gemm family, wgrad
 through this one, the same :class:`~repro.kernels.plan.TilePlan` through
 all of them.
+
+Operand precision is a THIRD dimension of the wgrad family: every
+bf16-operand entry has an fp8-operand twin under the ``<name>_fp8``
+registry name (``pallas_fp8`` / ``pallas_interpret_fp8`` run
+``gmm_pallas_wgrad_fp8`` — per-visit dequantization of the forward's
+``(a8, s_a)`` residual and the dgrad's ``(dy8, s_dy)``; the
+``xla_*_fp8`` entries dequantize up front and reuse the bf16/f32 math).
+Callers keep naming the family-neutral backend
+(``KernelConfig(backend="pallas", wgrad_precision="fp8")`` or
+``grouped_linear(wgrad_precision="fp8")``);
+``resolve_wgrad_backend(..., precision="fp8")`` derives the twin.  The
+bf16 path stays the default (the DeepSeek recipe); fp8 is the opt-in
+all-fp8 step of arXiv 2505.20524.
 """
 from __future__ import annotations
 
@@ -60,17 +73,22 @@ from repro.kernels.grouped_gemm_kernel import QUANT_BLOCK, gmm_pallas
 from repro.kernels.plan import (KernelConfig, TilePlan,  # noqa: F401
                                 make_tile_plan, resolve_config)
 from repro.kernels.quant_kernel import quantize_tilewise_pallas
-from repro.kernels.wgrad_kernel import gmm_pallas_wgrad
+from repro.kernels.wgrad_kernel import gmm_pallas_wgrad, gmm_pallas_wgrad_fp8
 
 # auto-resolution preference, best first (shared by both op families)
 AUTO_ORDER = ("pallas", "xla_ragged", "pallas_interpret")
 
 _ALIASES = {"xla": "xla_ragged"}
 
+# suffix distinguishing the fp8-operand twins in the wgrad registry
+_FP8_SUFFIX = "_fp8"
+
 # backends that walk the TilePlan schedule (and honour tile shapes); the
 # XLA paths let the compiler tile and ignore both
-PLAN_BACKENDS = frozenset({"pallas", "pallas_interpret"})
-TILE_FREE_BACKENDS = frozenset({"xla_ragged", "xla_exact"})
+PLAN_BACKENDS = frozenset({"pallas", "pallas_interpret",
+                           "pallas_fp8", "pallas_interpret_fp8"})
+TILE_FREE_BACKENDS = frozenset({"xla_ragged", "xla_exact",
+                                "xla_ragged_fp8", "xla_exact_fp8"})
 
 
 class BackendUnavailableError(RuntimeError):
@@ -203,9 +221,24 @@ def wgrad_availability(name: str) -> "tuple[bool, str]":
     return _WGRAD_REGISTRY[name].available()
 
 
-def resolve_wgrad_backend(backend: Optional[str] = "auto") -> str:
+def _wgrad_twin(name: str, precision: str) -> str:
+    """Family-neutral backend name -> this precision's registry entry
+    (``pallas`` <-> ``pallas_fp8``; already-suffixed names normalize)."""
+    if name.endswith(_FP8_SUFFIX):
+        name = name[: -len(_FP8_SUFFIX)]
+    return name + (_FP8_SUFFIX if precision == "fp8" else "")
+
+
+def resolve_wgrad_backend(backend: Optional[str] = "auto", *,
+                          precision: str = "bf16") -> str:
     """Map a requested backend to a concrete, *available* wgrad-family
-    entry.
+    entry of the requested operand ``precision`` ("bf16" | "fp8").
+
+    Backend names are family-neutral: ``"pallas"`` with
+    ``precision="fp8"`` resolves to the ``pallas_fp8`` entry (and an
+    explicitly suffixed ``"pallas_fp8"`` normalizes to whichever twin the
+    precision asks for — the operands at the call site, not the name,
+    decide the arithmetic).
 
     Gemm-family names with no wgrad counterpart (``padded_baseline``)
     fall back to auto-resolution instead of raising: a training config
@@ -213,28 +246,37 @@ def resolve_wgrad_backend(backend: Optional[str] = "auto") -> str:
     must not strand the backward.  A name that exists in this family but
     is unavailable still raises — the caller asked for that kernel.
     """
+    if precision not in ("bf16", "fp8"):
+        raise ValueError(f"unknown wgrad precision {precision!r}; "
+                         "use 'bf16' or 'fp8'")
     if backend not in (None, "auto"):
         backend = _ALIASES.get(backend, backend)
-        if backend in _WGRAD_REGISTRY:
-            ok, reason = _WGRAD_REGISTRY[backend].available()
+        cand = _wgrad_twin(backend, precision)
+        if cand in _WGRAD_REGISTRY:
+            ok, reason = _WGRAD_REGISTRY[cand].available()
             if not ok:
-                raise BackendUnavailableError(backend, reason)
-            return backend
-        if backend not in _REGISTRY:
+                raise BackendUnavailableError(cand, reason)
+            return cand
+        base = _wgrad_twin(backend, "bf16")
+        if base not in _REGISTRY:
             raise ValueError(f"unknown backend {backend!r}; wgrad family "
                              f"has {wgrad_backend_names()}")
         # gemm-only backend: fall through to auto
-    if _default_backend_override is not None \
-            and _default_backend_override in _WGRAD_REGISTRY:
-        ok, _ = _WGRAD_REGISTRY[_default_backend_override].available()
-        if ok:
-            return _default_backend_override
+    if _default_backend_override is not None:
+        cand = _wgrad_twin(_default_backend_override, precision)
+        if cand in _WGRAD_REGISTRY:
+            ok, _ = _WGRAD_REGISTRY[cand].available()
+            if ok:
+                return cand
     for name in AUTO_ORDER:
-        ok, _ = _WGRAD_REGISTRY[name].available()
-        if ok:
-            return name
+        cand = _wgrad_twin(name, precision)
+        if cand in _WGRAD_REGISTRY:
+            ok, _ = _WGRAD_REGISTRY[cand].available()
+            if ok:
+                return cand
     raise BackendUnavailableError(
-        "auto", f"no wgrad backend is available (tried {AUTO_ORDER})")
+        "auto", f"no {precision} wgrad backend is available "
+                f"(tried {AUTO_ORDER})")
 
 
 # ---------------------------------------------------------------------------
@@ -314,6 +356,28 @@ def wgrad_xla_exact(x, dy, group_sizes, *, num_groups,
                     dy.astype(jnp.float32),
                     preferred_element_type=jnp.float32)
     return dw.astype(out_dtype)
+
+
+def wgrad_fp8_xla_ragged(x_fp8, s_x, dy_fp8, s_dy, group_sizes, *,
+                         num_groups, out_dtype=jnp.float32):
+    """fp8-operand twin of :func:`wgrad_xla_ragged`: dequantize both
+    operands up front (``_dequant_a`` — the 1x128 row-tile layout is the
+    same on the x and dy sides) and reuse the bf16 ragged contraction."""
+    x = _dequant_a(x_fp8, s_x, jnp.bfloat16)
+    dy = _dequant_a(dy_fp8, s_dy, jnp.bfloat16)
+    return wgrad_xla_ragged(x, dy, group_sizes, num_groups=num_groups,
+                            out_dtype=out_dtype)
+
+
+def wgrad_fp8_xla_exact(x_fp8, s_x, dy_fp8, s_dy, group_sizes, *,
+                        num_groups, out_dtype=jnp.float32):
+    """fp8-operand oracle: exact f32 dequantization then the dense
+    one-hot f32 contraction — the ground truth the fp8 wgrad kernel's
+    per-visit dequantization is validated against."""
+    x = _dequant_a(x_fp8, s_x, jnp.float32)
+    dy = _dequant_a(dy_fp8, s_dy, jnp.float32)
+    return wgrad_xla_exact(x, dy, group_sizes, num_groups=num_groups,
+                           out_dtype=out_dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -443,6 +507,56 @@ register_wgrad_backend(
     run=_run_wgrad_xla_exact)
 
 
+def _run_pallas_wgrad_fp8(x8, sx, dy8, sdy, gs, *, num_groups, config, plan,
+                          interpret):
+    return gmm_pallas_wgrad_fp8(x8, sx, dy8, sdy, gs, num_groups=num_groups,
+                                block_m=config.block_m,
+                                block_n=config.block_n,
+                                block_k=config.block_k,
+                                out_dtype=config.out_dtype,
+                                interpret=interpret, plan=plan)
+
+
+def _run_wgrad_fp8_xla_ragged(x8, sx, dy8, sdy, gs, *, num_groups, config,
+                              **_):
+    return wgrad_fp8_xla_ragged(x8, sx, dy8, sdy, gs, num_groups=num_groups,
+                                out_dtype=config.out_dtype)
+
+
+def _run_wgrad_fp8_xla_exact(x8, sx, dy8, sdy, gs, *, num_groups, config,
+                             **_):
+    return wgrad_fp8_xla_exact(x8, sx, dy8, sdy, gs, num_groups=num_groups,
+                               out_dtype=config.out_dtype)
+
+
+# fp8-operand twins — the precision dimension of the wgrad registry
+register_wgrad_backend(
+    "pallas_fp8",
+    description="compiled Pallas TPU kernel: ragged-M contraction on fp8 "
+                "operands, per-visit dequant folded into the masked "
+                "prologue (arXiv 2505.20524 all-fp8 step)",
+    available=_avail_tpu,
+    run=lambda *a, **kw: _run_pallas_wgrad_fp8(*a, interpret=False, **kw))
+register_wgrad_backend(
+    "pallas_interpret_fp8",
+    description="fp8 wgrad kernel in interpret mode — CPU-verifiable, "
+                "bit-identical to 'pallas_fp8'",
+    available=_avail_always,
+    run=lambda *a, **kw: _run_pallas_wgrad_fp8(*a, interpret=True, **kw))
+register_wgrad_backend(
+    "xla_ragged_fp8",
+    description="up-front bf16 dequantization + compat.ragged_wgrad — "
+                "portable fp8-operand fallback",
+    available=_avail_ragged_wgrad,
+    run=_run_wgrad_fp8_xla_ragged)
+register_wgrad_backend(
+    "xla_exact_fp8",
+    description="f32 dequantization + dense one-hot f32 oracle for the "
+                "fp8-operand ragged contraction",
+    available=_avail_always,
+    run=_run_wgrad_fp8_xla_exact)
+
+
 # ---------------------------------------------------------------------------
 # Public entry points
 # ---------------------------------------------------------------------------
@@ -492,6 +606,28 @@ def grouped_gemm(x, w, group_sizes, *, backend: Optional[str] = None,
                             num_groups=w.shape[0], config=cfg, plan=plan)
 
 
+def _wgrad_tile_fallback(name: str, cfg: KernelConfig, m: int, k: int,
+                         n: int, precision: str) -> str:
+    """Shared tile-incompatibility policy for both wgrad precisions: an
+    *explicitly requested* plan backend whose tile shapes don't divide
+    (K, N) raises via ``validate``; an auto-resolved one falls back to the
+    first available tile-free entry of the same precision."""
+    explicit = cfg.backend not in (None, "auto") \
+        and _wgrad_twin(_ALIASES.get(cfg.backend, cfg.backend),
+                        precision) in _WGRAD_REGISTRY
+    if explicit:
+        cfg.validate(m, k, n)            # raises with the shape message
+    for fallback in (_wgrad_twin("xla_ragged", precision),
+                     _wgrad_twin("xla_exact", precision)):
+        ok, _ = _WGRAD_REGISTRY[fallback].available()
+        if ok:
+            return fallback
+    raise BackendUnavailableError(
+        name, f"tile shapes (block_k={cfg.block_k}, "
+              f"block_n={cfg.block_n}) do not divide (K={k}, N={n})"
+              f" and no tile-free {precision} wgrad backend is available")
+
+
 def grouped_gemm_wgrad(x, dy, group_sizes, *,
                        num_groups: Optional[int] = None,
                        backend: Optional[str] = None,
@@ -520,22 +656,43 @@ def grouped_gemm_wgrad(x, dy, group_sizes, *,
     name = resolve_wgrad_backend(cfg.backend)
     k, n = x.shape[1], dy.shape[1]
     if name in PLAN_BACKENDS and not cfg.compatible(k, n):
-        explicit = cfg.backend not in (None, "auto") \
-            and _ALIASES.get(cfg.backend, cfg.backend) in _WGRAD_REGISTRY
-        if explicit:
-            cfg.validate(x.shape[0], k, n)   # raises with the shape message
-        for fallback in ("xla_ragged", "xla_exact"):
-            ok, _ = _WGRAD_REGISTRY[fallback].available()
-            if ok:
-                name = fallback
-                break
-        else:
-            raise BackendUnavailableError(
-                name, f"tile shapes (block_k={cfg.block_k}, "
-                      f"block_n={cfg.block_n}) do not divide (K={k}, N={n})"
-                      " and no tile-free wgrad backend is available")
+        name = _wgrad_tile_fallback(name, cfg, x.shape[0], k, n, "bf16")
     return _WGRAD_REGISTRY[name].run(
         x, dy, group_sizes, num_groups=num_groups, config=cfg, plan=plan)
+
+
+def grouped_gemm_wgrad_fp8(x_fp8, s_x, dy_fp8, s_dy, group_sizes, *,
+                           num_groups: Optional[int] = None,
+                           backend: Optional[str] = None,
+                           config: Optional[KernelConfig] = None,
+                           out_dtype=None,
+                           plan: Optional[TilePlan] = None):
+    """fp8-operand ragged-contraction grouped GEMM
+    ``dw[g] = dequant(x)_g^T @ dequant(dy)_g`` through the wgrad
+    registry's fp8 twins (arXiv 2505.20524's all-fp8 training step).
+
+    x_fp8/s_x: [M, K] fp8 + [M, ceil(K/128)] f32 — the forward's quantized
+    activation and its 1x128 tile scales (the VJP residual, NOT
+    re-quantized here); dy_fp8/s_dy: [M, N] fp8 + [M, ceil(N/128)] f32 —
+    the upstream gradient as the dgrad already quantized it.
+    ``backend`` names the family-neutral engine (``"pallas"``,
+    ``"pallas_interpret"``, ...); resolution appends the precision twin.
+    Same fallback semantics as :func:`grouped_gemm_wgrad`: auto-resolved
+    tile shapes that don't divide (K, N) fall back to a tile-free fp8
+    entry, explicit requests raise.
+    """
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
+    if cfg.out_dtype is None:
+        cfg = cfg.with_(out_dtype=jnp.float32)
+    num_groups = num_groups if num_groups is not None \
+        else group_sizes.shape[0]
+    name = resolve_wgrad_backend(cfg.backend, precision="fp8")
+    k, n = x_fp8.shape[1], dy_fp8.shape[1]
+    if name in PLAN_BACKENDS and not cfg.compatible(k, n):
+        name = _wgrad_tile_fallback(name, cfg, x_fp8.shape[0], k, n, "fp8")
+    return _WGRAD_REGISTRY[name].run(
+        x_fp8, s_x, dy_fp8, s_dy, group_sizes, num_groups=num_groups,
+        config=cfg, plan=plan)
 
 
 def quantize_tilewise(x, *, backend: Optional[str] = None):

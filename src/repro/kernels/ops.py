@@ -24,6 +24,7 @@ from repro.kernels.dispatch import (        # noqa: F401  (re-exports)
     grouped_gemm,
     grouped_gemm_fp8,
     grouped_gemm_wgrad,
+    grouped_gemm_wgrad_fp8,
     make_tile_plan,
     quantize_blockwise,
     quantize_blockwise_batched,

@@ -63,6 +63,11 @@ class KernelConfig:
     # None = the call site decides (grouped_linear uses x.dtype, the raw
     # dispatch entry bf16); pin a dtype to override every consumer
     out_dtype: Any = None
+    # operand precision of the training step's wgrad GEMM: "bf16" (the
+    # DeepSeek recipe — wgrad keeps the highest-precision operands) or
+    # "fp8" (arXiv 2505.20524's all-fp8 step: x and dy arrive as fp8 with
+    # their 1x128 tile scales, dequantized per visit inside the kernel)
+    wgrad_precision: str = "bf16"
 
     def __post_init__(self):
         # normalize out_dtype so configs built from jnp scalar types and
@@ -81,6 +86,10 @@ class KernelConfig:
         if self.block_k % QUANT_BLOCK != 0:
             raise ValueError(
                 f"block_k must be a multiple of {QUANT_BLOCK}, got {self.block_k}")
+        if self.wgrad_precision not in ("bf16", "fp8"):
+            raise ValueError(
+                f"wgrad_precision must be 'bf16' or 'fp8', "
+                f"got {self.wgrad_precision!r}")
 
     def validate(self, m: int, k: int, n: int) -> "KernelConfig":
         """Shape-dependent constraints.  M is deliberately unconstrained —
@@ -103,14 +112,16 @@ class KernelConfig:
         return {"block_m": self.block_m, "block_n": self.block_n,
                 "block_k": self.block_k, "backend": self.backend,
                 "out_dtype": (None if self.out_dtype is None
-                              else jnp.dtype(self.out_dtype).name)}
+                              else jnp.dtype(self.out_dtype).name),
+                "wgrad_precision": self.wgrad_precision}
 
     @classmethod
     def from_dict(cls, d: dict) -> "KernelConfig":
         name = d.get("out_dtype")
         return cls(block_m=int(d["block_m"]), block_n=int(d["block_n"]),
                    block_k=int(d["block_k"]), backend=d.get("backend"),
-                   out_dtype=None if name is None else jnp.dtype(name))
+                   out_dtype=None if name is None else jnp.dtype(name),
+                   wgrad_precision=d.get("wgrad_precision", "bf16"))
 
     @classmethod
     def default(cls, device_kind: Optional[str] = None) -> "KernelConfig":
@@ -186,10 +197,11 @@ def default_config(config: Optional[KernelConfig]):
 
 def resolve_config(config: Optional[KernelConfig] = None, *,
                    backend: Optional[str] = None,
-                   out_dtype: Any = None) -> KernelConfig:
+                   out_dtype: Any = None,
+                   wgrad_precision: Optional[str] = None) -> KernelConfig:
     """Effective config for a call site: explicit ``config`` >
     installed default > per-device default, with per-call ``backend`` /
-    ``out_dtype`` overrides applied on top."""
+    ``out_dtype`` / ``wgrad_precision`` overrides applied on top."""
     cfg = config if config is not None else get_default_config()
     if backend is not None:
         # an explicit "auto" escapes a pinned concrete backend back to
@@ -197,6 +209,8 @@ def resolve_config(config: Optional[KernelConfig] = None, *,
         cfg = cfg.with_(backend=None if backend == "auto" else backend)
     if out_dtype is not None:
         cfg = cfg.with_(out_dtype=out_dtype)
+    if wgrad_precision is not None:
+        cfg = cfg.with_(wgrad_precision=wgrad_precision)
     return cfg
 
 
@@ -440,12 +454,15 @@ def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
 
 def estimate_cost_s_wgrad(m: int, k: int, n: int, g: int,
                           config: KernelConfig,
-                          spec: Optional[DeviceSpec] = None) -> float:
+                          spec: Optional[DeviceSpec] = None,
+                          precision: str = "bf16") -> float:
     """Roofline estimate of the ragged-contraction (wgrad) grouped GEMM
     ``dw[g] = x_g^T @ dy_g`` under ``config``.  Same visit inflation as the
     forward (the contraction walks the same M-tile schedule); operand
     traffic differs: x is re-fetched per N step, dy per K step, and the
-    dense ``[G, K, N]`` f32 output flushes once per group."""
+    dense ``[G, K, N]`` f32 output flushes once per group.  With
+    ``precision="fp8"`` the operands are 1-byte fp8 plus their f32 1x128
+    tile-scale rows (over-fetched whole per tile, like the forward)."""
     spec = spec or device_spec()
     bm = config.block_m
     num_tiles = -(-m // bm)
@@ -453,9 +470,15 @@ def estimate_cost_s_wgrad(m: int, k: int, n: int, g: int,
     k_steps = -(-k // config.block_k)
     n_steps = -(-n // config.block_n)
     flops = 2.0 * visits * bm * k * n
-    x_bytes = visits * n_steps * bm * k * 2            # bf16 x per N step
-    dy_bytes = visits * k_steps * bm * n * 2           # bf16 dy per K step
-    dw_bytes = g * k * n * 4                           # f32 dw flush
+    if precision == "fp8":
+        kb = -(-k // QUANT_BLOCK)
+        nb = -(-n // QUANT_BLOCK)
+        x_bytes = visits * n_steps * bm * (k + 4 * kb)   # fp8 x + f32 S_x
+        dy_bytes = visits * k_steps * bm * (n + 4 * nb)  # fp8 dy + f32 S_dy
+    else:
+        x_bytes = visits * n_steps * bm * k * 2          # bf16 x per N step
+        dy_bytes = visits * k_steps * bm * n * 2         # bf16 dy per K step
+    dw_bytes = g * k * n * 4                             # f32 dw flush
     return max(flops / spec.peak_flops,
                (x_bytes + dy_bytes + dw_bytes) / spec.hbm_bw)
 
@@ -555,6 +578,16 @@ def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
         def run():
             return dispatch.grouped_gemm_wgrad(x, dy, gs, num_groups=g,
                                                config=config)
+    elif op == "wgrad_fp8":
+        x8, sx = ref.quantize_tilewise_ref(
+            jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
+        d8, sd = ref.quantize_tilewise_ref(
+            jnp.asarray(rng.standard_normal((m, n)), jnp.float32))
+
+        def run():
+            return dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs,
+                                                   num_groups=g,
+                                                   config=config)
     else:
         a8, sa = ref.quantize_tilewise_ref(
             jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
@@ -590,8 +623,10 @@ def autotune(m: int, k: int, n: int, g: int, *,
     ``op`` picks the operation family: ``"gemm"`` is the forward/dgrad
     orientation (ragged M output rows), ``"wgrad"`` the ragged-contraction
     orientation (``dw[g] = x_g^T @ dy_g`` — M is contracted, output is the
-    dense ``[G, K, N]``).  The two rank by different roofline terms and
-    cache under distinct keys: a routing decision tunes once per family.
+    dense ``[G, K, N]``), and ``"wgrad_fp8"`` the same contraction with
+    fp8 operands + 1x128 tile scales (per-visit dequantization).  Each
+    ranks by its own roofline terms and caches under distinct keys: a
+    routing decision tunes once per family it uses.
 
     Pool candidates are ranked by the roofline cost model, the top
     ``max_candidates`` are measured on the live backend (skipped with
@@ -601,10 +636,20 @@ def autotune(m: int, k: int, n: int, g: int, *,
     """
     from repro.kernels import dispatch
 
-    if op not in ("gemm", "wgrad"):
-        raise ValueError(f"unknown autotune op {op!r}; use 'gemm' or 'wgrad'")
-    resolved = (dispatch.resolve_wgrad_backend(backend) if op == "wgrad"
-                else dispatch.resolve_backend(backend))
+    if op not in ("gemm", "wgrad", "wgrad_fp8"):
+        raise ValueError(f"unknown autotune op {op!r}; use 'gemm', "
+                         "'wgrad' or 'wgrad_fp8'")
+    if op == "wgrad_fp8":
+        resolved = dispatch.resolve_wgrad_backend(backend, precision="fp8")
+    elif op == "wgrad":
+        resolved = dispatch.resolve_wgrad_backend(backend)
+    else:
+        resolved = dispatch.resolve_backend(backend)
+    # configs carry the family-neutral backend name (one config string
+    # rides a whole training step); the fp8 wgrad dispatch re-derives its
+    # ``*_fp8`` registry twin from it at run time
+    base = dispatch._wgrad_twin(resolved, "bf16")
+    tile_free = resolved in dispatch.TILE_FREE_BACKENDS
     kind = _device_kind()
     key = cache_key(kind, resolved, m, k, n, g, op=op)
     entries = load_cache(cache_path)
@@ -612,23 +657,29 @@ def autotune(m: int, k: int, n: int, g: int, *,
         entry = entries[key]
         # a cost-model-only entry does not satisfy a measured request —
         # upgrade it (tile-free backends never measure, so theirs stand)
-        wants_measured = (measure
-                          and not dispatch.backend_ignores_tiles(resolved))
+        wants_measured = measure and not tile_free
         if entry.get("source") == "measured" or not wants_measured:
             return KernelConfig.from_dict(entry["config"])
 
     # wgrad's output is never transposed — forward/dgrad legality demands
     # both orientations, wgrad only its own
     cands = candidate_pool(k, n, pool,
-                           require_transposable=(op != "wgrad"))
+                           require_transposable=(op == "gemm"))
     if not cands:
         raise ValueError(f"no pool candidate is legal for K={k}, N={n}")
     spec = device_spec(kind)
-    cost = estimate_cost_s_wgrad if op == "wgrad" else estimate_cost_s
+    if op == "gemm":
+        cost = estimate_cost_s
+    else:
+        prec = "fp8" if op == "wgrad_fp8" else "bf16"
+        cost = lambda *a: estimate_cost_s_wgrad(*a, precision=prec)  # noqa: E731
     ranked = sorted(cands, key=lambda c: cost(m, k, n, g, c, spec))
-    ranked = [c.with_(backend=resolved) for c in ranked]
+    overrides = {"backend": base}
+    if op == "wgrad_fp8":
+        overrides["wgrad_precision"] = "fp8"
+    ranked = [c.with_(**overrides) for c in ranked]
 
-    if measure and not dispatch.backend_ignores_tiles(resolved):
+    if measure and not tile_free:
         timed = [(_measure_candidate(c, m, k, n, g, seed=seed, op=op), c)
                  for c in ranked[:max_candidates]]
         best_s, best = min(timed, key=lambda tc: tc[0])

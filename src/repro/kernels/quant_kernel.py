@@ -4,6 +4,16 @@ This is the producer of the grouped-GEMM kernel's ``(a_fp8, s_a)`` operands.
 It replaces the baseline's *padding kernel* (the Triton pad-to-128 kernel the
 paper benchmarks against at ~2000 GB/s): in the padding-free pipeline the
 quantizer writes the exact ``M`` rows, no more.
+
+Per-row scale layout contract (shared by every consumer): the scales are
+``[M, ceil(last_dim/128)]`` f32, one scale per 1x128 tile of the row,
+travelling on the SAME global M-tiles as the payload.  The layout is
+orientation-agnostic on purpose — the x side of the forward GEMM
+(scales over K), the dy side of the dgrad (scales over N), and BOTH
+operands of the fp8 wgrad (``gmm_pallas_wgrad_fp8`` dequantizes x over K
+and dy over N per visit) consume the one output format of this kernel, so
+the backward's single ``quantize_tilewise(dy)`` serves the dgrad and the
+wgrad without a dy-specific quantizer.
 """
 from __future__ import annotations
 

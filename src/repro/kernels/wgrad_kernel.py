@@ -34,10 +34,21 @@ Groups that receive zero rows are never visited, so their output blocks
 are undefined on exit; a ``jnp.where`` epilogue pins them to the
 mathematically correct zeros.
 
-Operands arrive un-quantized (bf16/f32): DeepSeek-V3 (and the paper) keep
-wgrad at the highest precision of the three training GEMMs, so there is no
-scale bookkeeping here — just f32 accumulation of bf16 products, matching
-``compat.ragged_wgrad`` numerics.
+Two operand precisions share the schedule machinery:
+
+  * :func:`gmm_pallas_wgrad` — operands arrive un-quantized (bf16/f32):
+    DeepSeek-V3 (and the paper) keep wgrad at the highest precision of the
+    three training GEMMs, so there is no scale bookkeeping — just f32
+    accumulation of bf16 products, matching ``compat.ragged_wgrad``
+    numerics.  This is the default.
+  * :func:`gmm_pallas_wgrad_fp8` — the all-fp8 step of arXiv 2505.20524:
+    x and dy arrive as fp8 with their 1x128 per-row tile scales (the SAME
+    ``(a8, sa)`` the forward GEMM consumed and the SAME ``(d8, sd)`` the
+    dgrad quantized — nothing is re-quantized for the wgrad).  Each visit
+    dequantizes its owned rows on the fly: the scale-multiply is folded
+    into the masked ``jnp.where`` prologue, so unowned/garbage rows are
+    zeroed and owned rows are rescaled in one VPU pass before the
+    f32-accumulated transposed dot.
 """
 from __future__ import annotations
 
@@ -50,7 +61,88 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
-from repro.kernels.plan import KernelConfig, TilePlan, make_tile_plan
+from repro.kernels.plan import (QUANT_BLOCK, KernelConfig, TilePlan,
+                                make_tile_plan)
+
+
+def _visit_bookkeeping(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
+                       *, block_m, max_visits):
+    """Shared per-visit schedule logic of BOTH wgrad kernels (bf16 and
+    fp8 operands walk the identical visitation schedule).
+
+    Returns ``(first, last, owned)``:
+
+      * ``first``/``last`` — visit-run boundaries: group_ids is
+        non-decreasing, so a group's visits are adjacent and its output
+        block stays resident in VMEM between them;
+      * ``owned`` — (block_m, 1) row mask: rows of this M-tile inside the
+        visit's group range, with *duplicate* padding visits masked out
+        entirely (padding visits with no tail tiles to sweep replicate
+        the last real visit; re-accumulating it would double-count).
+    """
+    t = pl.program_id(2)
+    g = group_ids_ref[t]
+    m_tile = m_tile_ids_ref[t]
+    prev_g = group_ids_ref[jnp.maximum(t - 1, 0)]
+    prev_tile = m_tile_ids_ref[jnp.maximum(t - 1, 0)]
+    next_g = group_ids_ref[jnp.minimum(t + 1, max_visits - 1)]
+
+    first = (t == 0) | (g != prev_g)
+    last = (t == max_visits - 1) | (next_g != g)
+    dup = (t > 0) & (g == prev_g) & (m_tile == prev_tile)
+
+    start = group_offsets_ref[g]
+    end = group_offsets_ref[g + 1]
+    rows = m_tile * block_m + jax.lax.broadcasted_iota(
+        jnp.int32, (block_m, 1), 0)
+    owned = (rows >= start) & (rows < end) & jnp.logical_not(dup)
+    return first, last, owned
+
+
+def _zero_empty_groups(dw, plan, out_dtype):
+    """Empty groups are never visited, so their output blocks are
+    undefined on exit — pin them to the mathematically correct zeros
+    (shared epilogue of both wgrad drivers)."""
+    nonempty = (plan.group_offsets[1:] - plan.group_offsets[:-1]) > 0
+    return jnp.where(nonempty[:, None, None], dw, jnp.zeros((), out_dtype))
+
+
+def _run_ragged_contraction(kernel_body, operands, in_specs, group_sizes, *,
+                            m, k, n, num_groups, block_m, block_n, block_k,
+                            out_dtype, interpret, plan):
+    """Shared driver of both wgrad precisions: M=0 short-circuit,
+    plan-or-build, the (K tiles, N tiles, visits) grid, the pallas_call
+    scaffold (dense [G, K, N] output, f32 accumulator scratch, parallel/
+    parallel/arbitrary semantics), and the empty-group epilogue.  The
+    precision variants differ only in their operand list + BlockSpecs and
+    the kernel body; everything scheduling-related lives HERE once."""
+    if m == 0:
+        return jnp.zeros((num_groups, k, n), out_dtype)
+    if plan is None:
+        plan = make_tile_plan(group_sizes, m, block_m=block_m,
+                              num_groups=num_groups)
+    grid = (k // block_k, n // block_n, plan.max_visits)
+    kernel = functools.partial(
+        kernel_body, block_m=block_m, block_k=block_k, block_n=block_n,
+        max_visits=plan.max_visits, out_dtype=out_dtype)
+    dw = pl.pallas_call(
+        kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec(
+                (1, block_k, block_n),
+                lambda k_i, n_i, t, go, gi, mi: (gi[t], k_i, n_i)),
+            scratch_shapes=[pltpu.VMEM((block_k, block_n), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((num_groups, k, n), out_dtype),
+        compiler_params=compat.tpu_compiler_params(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(plan.group_offsets, plan.group_ids, plan.m_tile_ids, *operands)
+    return _zero_empty_groups(dw, plan, out_dtype)
 
 
 def _gmm_wgrad_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
@@ -58,31 +150,13 @@ def _gmm_wgrad_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
                       out_ref,                           # VMEM out
                       acc_ref,                           # scratch
                       *, block_m, block_k, block_n, max_visits, out_dtype):
-    t = pl.program_id(2)
-
-    g = group_ids_ref[t]
-    m_tile = m_tile_ids_ref[t]
-    prev_g = group_ids_ref[jnp.maximum(t - 1, 0)]
-    prev_tile = m_tile_ids_ref[jnp.maximum(t - 1, 0)]
-    next_g = group_ids_ref[jnp.minimum(t + 1, max_visits - 1)]
-
-    # visit-run boundaries: group_ids is non-decreasing, so a group's
-    # visits are adjacent and its output block stays resident between them
-    first = (t == 0) | (g != prev_g)
-    last = (t == max_visits - 1) | (next_g != g)
-    # padding visits with no tail tiles to sweep replicate the last real
-    # visit; re-accumulating it would double-count — skip duplicates
-    dup = (t > 0) & (g == prev_g) & (m_tile == prev_tile)
+    first, last, owned = _visit_bookkeeping(
+        group_offsets_ref, group_ids_ref, m_tile_ids_ref,
+        block_m=block_m, max_visits=max_visits)
 
     @pl.when(first)
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
-
-    start = group_offsets_ref[g]
-    end = group_offsets_ref[g + 1]
-    rows = m_tile * block_m + jax.lax.broadcasted_iota(
-        jnp.int32, (block_m, 1), 0)
-    owned = (rows >= start) & (rows < end) & jnp.logical_not(dup)
 
     # mask BOTH operands: rows beyond M (the block-padded tail of the last
     # tile) or beyond sum(group_sizes) may hold garbage/NaN, and 0 * NaN
@@ -137,48 +211,136 @@ def gmm_pallas_wgrad(x: jax.Array, dy: jax.Array, group_sizes: jax.Array, *,
     KernelConfig(block_m=block_m, block_n=block_n,
                  block_k=block_k).validate(m, k, n)
 
-    if m == 0:
-        return jnp.zeros((num_groups, k, n), out_dtype)
+    in_specs = [
+        # x tile: globally block-aligned copy of the visit's M-tile,
+        # K-slice
+        pl.BlockSpec((block_m, block_k),
+                     lambda k_i, n_i, t, go, gi, mi: (mi[t], k_i)),
+        # dy tile: same M-tile, N-slice
+        pl.BlockSpec((block_m, block_n),
+                     lambda k_i, n_i, t, go, gi, mi: (mi[t], n_i)),
+    ]
+    return _run_ragged_contraction(
+        _gmm_wgrad_kernel, (x, dy), in_specs, group_sizes,
+        m=m, k=k, n=n, num_groups=num_groups, block_m=block_m,
+        block_n=block_n, block_k=block_k, out_dtype=out_dtype,
+        interpret=interpret, plan=plan)
 
-    if plan is None:
-        plan = make_tile_plan(group_sizes, m, block_m=block_m,
-                              num_groups=num_groups)
-    grid = (k // block_k, n // block_n, plan.max_visits)
 
-    kernel = functools.partial(
-        _gmm_wgrad_kernel, block_m=block_m, block_k=block_k,
-        block_n=block_n, max_visits=plan.max_visits, out_dtype=out_dtype)
+# ---------------------------------------------------------------------------
+# fp8-operand variant (arXiv 2505.20524: the all-fp8 training step)
+# ---------------------------------------------------------------------------
 
-    def _run_kernel(group_offsets, group_ids, m_tile_ids):
-        return pl.pallas_call(
-            kernel,
-            grid_spec=pltpu.PrefetchScalarGridSpec(
-                num_scalar_prefetch=3,
-                grid=grid,
-                in_specs=[
-                    # x tile: globally block-aligned copy of the visit's
-                    # M-tile, K-slice
-                    pl.BlockSpec((block_m, block_k),
-                                 lambda k_i, n_i, t, go, gi, mi: (mi[t], k_i)),
-                    # dy tile: same M-tile, N-slice
-                    pl.BlockSpec((block_m, block_n),
-                                 lambda k_i, n_i, t, go, gi, mi: (mi[t], n_i)),
-                ],
-                out_specs=pl.BlockSpec(
-                    (1, block_k, block_n),
-                    lambda k_i, n_i, t, go, gi, mi: (gi[t], k_i, n_i)),
-                scratch_shapes=[pltpu.VMEM((block_k, block_n), jnp.float32)],
-            ),
-            out_shape=jax.ShapeDtypeStruct((num_groups, k, n), out_dtype),
-            compiler_params=compat.tpu_compiler_params(
-                dimension_semantics=("parallel", "parallel", "arbitrary"),
-            ),
-            interpret=interpret,
-        )(group_offsets, group_ids, m_tile_ids, x, dy)
+def _gmm_wgrad_fp8_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
+                          x_ref, sx_ref, dy_ref, sdy_ref,   # VMEM in
+                          out_ref,                          # VMEM out
+                          acc_ref,                          # scratch
+                          *, block_m, block_k, block_n, max_visits,
+                          out_dtype):
+    k_i = pl.program_id(0)
+    n_i = pl.program_id(1)
+    first, last, owned = _visit_bookkeeping(
+        group_offsets_ref, group_ids_ref, m_tile_ids_ref,
+        block_m=block_m, max_visits=max_visits)
 
-    dw = _run_kernel(plan.group_offsets, plan.group_ids, plan.m_tile_ids)
-    # empty groups are never visited, so their output blocks are undefined
-    # on exit — pin them to the mathematically correct zeros
-    nonempty = (plan.group_offsets[1:] - plan.group_offsets[:-1]) > 0
-    return jnp.where(nonempty[:, None, None], dw,
-                     jnp.zeros((), out_dtype))
+    @pl.when(first)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # per-row 1x128 tile scales for this visit's K-slice / N-slice (whole
+    # scale rows travel on the M-tile like the forward's S_A over-fetch)
+    kq = block_k // QUANT_BLOCK
+    nq = block_n // QUANT_BLOCK
+    sx = jax.lax.dynamic_slice(sx_ref[...], (0, k_i * kq), (block_m, kq))
+    sdy = jax.lax.dynamic_slice(sdy_ref[...], (0, n_i * nq), (block_m, nq))
+    sx_full = jnp.repeat(sx, QUANT_BLOCK, axis=1)       # (bm, bk)
+    sdy_full = jnp.repeat(sdy, QUANT_BLOCK, axis=1)     # (bm, bn)
+
+    # dequantize-on-visit with the scale-multiply folded into the masked
+    # prologue: one jnp.where zeroes unowned rows (whose fp8 payload AND
+    # scale rows may be garbage — 0 * NaN would poison the accumulation)
+    # and rescales owned ones, then the transposed dot accumulates in f32
+    x = jnp.where(owned, x_ref[...].astype(jnp.float32) * sx_full, 0.0)
+    dy = jnp.where(owned, dy_ref[...].astype(jnp.float32) * sdy_full, 0.0)
+    acc_ref[...] += jax.lax.dot_general(
+        x, dy, dimension_numbers=(((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(last)
+    def _store():
+        out_ref[0] = acc_ref[...].astype(out_dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("num_groups", "block_m", "block_n", "block_k",
+                     "out_dtype", "interpret"))
+def gmm_pallas_wgrad_fp8(x_fp8: jax.Array, s_x: jax.Array,
+                         dy_fp8: jax.Array, s_dy: jax.Array,
+                         group_sizes: jax.Array, *,
+                         num_groups: int | None = None,
+                         block_m: int = 128, block_n: int = 128,
+                         block_k: int = 128,
+                         out_dtype: Any = jnp.float32,
+                         interpret: bool = False,
+                         plan: TilePlan | None = None):
+    """Padding-free ragged-contraction grouped GEMM with fp8 operands.
+
+    x_fp8:  [M, K]  fp8 e4m3 — the forward's quantized activation (the
+            VJP residual; NOT re-quantized for the wgrad)
+    s_x:    [M, KB] f32 — its 1x128 tile scales (KB = ceil(K/128))
+    dy_fp8: [M, N]  fp8 e4m3 — the upstream gradient as quantized for the
+            dgrad (one ``quantize_tilewise(dy)`` serves both backward GEMMs)
+    s_dy:   [M, NB] f32 — its 1x128 tile scales (NB = ceil(N/128))
+    group_sizes: [G] int32, ``sum <= M`` (tail rows excluded)
+    plan:   optional precomputed :class:`TilePlan` — the SAME plan every
+            other GEMM of this routing decision used; its ``block_m``
+            governs the contraction tiling when given.
+    returns [G, K, N] out_dtype with ``dw[g] = x_g^T @ dy_g`` where each
+            visit dequantizes its owned rows (scale-multiply in the masked
+            prologue) before the f32-accumulated transposed dot; groups
+            with zero rows come back exactly zero.
+    """
+    m, k = x_fp8.shape
+    m2, n = dy_fp8.shape
+    if m != m2:
+        raise ValueError(
+            f"x and dy disagree on M: x_fp8 is [M={m}, K={k}] but dy_fp8 "
+            f"is [M={m2}, N={n}]")
+    kb = (k + QUANT_BLOCK - 1) // QUANT_BLOCK
+    nb = (n + QUANT_BLOCK - 1) // QUANT_BLOCK
+    if s_x.shape != (m, kb):
+        raise ValueError(
+            f"s_x must be [M={m}, ceil(K/{QUANT_BLOCK})={kb}], got "
+            f"{s_x.shape} (x_fp8 {x_fp8.shape})")
+    if s_dy.shape != (m, nb):
+        raise ValueError(
+            f"s_dy must be [M={m}, ceil(N/{QUANT_BLOCK})={nb}], got "
+            f"{s_dy.shape} (dy_fp8 {dy_fp8.shape})")
+    num_groups = num_groups or group_sizes.shape[0]
+    if plan is not None:
+        block_m = plan.block_m
+        plan.check_against(m, block_m, num_groups)
+    KernelConfig(block_m=block_m, block_n=block_n,
+                 block_k=block_k).validate(m, k, n)
+
+    in_specs = [
+        # x tile: the visit's M-tile, K-slice (fp8 payload)
+        pl.BlockSpec((block_m, block_k),
+                     lambda k_i, n_i, t, go, gi, mi: (mi[t], k_i)),
+        # S_x: whole scale row per M-tile (forward-style over-fetch,
+        # padded to the 128-lane VMEM tile)
+        pl.BlockSpec((block_m, kb),
+                     lambda k_i, n_i, t, go, gi, mi: (mi[t], 0)),
+        # dy tile: same M-tile, N-slice (fp8 payload)
+        pl.BlockSpec((block_m, block_n),
+                     lambda k_i, n_i, t, go, gi, mi: (mi[t], n_i)),
+        # S_dy: whole scale row per M-tile
+        pl.BlockSpec((block_m, nb),
+                     lambda k_i, n_i, t, go, gi, mi: (mi[t], 0)),
+    ]
+    return _run_ragged_contraction(
+        _gmm_wgrad_fp8_kernel, (x_fp8, s_x, dy_fp8, s_dy), in_specs,
+        group_sizes, m=m, k=k, n=n, num_groups=num_groups, block_m=block_m,
+        block_n=block_n, block_k=block_k, out_dtype=out_dtype,
+        interpret=interpret, plan=plan)

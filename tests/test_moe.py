@@ -71,11 +71,77 @@ def test_capacity_clipping_drops_overflow():
 
 
 def test_capacity_helper_bounds():
-    assert _capacity(48, 16, 2.0) == 48          # decode: never exceeds slots
+    # EP capacities are ALWAYS an integral number of M-tiles — the clamp
+    # rounds up to the alignment instead of returning a raw slot count
+    # (pre-fix, 48 slots came back as capacity 48, breaking the docstring
+    # invariant and mis-bucketing autotune cache keys)
+    assert _capacity(48, 16, 2.0) == 128         # decode: one aligned tile
     assert _capacity(49152, 16, 2.0) == 6144
     assert _capacity(1000, 1, 2.0) == 1000       # TP mode: exact
-    assert _capacity(10000, 8, 1.0) % 128 == 0 or \
-        _capacity(10000, 8, 1.0) == 10000
+    assert _capacity(10000, 8, 1.0) % 128 == 0
+
+
+def test_capacity_alignment_boundary():
+    """Every EP capacity is a multiple of the alignment, bounded by the
+    aligned ceiling of the slot count (at most align-1 dead tail rows)."""
+    for num_slots in (1, 47, 48, 127, 128, 129, 1000, 10000):
+        for ep in (2, 4, 16):
+            for cf in (0.5, 1.0, 1.5, 2.0):
+                for align in (64, 128, 256):
+                    c = _capacity(num_slots, ep, cf, align=align)
+                    assert c % align == 0, (num_slots, ep, cf, align, c)
+                    assert c >= align
+                    cap_all = -(-num_slots // align) * align
+                    assert c <= cap_all
+
+
+def test_moe_capacity_exceeding_slots_pads_buffer():
+    """When the aligned capacity exceeds num_slots (tiny decode shapes)
+    the packed buffer pads with dead rows beyond sum(group_sizes) — the
+    layer must stay finite and keep every routed token."""
+    cfg = _cfg(num_experts=4, top_k=1, capacity_factor=8.0,
+               num_shared_experts=0)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (16, cfg.d_model))
+    # ep_size=4: num_slots=16 -> capacity rounds up to 128 > 16
+    from repro.core.moe import _capacity as cap_fn
+    assert cap_fn(16, 4, 8.0) > 16
+    total = jnp.zeros((16, cfg.d_model), jnp.float32)
+    for rank in range(4):
+        local = dict(params)
+        for k in ("w_gate", "w_up", "w_down"):
+            local[k] = params[k][rank:rank + 1]
+        y, aux = moe_apply(local, x, cfg, ep_rank=rank, ep_size=4)
+        assert bool(jnp.isfinite(y).all())
+        total = total + y.astype(jnp.float32)
+    # partial EP outputs sum to the unsharded layer's output
+    y_full, _ = moe_apply(params, x, cfg)
+    np.testing.assert_allclose(np.asarray(total),
+                               np.asarray(y_full, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_init_moe_params_distinct_subkey_draws():
+    """REGRESSION: shared_down used to draw from the PARENT key instead of
+    a fresh split — its init was correlated with the subkey stream.  All
+    seven params must come from pairwise-distinct draws, and shared_down
+    must not be reproducible from the parent key."""
+    cfg = _cfg(num_experts=4, top_k=1, d_model=64, d_ff_expert=64,
+               num_shared_experts=1)
+    key = jax.random.PRNGKey(7)
+    p = init_moe_params(key, cfg)
+    fs = cfg.d_ff_expert * cfg.num_shared_experts
+    parent_draw = np.asarray(
+        jax.random.normal(key, (fs, cfg.d_model), jnp.float32) * fs ** -0.5)
+    assert not np.allclose(np.asarray(p["shared_down"]), parent_draw), \
+        "shared_down reuses the parent key"
+    # pairwise-distinct: compare equal-size prefixes of every pair
+    names = sorted(p)
+    flats = {n: np.asarray(p[n], np.float32).ravel() for n in names}
+    m = min(v.size for v in flats.values())
+    for i, a in enumerate(names):
+        for b in names[i + 1:]:
+            assert not np.allclose(flats[a][:m], flats[b][:m]), (a, b)
 
 
 def test_dense_dispatch_fractional_capacity_keeps_ragged_tokens():

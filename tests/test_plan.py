@@ -222,20 +222,24 @@ def test_moe_fwd_bwd_builds_metadata_exactly_once(monkeypatch):
         f"expected exactly one metadata build, saw {len(calls)}"
 
 
-# Golden values captured on the parent commit (pre-TilePlan refactor) with
-# this exact fixture on pallas_interpret — the refactor must be a pure
-# plumbing change, bitwise.
-_GOLDEN_FWD_SUM = 59.379676818847656
-_GOLDEN_LOSS = -49.97098159790039
-_GOLDEN_Y00 = 0.4349987506866455
+# Golden values pin the fp8 MoE fwd+bwd bitwise so refactors stay pure
+# plumbing.  Recaptured once for the init_moe_params key-split bugfix
+# (splitting 7 keys instead of 6 redraws every param — the distributions
+# are unchanged, the draws are not); the quantize-once refactor landing in
+# the same PR was verified bitwise-neutral against the PREVIOUS goldens by
+# reconstructing the pre-fix params (split 6 + parent-key shared_down) and
+# reproducing them exactly.
+_GOLDEN_FWD_SUM = 16.611400604248047
+_GOLDEN_LOSS = -10.41189956665039
+_GOLDEN_Y00 = -0.0176808163523674
 _GOLDEN_GRADNORMS = {
-    "router": 151.9246063232422,
-    "shared_down": 383.9273376464844,
-    "shared_gate": 442.91754150390625,
-    "shared_up": 423.17279052734375,
-    "w_down": 247.3162078857422,
-    "w_gate": 272.0900573730469,
-    "w_up": 257.19549560546875,
+    "router": 178.5314483642578,
+    "shared_down": 416.1788635253906,
+    "shared_gate": 450.4234313964844,
+    "shared_up": 437.5754699707031,
+    "w_down": 271.82525634765625,
+    "w_gate": 289.45892333984375,
+    "w_up": 267.9383544921875,
 }
 
 
@@ -255,8 +259,10 @@ def test_capacity_respects_block_m_alignment():
     assert _capacity(49152, 16, 2.0) == 6144            # 128-aligned default
     assert _capacity(49152, 16, 2.0, align=256) == 6144  # already aligned
     assert _capacity(1000, 4, 2.0, align=64) % 64 == 0
-    assert _capacity(1000, 4, 2.0, align=512) == min(1000, 512)
-    assert _capacity(48, 16, 2.0, align=256) == 48       # never exceeds slots
+    assert _capacity(1000, 4, 2.0, align=512) == 512
+    # the clamp itself is aligned now: tiny decode shapes round up to one
+    # tile instead of returning the unaligned slot count
+    assert _capacity(48, 16, 2.0, align=256) == 256
 
 
 def test_moe_with_nondefault_kernel_config_runs():

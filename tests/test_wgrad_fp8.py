@@ -1,0 +1,491 @@
+"""The all-fp8 training step (arXiv 2505.20524): fp8-operand wgrad kernel
+vs its dequantize-first oracles over ragged shapes, the precision-aware
+wgrad registry (``*_fp8`` twins), quantize-once plumbing (ONE
+``quantize_tilewise`` of a shared activation buffer serves the MoE gate+up
+forward AND the backward wgrad via the VJP residual), and the
+``wgrad_fp8`` autotune family."""
+import dataclasses
+import warnings
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import moe as moe_mod
+from repro.core import quantization as qz
+from repro.core.grouped_gemm import dense_linear_fp8, grouped_linear
+from repro.kernels import dispatch, ref
+from repro.kernels import plan as plan_mod
+from repro.kernels.plan import KernelConfig, make_tile_plan
+from repro.kernels.wgrad_kernel import gmm_pallas_wgrad_fp8
+
+
+def _quantized_inputs(sizes, m_buf, k, n, seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m_buf, k)), jnp.float32)
+    dy = jnp.asarray(rng.standard_normal((m_buf, n)), jnp.float32)
+    x8, sx = ref.quantize_tilewise_ref(x)
+    d8, sd = ref.quantize_tilewise_ref(dy)
+    return x, dy, x8, sx, d8, sd, jnp.asarray(sizes, jnp.int32)
+
+
+# ragged, empty groups, sum < M (capacity tails), sub-block groups
+CASES = [
+    ([128, 128], 256, 128, 128),
+    ([100, 0, 37, 163], 300, 256, 256),
+    ([60, 30], 256, 128, 128),              # sum=90 << m_buf
+    ([1, 1, 1, 1], 64, 128, 256),
+    ([0, 0, 512], 512, 128, 384),
+    ([5, 250, 3, 127, 129], 600, 384, 128),
+    ([0, 0, 0], 128, 128, 128),             # every group empty
+]
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("sizes,m_buf,k,n", CASES)
+def test_fp8_wgrad_kernel_matches_fp8_exact_oracle(sizes, m_buf, k, n):
+    """Per-visit dequantization == up-front f32 dequantization, to f32
+    rounding: the kernel's masked scale-multiply prologue must reproduce
+    the dequantize-then-contract oracle on every ragged shape."""
+    _, _, x8, sx, d8, sd, gs = _quantized_inputs(
+        sizes, m_buf, k, n, seed=sum(sizes) + m_buf)
+    got = gmm_pallas_wgrad_fp8(x8, sx, d8, sd, gs, interpret=True)
+    want = dispatch.wgrad_fp8_xla_exact(x8, sx, d8, sd, gs,
+                                        num_groups=len(sizes))
+    assert got.shape == (len(sizes), k, n)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+@pytest.mark.parametrize("sizes,m_buf,k,n", CASES[:4])
+def test_fp8_wgrad_within_quantization_tolerance_of_bf16(sizes, m_buf, k, n):
+    """fp8-operand wgrad == bf16-operand wgrad up to fp8 quantization
+    noise (the claim of arXiv 2505.20524 this PR imports): relative
+    deviation bounded well below what a broken mask/scale would produce."""
+    x, dy, x8, sx, d8, sd, gs = _quantized_inputs(sizes, m_buf, k, n,
+                                                  seed=3)
+    got = gmm_pallas_wgrad_fp8(x8, sx, d8, sd, gs, interpret=True)
+    want = dispatch.wgrad_xla_exact(x, dy, gs, num_groups=len(sizes))
+    scale = max(float(jnp.abs(want).max()), 1e-6)
+    rel = float(jnp.abs(got - want).max()) / scale
+    assert rel < 0.08, f"fp8 wgrad deviates {rel:.4f} from bf16/f32 wgrad"
+
+
+def test_fp8_wgrad_empty_groups_and_tail_garbage():
+    """Empty groups come back exactly zero, and garbage (NaN) scales in
+    the capacity tail beyond sum(group_sizes) never reach the
+    accumulation — the masked prologue zeroes BEFORE the rescale."""
+    _, _, x8, sx, d8, sd, gs = _quantized_inputs([60, 0, 30], 256, 128,
+                                                 128, seed=5)
+    sx = sx.at[90:].set(jnp.nan)
+    sd = sd.at[90:].set(jnp.nan)
+    dw = gmm_pallas_wgrad_fp8(x8, sx, d8, sd, gs, interpret=True)
+    assert bool(jnp.isfinite(dw).all())
+    assert float(jnp.abs(dw[1]).max()) == 0.0
+    want = dispatch.wgrad_fp8_xla_exact(x8[:90], sx[:90], d8[:90], sd[:90],
+                                        gs, num_groups=3)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fp8_wgrad_precomputed_plan_bitwise_and_scale_shape_checks():
+    _, _, x8, sx, d8, sd, gs = _quantized_inputs([100, 0, 37, 163], 300,
+                                                 256, 128, seed=7)
+    plan = make_tile_plan(gs, 300, block_m=128)
+    free = gmm_pallas_wgrad_fp8(x8, sx, d8, sd, gs, interpret=True)
+    planned = gmm_pallas_wgrad_fp8(x8, sx, d8, sd, gs, interpret=True,
+                                   plan=plan)
+    np.testing.assert_array_equal(np.asarray(free), np.asarray(planned))
+    with pytest.raises(ValueError, match="s_x must be"):
+        gmm_pallas_wgrad_fp8(x8, sx[:, :1], d8, sd, gs, interpret=True)
+    with pytest.raises(ValueError, match="s_dy must be"):
+        gmm_pallas_wgrad_fp8(x8, sx, d8, sd[:100], gs, interpret=True)
+
+
+def test_fp8_wgrad_xla_ragged_matches_exact():
+    if not dispatch.wgrad_availability("xla_ragged_fp8")[0]:
+        pytest.skip("no ragged wgrad in this jax")
+    _, _, x8, sx, d8, sd, gs = _quantized_inputs([100, 0, 37, 163], 300,
+                                                 256, 256, seed=11)
+    got = dispatch.wgrad_fp8_xla_ragged(x8, sx, d8, sd, gs, num_groups=4)
+    want = dispatch.wgrad_fp8_xla_exact(x8, sx, d8, sd, gs, num_groups=4)
+    # the ragged entry dequantizes to bf16 (portable path); its operand
+    # rounding dominates the deviation from the f32-dequant oracle
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-2, atol=3e-1)
+
+
+# ---------------------------------------------------------------------------
+# Registry: the precision dimension
+# ---------------------------------------------------------------------------
+
+def test_wgrad_registry_has_fp8_twins():
+    names = dispatch.wgrad_backend_names()
+    for expected in ("pallas_fp8", "pallas_interpret_fp8",
+                     "xla_ragged_fp8", "xla_exact_fp8"):
+        assert expected in names
+    ok, _ = dispatch.wgrad_availability("pallas_interpret_fp8")
+    assert ok
+
+
+def test_resolve_wgrad_backend_precision_twins():
+    assert dispatch.resolve_wgrad_backend(
+        "pallas_interpret", precision="fp8") == "pallas_interpret_fp8"
+    # already-suffixed names normalize to the precision actually requested
+    assert dispatch.resolve_wgrad_backend(
+        "pallas_interpret_fp8", precision="fp8") == "pallas_interpret_fp8"
+    assert dispatch.resolve_wgrad_backend(
+        "pallas_interpret_fp8", precision="bf16") == "pallas_interpret"
+    assert dispatch.resolve_wgrad_backend(
+        "xla", precision="fp8") == "xla_ragged_fp8"
+    with pytest.raises(ValueError, match="precision"):
+        dispatch.resolve_wgrad_backend("pallas", precision="int4")
+
+
+def test_fp8_wgrad_dispatch_routes_and_defaults_f32():
+    _, _, x8, sx, d8, sd, gs = _quantized_inputs([40, 24], 64, 128, 128,
+                                                 seed=13)
+    dw = dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs,
+                                         backend="pallas_interpret")
+    assert dw.dtype == jnp.float32
+    want = dispatch.wgrad_fp8_xla_exact(x8, sx, d8, sd, gs, num_groups=2)
+    np.testing.assert_allclose(np.asarray(dw), np.asarray(want),
+                               rtol=1e-4, atol=1e-3)
+
+
+def test_fp8_wgrad_gemm_only_backend_falls_back_to_auto():
+    _, _, x8, sx, d8, sd, gs = _quantized_inputs([40, 24], 64, 128, 128,
+                                                 seed=17)
+    dw = dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs,
+                                         backend="padded_baseline")
+    assert dw.shape == (2, 128, 128)
+    with pytest.raises(ValueError, match="unknown backend"):
+        dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs,
+                                        backend="no_such_backend")
+
+
+def test_fp8_wgrad_explicit_unavailable_raises(monkeypatch):
+    from repro import compat
+    monkeypatch.setattr(compat, "has_tpu", lambda: False)
+    _, _, x8, sx, d8, sd, gs = _quantized_inputs([8], 8, 128, 128)
+    with pytest.raises(dispatch.BackendUnavailableError):
+        dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs,
+                                        backend="pallas")
+
+
+def test_fp8_wgrad_incompatible_tiles_fall_back_when_auto():
+    """Auto-resolved plan backends whose tile shapes don't divide (K, N)
+    fall back to a tile-free fp8 entry; an explicit request raises."""
+    _, _, x8, sx, d8, sd, gs = _quantized_inputs([40, 24], 64, 128, 128,
+                                                 seed=19)
+    cfg = KernelConfig(block_n=256)                 # N=128 not divisible
+    dw = dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs, config=cfg)
+    assert dw.shape == (2, 128, 128)
+    with pytest.raises(ValueError, match="block_n"):
+        dispatch.grouped_gemm_wgrad_fp8(
+            x8, sx, d8, sd, gs,
+            config=cfg.with_(backend="pallas_interpret"))
+
+
+def test_kernel_config_wgrad_precision_field():
+    assert KernelConfig().wgrad_precision == "bf16"
+    cfg = KernelConfig(wgrad_precision="fp8")
+    assert KernelConfig.from_dict(cfg.to_dict()) == cfg
+    # legacy cache entries without the key default to bf16
+    d = cfg.to_dict()
+    del d["wgrad_precision"]
+    assert KernelConfig.from_dict(d).wgrad_precision == "bf16"
+    with pytest.raises(ValueError, match="wgrad_precision"):
+        KernelConfig(wgrad_precision="int8")
+
+
+# ---------------------------------------------------------------------------
+# grouped_linear: wgrad_precision + quantize-once through the VJP
+# ---------------------------------------------------------------------------
+
+def _grad_setup(sizes=(60, 0, 30), m_buf=256, k=128, n=128, seed=29):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((m_buf, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((len(sizes), k, n)), jnp.float32)
+    return x, w, jnp.asarray(sizes, jnp.int32)
+
+
+@pytest.mark.parametrize("sizes,m_buf", [([40, 0, 57], 97),
+                                         ([60, 30], 256),
+                                         ([0, 0, 64], 128)])
+def test_grouped_linear_fp8_wgrad_matches_bf16_wgrad(sizes, m_buf):
+    """jax.grad through grouped_linear with wgrad_precision='fp8' vs the
+    default bf16 wgrad over ragged/empty/tail shapes: identical dx
+    (the dgrad path is untouched) and dw within fp8 tolerance."""
+    x, w, gs = _grad_setup(sizes, m_buf, seed=sum(sizes))
+
+    def grads(**kw):
+        def loss(x, w):
+            y = grouped_linear(x, w, gs, precision="fp8",
+                               backend="pallas_interpret", **kw)
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+        return jax.grad(loss, argnums=(0, 1))(x, w)
+
+    gx_bf, gw_bf = grads()
+    gx_f8, gw_f8 = grads(wgrad_precision="fp8")
+    np.testing.assert_array_equal(np.asarray(gx_bf), np.asarray(gx_f8))
+    assert bool(jnp.isfinite(gw_f8).all())
+    scale = max(float(jnp.abs(gw_bf).max()), 1e-6)
+    rel = float(jnp.abs(gw_f8 - gw_bf).max()) / scale
+    assert rel < 0.1, f"fp8 wgrad deviates {rel:.4f}"
+    total = sum(sizes)
+    assert np.all(np.asarray(gx_f8[total:]) == 0.0)   # tail dx stays zero
+
+
+def test_grouped_linear_fp8_wgrad_matches_xla_exact_backend():
+    x, w, gs = _grad_setup()
+
+    def gw(backend):
+        def loss(w):
+            y = grouped_linear(x, w, gs, precision="fp8", backend=backend,
+                               wgrad_precision="fp8")
+            return jnp.sum(y.astype(jnp.float32) ** 2)
+        return jax.grad(loss)(w)
+
+    gw_pal = gw("pallas_interpret")
+    gw_ora = gw("xla_exact")
+    assert float(jnp.abs(gw_pal[1]).max()) == 0.0     # empty group
+    np.testing.assert_allclose(np.asarray(gw_pal), np.asarray(gw_ora),
+                               rtol=5e-2, atol=5e-1)
+
+
+def test_fp8_bwd_reuses_forward_quantization(monkeypatch):
+    """Quantize-once, VJP leg: with wgrad_precision='fp8' one
+    forward+backward performs exactly TWO tilewise quantizations — x once
+    (forward; the residual serves the wgrad) and dy once (shared by the
+    dgrad and the wgrad's dy side).  Re-quantizing x in the backward
+    would make it three."""
+    x, w, gs = _grad_setup()
+    calls = []
+    real = qz.quantize_tilewise
+    monkeypatch.setattr(qz, "quantize_tilewise",
+                        lambda a, **kw: calls.append(a.shape) or
+                        real(a, **kw))
+
+    def loss(x, w):
+        y = grouped_linear(x, w, gs, precision="fp8",
+                           backend="pallas_interpret",
+                           wgrad_precision="fp8")
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    jax.grad(loss, argnums=(0, 1))(x, w)
+    assert len(calls) == 2, f"expected x-once + dy-once, saw {calls}"
+
+
+def test_quantized_activation_shared_across_calls(monkeypatch):
+    """Quantize-once, layer leg: one QuantizedActivation serves several
+    grouped_linear calls bitwise-identically, and gradients still flow."""
+    # n != k so the census can tell x-quantizations from dy-quantizations
+    x, w, gs = _grad_setup(n=256)
+    qa = qz.quantize_activation(x, backend="pallas_interpret")
+    y_qa = grouped_linear(x, w, gs, precision="fp8",
+                          backend="pallas_interpret", quantized=qa)
+    y_plain = grouped_linear(x, w, gs, precision="fp8",
+                             backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y_qa), np.asarray(y_plain))
+
+    calls = []
+    real = qz.quantize_tilewise
+    monkeypatch.setattr(qz, "quantize_tilewise",
+                        lambda a, **kw: calls.append(a.shape) or
+                        real(a, **kw))
+
+    def loss(x, w):
+        qa = qz.quantize_activation(x, backend="pallas_interpret")
+        y1 = grouped_linear(x, w, gs, precision="fp8",
+                            backend="pallas_interpret", quantized=qa,
+                            wgrad_precision="fp8")
+        y2 = grouped_linear(x, w, gs, precision="fp8",
+                            backend="pallas_interpret", quantized=qa,
+                            wgrad_precision="fp8")
+        return jnp.sum((y1 + y2).astype(jnp.float32) ** 2)
+
+    gx, gw = jax.grad(loss, argnums=(0, 1))(x, w)
+    assert bool(jnp.isfinite(gx).all()) and bool(jnp.isfinite(gw).all())
+    assert float(jnp.linalg.norm(gx)) > 0 and float(jnp.linalg.norm(gw)) > 0
+    # x quantized ONCE for both calls; each backward quantizes its dy
+    x_like = [s for s in calls if s == x.shape]
+    assert len(x_like) == 1, f"shared buffer quantized {len(x_like)}x"
+    assert len(calls) == 3, f"expected 1 shared + 2 dy quants, saw {calls}"
+
+
+def test_one_plan_serves_forward_dgrad_and_fp8_wgrad(monkeypatch):
+    """Build-count pin, fp8-wgrad edition: fwd+bwd still builds group
+    metadata exactly once — the fp8 wgrad consumes the SAME TilePlan."""
+    x, w, gs = _grad_setup()
+    calls = []
+    inner = plan_mod.make_group_metadata
+    monkeypatch.setattr(plan_mod, "make_group_metadata",
+                        lambda *a, **kw: calls.append(a) or inner(*a, **kw))
+
+    def loss(x, w):
+        y = grouped_linear(x, w, gs, precision="fp8",
+                           backend="pallas_interpret",
+                           wgrad_precision="fp8")
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    jax.grad(loss, argnums=(0, 1))(x, w)
+    assert len(calls) == 1, f"expected one metadata build, saw {len(calls)}"
+
+
+def test_bf16_path_warns_on_fp8_only_kwargs():
+    x, w, gs = _grad_setup(sizes=(16, 16), m_buf=32)
+    qa = qz.quantize_activation(x)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        grouped_linear(x, w, gs, precision="bf16", quantized=qa)
+    assert any("ignores quantized" in str(c.message) for c in caught)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        grouped_linear(x, w, gs, precision="bf16", wgrad_precision="fp8")
+    assert any("wgrad_precision" in str(c.message) for c in caught)
+    # the config-carried field must not be dropped silently either (the
+    # route MoEConfig.kernel_config advertises)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        grouped_linear(x, w, gs, precision="bf16",
+                       config=KernelConfig(wgrad_precision="fp8"))
+    assert any("wgrad_precision" in str(c.message) for c in caught)
+
+
+def test_dense_linear_fp8_forwards_out_dtype():
+    """REGRESSION: dense_linear_fp8 accepted no out_dtype and the G=1
+    wrapper could not pin one — it must forward like grouped_linear."""
+    rng = np.random.default_rng(31)
+    x = jnp.asarray(rng.standard_normal((32, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((128, 128)), jnp.float32)
+    y = dense_linear_fp8(x, w, backend="pallas_interpret",
+                         out_dtype=jnp.bfloat16)
+    assert y.dtype == jnp.bfloat16
+    # config-pinned out_dtype applies too
+    cfg = KernelConfig(backend="pallas_interpret", out_dtype=jnp.float32)
+    assert dense_linear_fp8(x, w, config=cfg).dtype == jnp.float32
+    # and the explicit kwarg wins over the pin
+    assert dense_linear_fp8(x, w, config=cfg,
+                            out_dtype=jnp.bfloat16).dtype == jnp.bfloat16
+
+
+# ---------------------------------------------------------------------------
+# MoE layer: the acceptance count (3 -> 1 quantizations of the shared xs)
+# ---------------------------------------------------------------------------
+
+def _moe_cfg(**kw):
+    base = dict(num_experts=4, top_k=2, d_model=128, d_ff_expert=256,
+                num_shared_experts=0, precision="fp8",
+                backend="pallas_interpret",
+                kernel_config=KernelConfig(wgrad_precision="fp8"))
+    base.update(kw)
+    return moe_mod.MoEConfig(**base)
+
+
+def test_moe_fp8_quantizes_shared_activation_exactly_once(monkeypatch):
+    """ACCEPTANCE: one fp8 MoE layer forward+backward performs exactly ONE
+    quantize_tilewise of the shared activation buffer (down from three —
+    gate fwd + up fwd + backward requant).  Total call census: xs once,
+    the down-projection's input h once, and one dy per GEMM's backward."""
+    cfg = _moe_cfg()
+    params = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    cap = moe_mod._capacity(32 * cfg.top_k, 1, cfg.capacity_factor)
+
+    calls = []
+    real = qz.quantize_tilewise
+    monkeypatch.setattr(qz, "quantize_tilewise",
+                        lambda a, **kw: calls.append(a.shape) or
+                        real(a, **kw))
+
+    # forward only: xs once (shared by gate+up) + h once
+    moe_mod.moe_apply(params, x, cfg)
+    assert calls == [(cap, cfg.d_model), (cap, cfg.d_ff_expert)], calls
+
+    # forward+backward: + one dy per GEMM backward (down/gate/up); the
+    # wgrads reuse the forward residuals — NO extra xs/h quantization
+    calls.clear()
+
+    def loss(p, x):
+        y, _ = moe_mod.moe_apply(p, x, cfg)
+        return jnp.mean(y.astype(jnp.float32) ** 2)
+
+    g = jax.grad(loss, argnums=(0, 1))(params, x)
+    xs_like = [s for s in calls if s == (cap, cfg.d_model)]
+    # (cap, d_model) twice: the shared xs + the down GEMM's dy (same shape)
+    assert len(xs_like) == 2, f"shared-buffer quantizations: {calls}"
+    assert len(calls) == 5, f"expected 2 fwd + 3 dy quants, saw {calls}"
+    for leaf in jax.tree_util.tree_leaves(g):
+        assert bool(jnp.isfinite(leaf).all())
+
+
+def test_moe_fp8_wgrad_precision_matches_bf16_layer():
+    """The all-fp8 layer's gradients stay within fp8 tolerance of the
+    default (bf16-wgrad) layer's."""
+    cfg8 = _moe_cfg()
+    cfg16 = dataclasses.replace(cfg8, kernel_config=KernelConfig())
+    params = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg8.d_model))
+
+    def grads(cfg):
+        def loss(p):
+            y, _ = moe_mod.moe_apply(p, x, cfg)
+            return jnp.mean(y.astype(jnp.float32) ** 2)
+        return jax.grad(loss)(params)
+
+    g8, g16 = grads(cfg8), grads(cfg16)
+    for name in g16:
+        a, b = np.asarray(g8[name], np.float32), np.asarray(g16[name],
+                                                            np.float32)
+        scale = max(np.abs(b).max(), 1e-6)
+        assert np.abs(a - b).max() / scale < 0.12, name
+
+
+# ---------------------------------------------------------------------------
+# Autotuner: the wgrad_fp8 family
+# ---------------------------------------------------------------------------
+
+def test_autotune_wgrad_fp8_caches_under_distinct_key(tmp_path):
+    cache = str(tmp_path / "c.json")
+    cfg_w = plan_mod.autotune(256, 128, 128, 4, backend="pallas_interpret",
+                              cache_path=cache, measure=False, op="wgrad")
+    cfg_f = plan_mod.autotune(256, 128, 128, 4, backend="pallas_interpret",
+                              cache_path=cache, measure=False,
+                              op="wgrad_fp8")
+    assert cfg_f.wgrad_precision == "fp8"
+    assert cfg_f.backend == "pallas_interpret"      # family-neutral name
+    assert cfg_w.wgrad_precision == "bf16"
+    entries = plan_mod.load_cache(cache)
+    key_f = plan_mod.cache_key(plan_mod._device_kind(),
+                               "pallas_interpret_fp8", 256, 128, 128, 4,
+                               op="wgrad_fp8")
+    assert key_f in entries and entries[key_f]["op"] == "wgrad_fp8"
+    plan_mod.clear_cache_memo()
+    again = plan_mod.autotune(256, 128, 128, 4, backend="pallas_interpret",
+                              cache_path=cache, measure=False,
+                              op="wgrad_fp8")
+    assert again == cfg_f
+
+
+def test_autotune_wgrad_fp8_measures_the_fp8_dispatch(tmp_path, monkeypatch):
+    cache = str(tmp_path / "c.json")
+    seen = []
+    real = plan_mod._measure_candidate
+
+    def spying(*a, **kw):
+        seen.append(kw.get("op", "gemm"))
+        return real(*a, iters=1, warmup=0,
+                    **{k: v for k, v in kw.items()
+                       if k not in ("iters", "warmup")})
+
+    monkeypatch.setattr(plan_mod, "_measure_candidate", spying)
+    cfg = plan_mod.autotune(256, 128, 128, 4, backend="pallas_interpret",
+                            cache_path=cache, max_candidates=1,
+                            op="wgrad_fp8")
+    assert seen and all(op == "wgrad_fp8" for op in seen)
+    assert cfg.wgrad_precision == "fp8"
