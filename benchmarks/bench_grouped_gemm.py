@@ -171,9 +171,57 @@ def bench_wgrad_fp8_cases(report, cases, *, backend=None,
                f"@{resolved};bf16_wgrad_us={t_bf16 * 1e6:.1f}")
 
 
+def bench_quantize_cases(report, cases, *, backend=None,
+                         measure_autotune=True):
+    """The quantizer's tile height through the same pool/roofline/cache
+    machinery (``op="quantize"``, a first-class OpKey of the registry).
+    Output is tile-height independent — the report compares the tuned
+    height's wall time against the kernel's built-in default on the same
+    payload."""
+    rng = np.random.default_rng(0)
+    for m, n, k, g in cases:
+        cfg = plan_mod.autotune(m, k, 0, 0, backend=backend,
+                                measure=measure_autotune, op="quantize")
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        t_tuned = time_fn(
+            lambda x_: dispatch.quantize_tilewise(x_, backend=cfg.backend,
+                                                  config=cfg), x)
+        t_default = time_fn(
+            lambda x_: dispatch.quantize_tilewise(x_, backend=cfg.backend),
+            x)
+        report(f"quantize/M{m}_K{k}",
+               t_tuned * 1e6,
+               f"config=bm{cfg.block_m}@{cfg.backend or 'auto'};"
+               f"kernel_default_us={t_default * 1e6:.1f}")
+
+
+def bench_decode_cases(report, cases, *, backend=None, measure_autotune=False):
+    """Serving's tiny-M regime: a decode step's grouped GEMM has
+    M = batch*top_k rows TOTAL, constant across steps.  Selection runs
+    through the decode pool (``op="decode"``, block_m<=16 entries) — the
+    path `serve.Engine` resolves once at construction — and the report
+    compares it against the training-shaped per-device default config on
+    the same shape, so the delta shows what the decode-specialized tile
+    height buys at M in {1, 8, 16}."""
+    for m, n, k, g in cases:
+        cfg = plan_mod.decode_config(m, k, n, g, backend=backend,
+                                     measure=measure_autotune)
+        a8, sa, b8, sb, gs, _ = _make_inputs(m, k, n, g, seed=m + g + n)
+        t_dec = time_fn(_ours, a8, sa, b8, sb, gs, cfg)
+        cfg_train = plan_mod.KernelConfig().with_(backend=cfg.backend)
+        t_train = time_fn(_ours, a8, sa, b8, sb, gs, cfg_train)
+        report(f"decode/M{m}_N{n}_K{k}_G{g}",
+               t_dec * 1e6,
+               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"@{cfg.backend or 'auto'};tiny_m=1;"
+               f"default_bm{cfg_train.block_m}_us={t_train * 1e6:.1f}")
+
+
 CASES = [(m, nk, nk, g) for m in (2048, 8192) for g in (4, 8, 16, 32)
          for nk in (256, 512)]
 SMOKE_CASES = [(256, 128, 128, 4)]   # tiny: interpret-mode friendly
+# decode-step shapes: M = batch*top_k routed rows in total
+DECODE_CASES = [(1, 256, 256, 4), (8, 256, 256, 4), (16, 256, 256, 4)]
 
 
 def run(report):
@@ -187,6 +235,9 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="one tiny shape (CI gate for the bench entry "
                          "points + the autotune cache round trip)")
+    ap.add_argument("--decode", action="store_true",
+                    help="tiny-M serving shapes (M in {1, 8, 16}) through "
+                         "the decode-specialized pool (block_m<=16)")
     ap.add_argument("--backend", default=None,
                     help="dispatch backend (default: auto-resolved)")
     args = ap.parse_args()
@@ -196,6 +247,10 @@ def main() -> None:
     def report(name, us, derived):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
+    if args.decode:
+        bench_decode_cases(report, DECODE_CASES, backend=args.backend,
+                           measure_autotune=not args.smoke)
+        return
     if args.smoke:
         # measured pool selection even on plan-consuming backends — the
         # shape is tiny, and it exercises selection + cache persistence
@@ -206,10 +261,13 @@ def main() -> None:
                           measure_autotune=True)
         bench_wgrad_fp8_cases(report, SMOKE_CASES, backend=args.backend,
                               measure_autotune=True)
+        bench_quantize_cases(report, SMOKE_CASES, backend=args.backend,
+                             measure_autotune=True)
     else:
         bench_cases(report, CASES, backend=args.backend)
         bench_wgrad_cases(report, CASES, backend=args.backend)
         bench_wgrad_fp8_cases(report, CASES, backend=args.backend)
+        bench_quantize_cases(report, CASES[:4], backend=args.backend)
 
 
 if __name__ == "__main__":

@@ -94,3 +94,53 @@ assert len(calls) == 5 and len(xs_like) == 2, \
     f"quantize-once violated: {calls}"
 print("quantize-once count OK")
 EOF
+
+# Serving decode gate: one Engine resolves ONE decode-specialized
+# (block_m<=16) config at construction, and a full generate (prefill +
+# >=4 decode steps) builds plan metadata exactly once per phase — the
+# decode loop replays its traced plan every step instead of re-planning.
+REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import dataclasses
+import jax
+from repro.configs import smoke_config
+from repro.kernels import plan as plan_mod
+from repro.models.model_zoo import make_model, synthetic_batch
+from repro.serve.engine import Engine
+
+cfg = dataclasses.replace(smoke_config("qwen2-moe-a2.7b"),
+                          precision="fp8", gemm_backend="pallas_interpret")
+model = make_model(cfg)
+params = model.init_params(jax.random.PRNGKey(0))
+
+selections, builds = [], []
+real_select, real_meta = plan_mod.decode_config, plan_mod.make_group_metadata
+plan_mod.decode_config = lambda *a, **kw: selections.append(a) or \
+    real_select(*a, **kw)
+plan_mod.make_group_metadata = lambda *a, **kw: builds.append(a) or \
+    real_meta(*a, **kw)
+try:
+    engine = Engine(model, params, max_new_tokens=6, decode_batch_size=2)
+    assert len(selections) == 1, "decode config must resolve ONCE per engine"
+    assert engine.decode_config is not None \
+        and engine.decode_config.block_m <= 16, engine.decode_config
+    batch = synthetic_batch(jax.random.PRNGKey(1), cfg, 16, 2)
+    res = engine.generate(batch, key=jax.random.PRNGKey(42))
+    assert res.tokens.shape == (2, 6)
+    assert len(builds) == 2, \
+        f"expected one plan build per phase (prefill+decode), saw {builds}"
+    decode_build = builds[-1]
+    assert int(decode_build[2]) == engine.decode_config.block_m, decode_build
+finally:
+    plan_mod.decode_config, plan_mod.make_group_metadata = \
+        real_select, real_meta
+print(f"decode smoke OK: decode_config=bm{engine.decode_config.block_m}, "
+      f"plan builds={len(builds)} (one per phase)")
+EOF
+
+# Tiny-M decode bench path must not rot either (cost-model selection —
+# the CI gate exercises the CLI + decode pool, not kernel timing).
+REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_grouped_gemm --decode --smoke \
+        --backend pallas_interpret

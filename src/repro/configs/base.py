@@ -6,7 +6,7 @@ from typing import Any, Optional, Tuple
 
 import jax.numpy as jnp
 
-from repro.kernels.plan import KernelConfig
+from repro.kernels.plan import KernelConfig, resolve_config
 
 
 @dataclasses.dataclass(frozen=True)
@@ -59,6 +59,12 @@ class ModelConfig:
     # None resolves to the installed/per-device default; pin one (e.g. an
     # autotuned selection) to make tile shapes part of the run config
     kernel_config: Optional[KernelConfig] = None
+    # training-recipe switch for the backward's wgrad operand precision:
+    # None keeps the kernel_config's field (default "bf16" — the DeepSeek
+    # recipe), "fp8" selects the all-fp8 step (arXiv 2505.20524) from the
+    # preset without hand-building a KernelConfig.  Folded into
+    # `resolved_kernel_config`, which every GEMM call site consumes.
+    wgrad_precision: Optional[str] = None
     remat: bool = True
     attn_chunk: int = 512
     scan_layers: bool = True
@@ -73,6 +79,19 @@ class ModelConfig:
     @property
     def resolved_head_dim(self) -> int:
         return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def resolved_kernel_config(self) -> Optional[KernelConfig]:
+        """``kernel_config`` with the preset's ``wgrad_precision`` folded
+        in (stays ``None`` when neither field is set, preserving the
+        installed-default resolution path).  The fold goes through
+        ``plan.resolve_config`` so, with no explicit ``kernel_config``,
+        the recipe lands on top of the installed/per-device default tile
+        shapes instead of discarding them."""
+        if self.wgrad_precision is None:
+            return self.kernel_config
+        return resolve_config(self.kernel_config,
+                              wgrad_precision=self.wgrad_precision)
 
     def param_count(self) -> int:
         """Approximate parameter count (for 6ND roofline math)."""

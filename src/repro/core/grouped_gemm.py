@@ -40,7 +40,6 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro import compat
 from repro.kernels import dispatch
 from repro.kernels.plan import KernelConfig, TilePlan, make_tile_plan, \
     resolve_config
@@ -52,9 +51,11 @@ from repro.core import quantization as q
 # ---------------------------------------------------------------------------
 
 def _ragged_dot(x, w, group_sizes, out_dtype):
-    return compat.ragged_dot(
-        x, w, group_sizes.astype(jnp.int32),
-        preferred_element_type=jnp.float32).astype(out_dtype)
+    # the (gemm, bf16) operator of the unified registry — the bf16
+    # baseline is a first-class registry citizen, not a side channel
+    return dispatch.grouped_gemm_bf16(x, w, group_sizes,
+                                      out_dtype=out_dtype,
+                                      config=KernelConfig())
 
 
 def _wgrad(x, dy, group_sizes, num_groups, *, config=None, plan=None):
@@ -83,7 +84,7 @@ def _fp8_fwd(x, w, group_sizes, plan, qa, config):
     # shares one across the gate/up GEMMs) replaces the tilewise quant of x
     if qa is None:
         a8, sa = q.quantize_tilewise(x.astype(jnp.float32),
-                                     backend=config.backend)
+                                     backend=config.backend, config=config)
     else:
         a8, sa = qa.q, qa.scale
     b8, sb = q.quantize_blockwise_batched(w.astype(jnp.float32),
@@ -116,7 +117,7 @@ def _fp8_bwd(config, res, dy):
     # the forward's TilePlan — same group_sizes, same schedule).  This one
     # quantize_tilewise(dy) also feeds the fp8 wgrad below.
     d8, sd = q.quantize_tilewise(dy.astype(jnp.float32),
-                                 backend=config.backend)
+                                 backend=config.backend, config=config)
     wt = jnp.swapaxes(w, 1, 2)                       # [G, N, K]
     bt8, sbt = q.quantize_blockwise_batched(wt.astype(jnp.float32),
                                             backend=config.backend)

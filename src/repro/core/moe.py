@@ -214,8 +214,14 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
             # 1x128 tilewise quantization of the packed buffer serves the
             # gate AND up GEMMs (and, under wgrad_precision="fp8", their
             # backward wgrads via the VJP residual) — previously each
-            # GEMM re-quantized the same xs
-            qx = quantize_activation(xs, backend=kcfg.backend)
+            # GEMM re-quantized the same xs.  Passing the layer config
+            # batches the quantizer's grid to THIS phase's tile height
+            # (kcfg.block_m — e.g. the engine's decode config shrinks it
+            # to the tiny decode buffer); a quantize-specific tuned
+            # height would come from autotune(op="quantize") and can be
+            # passed here instead — the record's values are tile-height
+            # independent either way, only wall time moves.
+            qx = quantize_activation(xs, backend=kcfg.backend, config=kcfg)
         glin = functools.partial(grouped_linear, precision=cfg.precision,
                                  config=kcfg, plan=tile_plan)
         g = glin(xs, params["w_gate"], gs, quantized=qx)    # [cap, f_loc]

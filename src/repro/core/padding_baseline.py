@@ -20,6 +20,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import ops as kops
+from repro.kernels import plan as plan_mod
 from repro.kernels.plan import KernelConfig, resolve_config
 
 
@@ -68,13 +69,25 @@ def grouped_gemm_fp8_padded(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
     ``config.backend`` naming the *inner* backend (default:
     auto-resolved).  The padded buffer's group offsets differ from the
     caller's, so any caller-side :class:`TilePlan` does not apply here —
-    the inner GEMM re-plans over the padded sizes.
+    instead the baseline's own block-aligned plan comes from the
+    :class:`~repro.kernels.plan.PlanCache`: keyed by the padded buffer's
+    static shape (padded_m, block_m, num_groups, dtype, device), it is
+    derived once per shape class and replayed on every later call, next
+    to the autotune entries.  (Re-planning per call was the historical
+    behaviour — and pure waste, since the padded schedule's static key
+    never changes across steps of one workload.)
     """
     cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
     a_p, s_p, psz, row_map = pad_groups(a_fp8, s_a, group_sizes,
                                         block_m=cfg.block_m,
                                         padded_m=padded_m)
-    c_p = kops.grouped_gemm_fp8(a_p, s_p, b_fp8, s_b, psz, config=cfg)
+    plan = None
+    if kops.backend_uses_plan(cfg.backend):
+        plan = plan_mod.shared_plan(psz, a_p.shape[0],
+                                    block_m=cfg.block_m,
+                                    num_groups=group_sizes.shape[0])
+    c_p = kops.grouped_gemm_fp8(a_p, s_p, b_fp8, s_b, psz, config=cfg,
+                                plan=plan)
     return unpad_groups(c_p, row_map)
 
 

@@ -51,15 +51,19 @@ jax.tree_util.register_pytree_node(
     lambda _, children: QuantizedActivation(*children))
 
 
-def quantize_activation(x, *, backend=None) -> QuantizedActivation:
+def quantize_activation(x, *, backend=None, config=None) -> QuantizedActivation:
     """ONE ``quantize_tilewise`` call producing the shareable record.
 
     The input is ``stop_gradient``-ed: gradients flow to the activation
     through ``grouped_linear``'s custom VJP (which returns a zero
     cotangent for the record itself), not through the quantization graph.
+    ``config`` (optional) routes an autotuned quantizer tile height
+    (``op="quantize"``) into the kernel; the record is tile-height
+    independent either way.
     """
     q8, s = quantize_tilewise(
-        jax.lax.stop_gradient(x).astype(jnp.float32), backend=backend)
+        jax.lax.stop_gradient(x).astype(jnp.float32), backend=backend,
+        config=config)
     return QuantizedActivation(q8, s)
 
 
@@ -82,10 +86,12 @@ def _qdq_bwd(_, g):
 quantize_dequantize_tilewise.defvjp(_qdq_fwd, _qdq_bwd)
 
 
-def quantize_tilewise(x, *, backend=None):
+def quantize_tilewise(x, *, backend=None, config=None):
     """[M, K] -> (fp8[M, K], f32[M, K/128]).  Not differentiable — use
-    inside custom_vjp boundaries (see core.grouped_gemm)."""
-    return kops.quantize_tilewise(x, backend=backend)
+    inside custom_vjp boundaries (see core.grouped_gemm).  ``config``
+    optionally carries an autotuned quantizer tile height (the output is
+    tile-height independent)."""
+    return kops.quantize_tilewise(x, backend=backend, config=config)
 
 
 def quantize_blockwise(w, *, backend=None):

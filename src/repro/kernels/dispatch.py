@@ -1,63 +1,71 @@
-"""Unified grouped-GEMM backend dispatch registry.
+"""Unified operator registry for every grouped-GEMM-shaped kernel seam.
 
-Every grouped-GEMM call site in the repo (``core/grouped_gemm.py``,
-``core/moe.py``, ``core/padding_baseline.py``, models, benchmarks,
-examples) routes through this module.  A backend is a named entry in the
-registry with
+The paper's core idea is ONE dispatch seam that adapts to variable group
+dimensions at runtime instead of padding.  This module is that seam for
+the whole repo: a single registry keyed by :class:`OpKey` ``(family,
+precision)`` —
+
+  =============  ===========  ==============================================
+  family         precision    operation
+  =============  ===========  ==============================================
+  ``gemm``       ``fp8``      quantized grouped GEMM ``y[rows of g] =
+                              a_g @ b[g]`` (ragged M output rows; the
+                              paper's forward/dgrad orientation)
+  ``gemm``       ``bf16``     the same orientation on bf16 operands
+                              (``jax.lax.ragged_dot`` — the numerics
+                              baseline / GSPMD path)
+  ``wgrad``      ``bf16``     ragged-contraction ``dw[g] = x_g^T @ dy_g``
+                              (M contracted; DeepSeek recipe operands)
+  ``wgrad``      ``fp8``      the same contraction on fp8 operands with
+                              1x128 tile scales, dequantized per visit
+                              (arXiv 2505.20524's all-fp8 step)
+  ``quantize``   ``fp8``      1x128 per-tile fp8 activation quantization
+                              (the producer of the gemm family's operands)
+  =============  ===========  ==============================================
+
+Backend *names* are family-neutral and shared across the table: one
+``KernelConfig.backend`` string ("pallas", "xla_ragged", ...) rides a
+whole training step — forward and dgrad through ``(gemm, fp8)``, wgrad
+through ``(wgrad, <precision>)``, activation quantization through
+``(quantize, fp8)`` — and the same :class:`~repro.kernels.plan.TilePlan`
+through all of them.  Each entry is a :class:`BackendSpec` with
 
   * an ``available()`` probe returning ``(ok, reason)`` — built on
     :mod:`repro.compat` capability probes so selection is testable by
     monkeypatching, and refusal is an explicit
     :class:`BackendUnavailableError` instead of a deep ``AttributeError``;
-  * a ``run()`` implementing the quantized grouped GEMM
-    ``(a_fp8, s_a, b_fp8, s_b, group_sizes) -> [M, N]`` under a
-    :class:`repro.kernels.plan.KernelConfig` (tile shapes + out dtype),
-    optionally consuming a precomputed :class:`~repro.kernels.plan.TilePlan`
-    (the plan-once/run-many schedule shared by every GEMM of one routing
-    decision).
+  * a ``run()`` implementing the family's operation under a
+    :class:`repro.kernels.plan.KernelConfig`, optionally consuming a
+    precomputed :class:`~repro.kernels.plan.TilePlan`;
+  * ``uses_plan`` / ``uses_tiles`` flags — plan/tile-free membership is a
+    property of the registry entry, not a parallel frozenset to maintain.
 
-Built-in backends:
+All resolution goes through ONE function, :func:`resolve`, which owns
 
-  ===================  =====================================================
-  ``pallas``           compiled Pallas TPU kernel (requires a TPU)
-  ``pallas_interpret`` same kernel body, interpreted — runs anywhere (CPU
-                       regression gate; bit-identical to ``pallas``)
-  ``xla_ragged``       ``jax.lax.ragged_dot`` on bf16-dequantized operands
-                       (portable, GSPMD-partitionable; ~fp8-rounding-level
-                       deviation from the kernel)
-  ``xla_exact``        per-K-block f32 math with the kernel's accumulation
-                       order — cross-check oracle
-  ``padded_baseline``  the paper's baseline: pad every group to block_m,
-                       aligned grouped GEMM, unpad (through the Pallas
-                       kernel so equivalence checks are bitwise)
-  ===================  =====================================================
+  * precision-twin derivation (``resolve(("wgrad", "fp8"), "pallas")``
+    lands on the fp8 wgrad kernel; the historical ``<name>_fp8`` public
+    spelling normalizes to the same entry),
+  * availability checks (explicit requests raise with the probe's
+    reason),
+  * explicit-vs-auto fallback semantics (a *gemm-only* name like
+    ``padded_baseline`` auto-resolves in the wgrad family instead of
+    stranding a training config's backward; an explicitly requested but
+    unavailable entry always raises),
+  * tile-compatibility fallback (an *auto-resolved* plan backend whose
+    tile shapes don't divide the problem falls back to the first
+    tile-free entry of the same op; an explicit request raises via
+    ``KernelConfig.validate``).
 
 ``backend="auto"`` resolves to the first available of
 ``pallas`` > ``xla_ragged`` > ``pallas_interpret``.  ``"xla"`` is kept as
 an alias of ``"xla_ragged"`` for pre-registry callers.
 
-The module hosts a SECOND operation family: the ragged-contraction
-(wgrad) grouped GEMM ``dw[g] = x_g^T @ dy_g`` (``grouped_gemm_wgrad``,
-``register_wgrad_backend``), with ``pallas`` / ``pallas_interpret``
-(``repro.kernels.wgrad_kernel``), ``xla_ragged``
-(``compat.ragged_wgrad``) and a dense f32 ``xla_exact`` oracle.  Backend
-names are shared across families so one ``KernelConfig.backend`` rides a
-whole training step: forward and dgrad through the gemm family, wgrad
-through this one, the same :class:`~repro.kernels.plan.TilePlan` through
-all of them.
-
-Operand precision is a THIRD dimension of the wgrad family: every
-bf16-operand entry has an fp8-operand twin under the ``<name>_fp8``
-registry name (``pallas_fp8`` / ``pallas_interpret_fp8`` run
-``gmm_pallas_wgrad_fp8`` — per-visit dequantization of the forward's
-``(a8, s_a)`` residual and the dgrad's ``(dy8, s_dy)``; the
-``xla_*_fp8`` entries dequantize up front and reuse the bf16/f32 math).
-Callers keep naming the family-neutral backend
-(``KernelConfig(backend="pallas", wgrad_precision="fp8")`` or
-``grouped_linear(wgrad_precision="fp8")``);
-``resolve_wgrad_backend(..., precision="fp8")`` derives the twin.  The
-bf16 path stays the default (the DeepSeek recipe); fp8 is the opt-in
-all-fp8 step of arXiv 2505.20524.
+Every pre-unification public entry point (``grouped_gemm``,
+``grouped_gemm_fp8``, ``grouped_gemm_wgrad``, ``grouped_gemm_wgrad_fp8``,
+``quantize_tilewise``, ``register_backend``, ``resolve_backend``,
+``resolve_wgrad_backend``, ...) survives as a thin alias over the unified
+seam — new backends, precisions, and op families plug in via
+:func:`register_operator` without growing another registry copy.
 """
 from __future__ import annotations
 
@@ -75,20 +83,41 @@ from repro.kernels.plan import (KernelConfig, TilePlan,  # noqa: F401
 from repro.kernels.quant_kernel import quantize_tilewise_pallas
 from repro.kernels.wgrad_kernel import gmm_pallas_wgrad, gmm_pallas_wgrad_fp8
 
-# auto-resolution preference, best first (shared by both op families)
+# auto-resolution preference, best first (shared by every op family)
 AUTO_ORDER = ("pallas", "xla_ragged", "pallas_interpret")
 
 _ALIASES = {"xla": "xla_ragged"}
 
-# suffix distinguishing the fp8-operand twins in the wgrad registry
+# suffix of the wgrad family's historical fp8-twin public names
+# ("pallas_fp8" etc.); resolution normalizes it away — the OpKey precision,
+# not the name, selects the arithmetic
 _FP8_SUFFIX = "_fp8"
 
-# backends that walk the TilePlan schedule (and honour tile shapes); the
-# XLA paths let the compiler tile and ignore both
-PLAN_BACKENDS = frozenset({"pallas", "pallas_interpret",
-                           "pallas_fp8", "pallas_interpret_fp8"})
-TILE_FREE_BACKENDS = frozenset({"xla_ragged", "xla_exact",
-                                "xla_ragged_fp8", "xla_exact_fp8"})
+FAMILIES = ("gemm", "wgrad", "quantize")
+PRECISIONS = ("bf16", "fp8")
+
+
+@dataclasses.dataclass(frozen=True)
+class OpKey:
+    """One operator of the registry: an operation family at an operand
+    precision.  Hashable; accepted anywhere as a plain ``(family,
+    precision)`` tuple."""
+    family: str      # "gemm" | "wgrad" | "quantize"
+    precision: str   # "bf16" | "fp8"
+
+    def __post_init__(self):
+        if self.family not in FAMILIES:
+            raise ValueError(f"unknown op family {self.family!r}; "
+                             f"choose from {FAMILIES}")
+        if self.precision not in PRECISIONS:
+            raise ValueError(f"unknown operand precision "
+                             f"{self.precision!r}; choose from {PRECISIONS}")
+
+
+def _op_key(op_key) -> OpKey:
+    if isinstance(op_key, OpKey):
+        return op_key
+    return OpKey(*op_key)
 
 
 class BackendUnavailableError(RuntimeError):
@@ -106,40 +135,220 @@ class BackendSpec:
     name: str
     description: str
     available: Callable[[], "tuple[bool, str]"]   # (ok, reason-if-not)
-    run: Callable[..., jax.Array]
+    run: Callable[..., Any]
+    uses_plan: bool = False     # walks the TilePlan visitation schedule
+    uses_tiles: bool = False    # honours KernelConfig tile shapes at all
 
 
-_REGISTRY: dict[str, BackendSpec] = {}
+# THE registry: every (family, precision) operator's backend table lives
+# in this one dict — there is no per-family registry copy to keep in sync.
+_OPERATORS: "dict[OpKey, dict[str, BackendSpec]]" = {}
+
 _default_backend_override: Optional[str] = None
 
 
-def register_backend(name: str, *, description: str,
-                     available: Callable[[], "tuple[bool, str]"],
-                     run: Callable[..., jax.Array]) -> None:
-    """Later PRs (autotuned variants, new hardware paths) plug in here."""
-    _REGISTRY[name] = BackendSpec(name, description, available, run)
+def register_operator(op_key, name: str, *, description: str,
+                      available: Callable[[], "tuple[bool, str]"],
+                      run: Callable[..., Any],
+                      uses_plan: bool = False,
+                      uses_tiles: bool = False) -> None:
+    """Register a backend for one ``(family, precision)`` operator.
+    Later PRs (autotuned variants, new hardware paths, new precisions)
+    plug in here — this is the ONLY write path into the registry."""
+    key = _op_key(op_key)
+    _OPERATORS.setdefault(key, {})[name] = BackendSpec(
+        name, description, available, run,
+        uses_plan=uses_plan, uses_tiles=uses_tiles)
 
 
-def backend_names() -> "tuple[str, ...]":
-    return tuple(_REGISTRY)
+def op_keys() -> "tuple[OpKey, ...]":
+    return tuple(_OPERATORS)
 
 
-def availability(name: str) -> "tuple[bool, str]":
+def _table(op_key) -> "dict[str, BackendSpec]":
+    key = _op_key(op_key)
+    if key not in _OPERATORS:
+        raise ValueError(f"no operator registered for {key}; "
+                         f"registered: {op_keys()}")
+    return _OPERATORS[key]
+
+
+def _canonical(op_key: OpKey, name: str) -> str:
+    """Public spelling -> registry name: aliases ("xla"), and — in the
+    wgrad family only — the historical ``<name>_fp8`` twin suffix."""
     name = _ALIASES.get(name, name)
-    if name not in _REGISTRY:
-        raise ValueError(f"unknown backend {name!r}; "
-                         f"choose from {backend_names()}")
-    return _REGISTRY[name].available()
+    if op_key.family == "wgrad" and name.endswith(_FP8_SUFFIX):
+        name = name[: -len(_FP8_SUFFIX)]
+    return name
 
 
-def backend_matrix() -> "dict[str, dict[str, Any]]":
-    """{name: {available, reason, description}} — docs / CLI surface."""
+def _display(op_key: OpKey, name: str) -> str:
+    """Registry name -> the public spelling pre-unification callers know
+    (the wgrad family's fp8 twins carried a ``_fp8`` suffix)."""
+    if op_key.family == "wgrad" and op_key.precision == "fp8":
+        return name + _FP8_SUFFIX
+    return name
+
+
+def resolve(op_key, backend: Optional[str] = None, *,
+            tile: "Optional[tuple]" = None) -> str:
+    """THE resolution path: map a requested backend (or ``"auto"`` /
+    ``None``) to a concrete, *available* entry of ``op_key``'s table.
+
+    ``tile``, when given, is ``(config, m, k, n)`` and enables the
+    tile-compatibility policy for plan-consuming entries: an explicitly
+    requested backend whose tile shapes don't divide ``(k, n)`` raises
+    via ``config.validate``; an auto-resolved one falls back to the first
+    available tile-free entry of the same operator.
+
+    Fallback semantics (one place, every family):
+
+      * explicit name in this op's table but unavailable -> raise
+        :class:`BackendUnavailableError` with the probe's reason;
+      * explicit name known only to the gemm family (``padded_baseline``
+        in the wgrad family) -> auto-resolve instead of stranding a
+        training config's backward;
+      * name known nowhere -> ``ValueError``;
+      * ``auto``/``None`` -> the installed default override if usable
+        (the gemm/quantize families treat an unavailable override as an
+        explicit request and raise — callers like ``quantize_tilewise``
+        turn that into a ref fallback; the wgrad family skips it), then
+        the first available of :data:`AUTO_ORDER`.
+    """
+    key = _op_key(op_key)
+    table = _table(key)
+    explicit = backend not in (None, "auto")
+
+    if explicit:
+        name = _canonical(key, backend)
+        if name in table:
+            ok, reason = table[name].available()
+            if not ok:
+                raise BackendUnavailableError(_display(key, name), reason)
+            return _tile_policy(key, name, tile, explicit=True)
+        if name not in _OPERATORS[OpKey("gemm", "fp8")]:
+            known = tuple(_display(key, n) for n in table)
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"{key.family}/{key.precision} has {known}")
+        # a gemm-only backend name: auto-resolve from here on — a
+        # training config pins ONE backend string for the whole step, and
+        # a forward-only choice must not strand the other families
+        explicit = False
+
+    if _default_backend_override is not None:
+        name = _canonical(key, _default_backend_override)
+        if key.family == "wgrad":
+            # the wgrad family tries the override, then falls back: the
+            # override seam predates the family and a gemm-centric pin
+            # must not strand the backward
+            if name in table and table[name].available()[0]:
+                return _tile_policy(key, name, tile, explicit=False)
+        elif name in table:
+            # the gemm/quantize families treat an unavailable override as
+            # an explicit request (historical semantics — quantize's ref
+            # fallback depends on the raise); an override the operator
+            # never registered (e.g. a kernel name against the bf16
+            # baseline table) auto-resolves instead
+            ok, reason = table[name].available()
+            if not ok:
+                raise BackendUnavailableError(_display(key, name), reason)
+            return _tile_policy(key, name, tile, explicit=False)
+
+    for cand in AUTO_ORDER:
+        if cand in table and table[cand].available()[0]:
+            return _tile_policy(key, cand, tile, explicit=False)
+    raise BackendUnavailableError(
+        "auto", f"no {key.precision} {key.family} backend is available "
+                f"(tried {AUTO_ORDER})")
+
+
+def _tile_policy(key: OpKey, name: str, tile, *, explicit: bool) -> str:
+    """Shared tile-incompatibility policy: see :func:`resolve`."""
+    if tile is None:
+        return name
+    table = _OPERATORS[key]
+    if not table[name].uses_plan:
+        return name
+    cfg, m, k, n = tile
+    if cfg.compatible(k, n):
+        return name
+    if explicit:
+        cfg.validate(m, k, n)            # raises with the shape message
+    for fb in ("xla_ragged", "xla_exact"):
+        if fb in table and table[fb].available()[0]:
+            return fb
+    raise BackendUnavailableError(
+        _display(key, name),
+        f"tile shapes (block_k={cfg.block_k}, block_n={cfg.block_n}) do "
+        f"not divide (K={k}, N={n}) and no tile-free {key.precision} "
+        f"{key.family} backend is available")
+
+
+def op_backend_names(op_key) -> "tuple[str, ...]":
+    return tuple(_table(op_key))
+
+
+def op_availability(op_key, name: str) -> "tuple[bool, str]":
+    key = _op_key(op_key)
+    table = _table(key)
+    name = _canonical(key, name)
+    if name not in table:
+        raise ValueError(
+            f"unknown backend {name!r} for {key.family}/{key.precision}; "
+            f"choose from {tuple(_display(key, n) for n in table)}")
+    return table[name].available()
+
+
+def op_uses_plan(op_key, backend: Optional[str] = "auto") -> bool:
+    key = _op_key(op_key)
+    return _table(key)[resolve(key, backend)].uses_plan
+
+
+def op_ignores_tiles(op_key, backend: Optional[str] = "auto") -> bool:
+    key = _op_key(op_key)
+    return not _table(key)[resolve(key, backend)].uses_tiles
+
+
+def backend_matrix(op_key=None) -> "dict[str, Any]":
+    """Availability/description rows for docs and CLIs.
+
+    ``op_key=None`` keeps the historical shape — the ``(gemm, fp8)``
+    table keyed by backend name.  ``op_key="all"`` returns every
+    operator: ``{"family/precision": {name: row}}`` (the source of the
+    README's family x precision x backend table); a concrete
+    ``OpKey``/tuple returns that operator's rows.
+    """
+    if op_key == "all":
+        return {f"{k.family}/{k.precision}": backend_matrix(k)
+                for k in sorted(_OPERATORS,
+                                key=lambda k: (FAMILIES.index(k.family),
+                                               k.precision))}
+    key = _op_key(op_key) if op_key is not None else OpKey("gemm", "fp8")
     out = {}
-    for name, spec in _REGISTRY.items():
+    for name, spec in _table(key).items():
         ok, reason = spec.available()
         out[name] = {"available": ok, "reason": reason,
-                     "description": spec.description}
+                     "description": spec.description,
+                     "uses_plan": spec.uses_plan,
+                     "uses_tiles": spec.uses_tiles}
     return out
+
+
+def format_backend_matrix() -> str:
+    """The README's backend table, generated (``python -m
+    repro.kernels.dispatch`` prints it)."""
+    lines = ["| family | precision | backend | needs | description |",
+             "| --- | --- | --- | --- | --- |"]
+    for label, rows in backend_matrix("all").items():
+        family, precision = label.split("/")
+        for name, row in rows.items():
+            disp = _display(OpKey(family, precision), name)
+            needs = "—" if row["available"] else row["reason"].split(";")[0]
+            if name == "pallas":
+                needs = "TPU"
+            lines.append(f"| `{family}` | `{precision}` | `{disp}` | "
+                         f"{needs} | {row['description']} |")
+    return "\n".join(lines)
 
 
 def set_default_backend(name: Optional[str]) -> None:
@@ -147,7 +356,7 @@ def set_default_backend(name: Optional[str]) -> None:
     global _default_backend_override
     if name is not None:
         name = _ALIASES.get(name, name)
-        if name not in _REGISTRY:
+        if name not in _table(OpKey("gemm", "fp8")):
             raise ValueError(f"unknown backend {name!r}; "
                              f"choose from {backend_names()}")
     _default_backend_override = name
@@ -157,126 +366,108 @@ def default_backend() -> str:
     return resolve_backend("auto")
 
 
-def resolve_backend(backend: Optional[str] = "auto") -> str:
-    """Map a requested backend (or ``"auto"``/``None``) to a concrete,
-    *available* registry entry, or raise with the probe's reason."""
-    if backend in (None, "auto"):
-        if _default_backend_override is not None:
-            backend = _default_backend_override
-        else:
-            for name in AUTO_ORDER:
-                ok, _ = _REGISTRY[name].available()
-                if ok:
-                    return name
-            raise BackendUnavailableError(
-                "auto", "no grouped-GEMM backend is available "
-                        f"(tried {AUTO_ORDER})")
-    backend = _ALIASES.get(backend, backend)
-    if backend not in _REGISTRY:
-        raise ValueError(f"unknown backend {backend!r}; "
-                         f"choose from {backend_names()}")
-    ok, reason = _REGISTRY[backend].available()
-    if not ok:
-        raise BackendUnavailableError(backend, reason)
-    return backend
-
-
-def backend_uses_plan(backend: Optional[str] = "auto") -> bool:
-    """Whether the (resolved) backend consumes a precomputed TilePlan —
-    callers skip plan construction for the XLA paths."""
-    return resolve_backend(backend) in PLAN_BACKENDS
-
-
-def backend_ignores_tiles(backend: Optional[str] = "auto") -> bool:
-    """Whether tile shapes are a no-op for the (resolved) backend — the
-    autotuner skips measurement there (cost-model selection only)."""
-    return resolve_backend(backend) in TILE_FREE_BACKENDS
-
-
 # ---------------------------------------------------------------------------
-# Second operation family: ragged-contraction (wgrad) grouped GEMM
+# Pre-unification aliases (the public surface of PRs 1-4, unchanged)
 # ---------------------------------------------------------------------------
 
-_WGRAD_REGISTRY: dict[str, BackendSpec] = {}
+def register_backend(name: str, *, description: str,
+                     available: Callable[[], "tuple[bool, str]"],
+                     run: Callable[..., jax.Array],
+                     uses_plan: bool = False,
+                     uses_tiles: bool = False) -> None:
+    """Alias: register a ``(gemm, fp8)`` backend."""
+    register_operator(OpKey("gemm", "fp8"), name, description=description,
+                      available=available, run=run, uses_plan=uses_plan,
+                      uses_tiles=uses_tiles)
 
 
 def register_wgrad_backend(name: str, *, description: str,
                            available: Callable[[], "tuple[bool, str]"],
-                           run: Callable[..., jax.Array]) -> None:
-    """Register a backend for ``grouped_gemm_wgrad`` (the ragged-
-    contraction family).  Names are shared with the gemm family so one
-    ``KernelConfig.backend`` covers a whole training step."""
-    _WGRAD_REGISTRY[name] = BackendSpec(name, description, available, run)
+                           run: Callable[..., jax.Array],
+                           uses_plan: bool = False,
+                           uses_tiles: bool = False) -> None:
+    """Alias: register a wgrad-family backend.  A ``<name>_fp8`` spelling
+    registers the fp8-precision twin (the OpKey carries the precision;
+    the suffix is only the historical public naming)."""
+    precision = "fp8" if name.endswith(_FP8_SUFFIX) else "bf16"
+    base = name[: -len(_FP8_SUFFIX)] if precision == "fp8" else name
+    register_operator(OpKey("wgrad", precision), base,
+                      description=description, available=available, run=run,
+                      uses_plan=uses_plan, uses_tiles=uses_tiles)
+
+
+def backend_names() -> "tuple[str, ...]":
+    return op_backend_names(OpKey("gemm", "fp8"))
 
 
 def wgrad_backend_names() -> "tuple[str, ...]":
-    return tuple(_WGRAD_REGISTRY)
+    key16, key8 = OpKey("wgrad", "bf16"), OpKey("wgrad", "fp8")
+    return (tuple(_table(key16))
+            + tuple(_display(key8, n) for n in _table(key8)))
+
+
+def availability(name: str) -> "tuple[bool, str]":
+    name = _ALIASES.get(name, name)
+    if name not in _table(OpKey("gemm", "fp8")):
+        raise ValueError(f"unknown backend {name!r}; "
+                         f"choose from {backend_names()}")
+    return op_availability(OpKey("gemm", "fp8"), name)
 
 
 def wgrad_availability(name: str) -> "tuple[bool, str]":
-    name = _ALIASES.get(name, name)
-    if name not in _WGRAD_REGISTRY:
+    precision = "fp8" if _ALIASES.get(name, name).endswith(_FP8_SUFFIX) \
+        else "bf16"
+    key = OpKey("wgrad", precision)
+    base = _canonical(key, name)
+    if base not in _table(key):
         raise ValueError(f"unknown wgrad backend {name!r}; "
                          f"choose from {wgrad_backend_names()}")
-    return _WGRAD_REGISTRY[name].available()
+    return op_availability(key, base)
 
 
-def _wgrad_twin(name: str, precision: str) -> str:
-    """Family-neutral backend name -> this precision's registry entry
-    (``pallas`` <-> ``pallas_fp8``; already-suffixed names normalize)."""
-    if name.endswith(_FP8_SUFFIX):
-        name = name[: -len(_FP8_SUFFIX)]
-    return name + (_FP8_SUFFIX if precision == "fp8" else "")
+def resolve_backend(backend: Optional[str] = "auto") -> str:
+    """Alias: resolve in the ``(gemm, fp8)`` table."""
+    return resolve(OpKey("gemm", "fp8"), backend)
 
 
 def resolve_wgrad_backend(backend: Optional[str] = "auto", *,
                           precision: str = "bf16") -> str:
-    """Map a requested backend to a concrete, *available* wgrad-family
-    entry of the requested operand ``precision`` ("bf16" | "fp8").
+    """Alias: resolve in the wgrad table of the requested operand
+    ``precision`` ("bf16" | "fp8"); returns the historical public
+    spelling (fp8 entries carry the ``_fp8`` suffix).
 
     Backend names are family-neutral: ``"pallas"`` with
-    ``precision="fp8"`` resolves to the ``pallas_fp8`` entry (and an
+    ``precision="fp8"`` resolves to the fp8 wgrad kernel (and an
     explicitly suffixed ``"pallas_fp8"`` normalizes to whichever twin the
     precision asks for — the operands at the call site, not the name,
-    decide the arithmetic).
-
-    Gemm-family names with no wgrad counterpart (``padded_baseline``)
-    fall back to auto-resolution instead of raising: a training config
-    pins ONE backend string for the whole step, and a forward-only choice
-    must not strand the backward.  A name that exists in this family but
-    is unavailable still raises — the caller asked for that kernel.
-    """
-    if precision not in ("bf16", "fp8"):
+    decide the arithmetic)."""
+    if precision not in PRECISIONS:
         raise ValueError(f"unknown wgrad precision {precision!r}; "
                          "use 'bf16' or 'fp8'")
-    if backend not in (None, "auto"):
-        backend = _ALIASES.get(backend, backend)
-        cand = _wgrad_twin(backend, precision)
-        if cand in _WGRAD_REGISTRY:
-            ok, reason = _WGRAD_REGISTRY[cand].available()
-            if not ok:
-                raise BackendUnavailableError(cand, reason)
-            return cand
-        base = _wgrad_twin(backend, "bf16")
-        if base not in _REGISTRY:
-            raise ValueError(f"unknown backend {backend!r}; wgrad family "
-                             f"has {wgrad_backend_names()}")
-        # gemm-only backend: fall through to auto
-    if _default_backend_override is not None:
-        cand = _wgrad_twin(_default_backend_override, precision)
-        if cand in _WGRAD_REGISTRY:
-            ok, _ = _WGRAD_REGISTRY[cand].available()
-            if ok:
-                return cand
-    for name in AUTO_ORDER:
-        cand = _wgrad_twin(name, precision)
-        if cand in _WGRAD_REGISTRY:
-            ok, _ = _WGRAD_REGISTRY[cand].available()
-            if ok:
-                return cand
-    raise BackendUnavailableError(
-        "auto", f"no {precision} wgrad backend is available "
-                f"(tried {AUTO_ORDER})")
+    key = OpKey("wgrad", precision)
+    return _display(key, resolve(key, backend))
+
+
+def backend_uses_plan(backend: Optional[str] = "auto") -> bool:
+    """Whether the (resolved) gemm backend consumes a precomputed
+    TilePlan — callers skip plan construction for the XLA paths."""
+    return op_uses_plan(OpKey("gemm", "fp8"), backend)
+
+
+def backend_ignores_tiles(backend: Optional[str] = "auto") -> bool:
+    """Whether tile shapes are a no-op for the (resolved) gemm backend —
+    the autotuner skips measurement there (cost-model selection only)."""
+    return op_ignores_tiles(OpKey("gemm", "fp8"), backend)
+
+
+def _plan_tile_frozenset(uses_plan: bool) -> "frozenset[str]":
+    names = set()
+    for key, table in _OPERATORS.items():
+        for name, spec in table.items():
+            if (spec.uses_plan if uses_plan
+                    else (not spec.uses_tiles and key.family != "quantize")):
+                names.add(_display(key, name))
+    return frozenset(names)
 
 
 # ---------------------------------------------------------------------------
@@ -381,7 +572,7 @@ def wgrad_fp8_xla_exact(x_fp8, s_x, dy_fp8, s_dy, group_sizes, *,
 
 
 # ---------------------------------------------------------------------------
-# Built-in backend registrations
+# Built-in registrations
 # ---------------------------------------------------------------------------
 
 def _avail_always():
@@ -401,6 +592,15 @@ def _avail_ragged_dot():
     return False, (f"jax {jax.__version__} has no jax.lax.ragged_dot")
 
 
+def _avail_ragged_wgrad():
+    if compat.has_ragged_dot_general() or compat.has_ragged_dot():
+        return True, ""
+    return False, (f"jax {jax.__version__} has neither "
+                   "jax.lax.ragged_dot_general nor jax.lax.ragged_dot")
+
+
+# ---- (gemm, fp8): the paper's forward/dgrad orientation -------------------
+
 def _run_pallas(a8, sa, b8, sb, gs, *, num_groups, config, plan, interpret):
     return gmm_pallas(a8, sa, b8, sb, gs, num_groups=num_groups,
                       block_m=config.block_m, block_n=config.block_n,
@@ -419,43 +619,66 @@ def _run_xla_exact(a8, sa, b8, sb, gs, *, config, **_):
 def _run_padded_baseline(a8, sa, b8, sb, gs, *, config, **_):
     # deferred import: padding_baseline routes its aligned GEMM back
     # through this registry.  A caller's TilePlan never applies here —
-    # padding changes the group offsets, so the baseline re-plans.
+    # padding changes the group offsets, so the baseline plans over the
+    # padded sizes (once per static shape, via the PlanCache).
     from repro.core import padding_baseline as pb
     inner = "pallas" if compat.has_tpu() else "pallas_interpret"
     return pb.grouped_gemm_fp8_padded(a8, sa, b8, sb, gs,
                                       config=config.with_(backend=inner))
 
 
-register_backend(
-    "pallas",
+register_operator(
+    ("gemm", "fp8"), "pallas",
     description="compiled Pallas TPU kernel (padding-free, paper §2)",
     available=_avail_tpu,
-    run=lambda *a, **kw: _run_pallas(*a, interpret=False, **kw))
-register_backend(
-    "pallas_interpret",
+    run=lambda *a, **kw: _run_pallas(*a, interpret=False, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("gemm", "fp8"), "pallas_interpret",
     description="Pallas kernel in interpret mode — CPU-verifiable, "
                 "bit-identical to 'pallas'",
     available=_avail_always,
-    run=lambda *a, **kw: _run_pallas(*a, interpret=True, **kw))
-register_backend(
-    "xla_ragged",
+    run=lambda *a, **kw: _run_pallas(*a, interpret=True, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("gemm", "fp8"), "xla_ragged",
     description="jax.lax.ragged_dot on bf16-dequantized operands "
                 "(portable / GSPMD)",
     available=_avail_ragged_dot,
     run=_run_xla_ragged)
-register_backend(
-    "xla_exact",
+register_operator(
+    ("gemm", "fp8"), "xla_exact",
     description="per-K-block f32 oracle with the kernel's accumulation "
                 "order",
     available=_avail_ragged_dot,
     run=_run_xla_exact)
-register_backend(
-    "padded_baseline",
+register_operator(
+    ("gemm", "fp8"), "padded_baseline",
     description="the paper's baseline: pad groups to block_m, aligned "
                 "grouped GEMM, unpad",
     available=_avail_always,
-    run=_run_padded_baseline)
+    run=_run_padded_baseline,
+    uses_tiles=True)       # block_m drives the padding; no plan consumed
 
+
+# ---- (gemm, bf16): the numerics-baseline orientation ----------------------
+
+def _run_bf16_ragged(x, w, gs, *, config, **_):
+    out = compat.ragged_dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
+                            gs.astype(jnp.int32),
+                            preferred_element_type=jnp.float32)
+    return out.astype(config.out_dtype)
+
+
+register_operator(
+    ("gemm", "bf16"), "xla_ragged",
+    description="jax.lax.ragged_dot on bf16 operands (numerics baseline; "
+                "dense fallback where the primitive is missing)",
+    available=_avail_always,       # compat.ragged_dot always has a fallback
+    run=_run_bf16_ragged)
+
+
+# ---- (wgrad, bf16): the ragged-contraction orientation --------------------
 
 def _run_pallas_wgrad(x, dy, gs, *, num_groups, config, plan, interpret):
     return gmm_pallas_wgrad(x, dy, gs, num_groups=num_groups,
@@ -475,37 +698,34 @@ def _run_wgrad_xla_exact(x, dy, gs, *, num_groups, config, **_):
                            out_dtype=config.out_dtype)
 
 
-def _avail_ragged_wgrad():
-    if compat.has_ragged_dot_general() or compat.has_ragged_dot():
-        return True, ""
-    return False, (f"jax {jax.__version__} has neither "
-                   "jax.lax.ragged_dot_general nor jax.lax.ragged_dot")
-
-
-register_wgrad_backend(
-    "pallas",
+register_operator(
+    ("wgrad", "bf16"), "pallas",
     description="compiled Pallas TPU kernel: ragged-M contraction with "
                 "per-visit masked accumulation (padding-free wgrad)",
     available=_avail_tpu,
-    run=lambda *a, **kw: _run_pallas_wgrad(*a, interpret=False, **kw))
-register_wgrad_backend(
-    "pallas_interpret",
+    run=lambda *a, **kw: _run_pallas_wgrad(*a, interpret=False, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("wgrad", "bf16"), "pallas_interpret",
     description="wgrad kernel in interpret mode — CPU-verifiable, "
                 "bit-identical to 'pallas'",
     available=_avail_always,
-    run=lambda *a, **kw: _run_pallas_wgrad(*a, interpret=True, **kw))
-register_wgrad_backend(
-    "xla_ragged",
+    run=lambda *a, **kw: _run_pallas_wgrad(*a, interpret=True, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("wgrad", "bf16"), "xla_ragged",
     description="compat.ragged_wgrad (ragged_dot_general or transposed "
                 "ragged_dot) — portable fallback",
     available=_avail_ragged_wgrad,
     run=_run_wgrad_xla_ragged)
-register_wgrad_backend(
-    "xla_exact",
+register_operator(
+    ("wgrad", "bf16"), "xla_exact",
     description="dense one-hot f32 oracle for the ragged contraction",
     available=_avail_always,
     run=_run_wgrad_xla_exact)
 
+
+# ---- (wgrad, fp8): the all-fp8 step's contraction -------------------------
 
 def _run_pallas_wgrad_fp8(x8, sx, dy8, sdy, gs, *, num_groups, config, plan,
                           interpret):
@@ -529,32 +749,87 @@ def _run_wgrad_fp8_xla_exact(x8, sx, dy8, sdy, gs, *, num_groups, config,
                                out_dtype=config.out_dtype)
 
 
-# fp8-operand twins — the precision dimension of the wgrad registry
-register_wgrad_backend(
-    "pallas_fp8",
+register_operator(
+    ("wgrad", "fp8"), "pallas",
     description="compiled Pallas TPU kernel: ragged-M contraction on fp8 "
                 "operands, per-visit dequant folded into the masked "
                 "prologue (arXiv 2505.20524 all-fp8 step)",
     available=_avail_tpu,
-    run=lambda *a, **kw: _run_pallas_wgrad_fp8(*a, interpret=False, **kw))
-register_wgrad_backend(
-    "pallas_interpret_fp8",
+    run=lambda *a, **kw: _run_pallas_wgrad_fp8(*a, interpret=False, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("wgrad", "fp8"), "pallas_interpret",
     description="fp8 wgrad kernel in interpret mode — CPU-verifiable, "
                 "bit-identical to 'pallas_fp8'",
     available=_avail_always,
-    run=lambda *a, **kw: _run_pallas_wgrad_fp8(*a, interpret=True, **kw))
-register_wgrad_backend(
-    "xla_ragged_fp8",
+    run=lambda *a, **kw: _run_pallas_wgrad_fp8(*a, interpret=True, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("wgrad", "fp8"), "xla_ragged",
     description="up-front bf16 dequantization + compat.ragged_wgrad — "
                 "portable fp8-operand fallback",
     available=_avail_ragged_wgrad,
     run=_run_wgrad_fp8_xla_ragged)
-register_wgrad_backend(
-    "xla_exact_fp8",
+register_operator(
+    ("wgrad", "fp8"), "xla_exact",
     description="f32 dequantization + dense one-hot f32 oracle for the "
                 "fp8-operand ragged contraction",
     available=_avail_always,
     run=_run_wgrad_fp8_xla_exact)
+
+
+# ---- (quantize, fp8): the operand producer --------------------------------
+
+def _run_quant_pallas(x, *, config, interpret, **_):
+    kw = {} if config is None else {"block_m": config.block_m}
+    return quantize_tilewise_pallas(x, interpret=interpret, **kw)
+
+
+def _run_quant_ref(x, **_):
+    return _ref.quantize_tilewise_ref(x)
+
+
+register_operator(
+    ("quantize", "fp8"), "pallas",
+    description="Pallas 1x128 per-tile fp8 quantizer (tile height "
+                "autotunable via op='quantize')",
+    available=_avail_tpu,
+    run=lambda *a, **kw: _run_quant_pallas(*a, interpret=False, **kw),
+    uses_tiles=True)
+register_operator(
+    ("quantize", "fp8"), "pallas_interpret",
+    description="quantizer kernel in interpret mode — CPU-verifiable, "
+                "bit-identical to 'pallas'",
+    available=_avail_always,
+    run=lambda *a, **kw: _run_quant_pallas(*a, interpret=True, **kw),
+    uses_tiles=True)
+register_operator(
+    ("quantize", "fp8"), "xla_ragged",
+    description="XLA reference quantizer (tile shapes are a no-op)",
+    available=_avail_ragged_dot,
+    run=_run_quant_ref)
+register_operator(
+    ("quantize", "fp8"), "xla_exact",
+    description="XLA reference quantizer (tile shapes are a no-op)",
+    available=_avail_ragged_dot,
+    run=_run_quant_ref)
+register_operator(
+    ("quantize", "fp8"), "padded_baseline",
+    description="XLA reference quantizer (the baseline quantizes like "
+                "everyone else)",
+    available=_avail_always,
+    run=_run_quant_ref)
+register_operator(
+    ("quantize", "fp8"), "ref",
+    description="XLA reference quantizer — always available",
+    available=_avail_always,
+    run=_run_quant_ref)
+
+
+# back-compat membership views (derived from the registry flags; prefer
+# op_uses_plan / op_ignores_tiles)
+PLAN_BACKENDS = _plan_tile_frozenset(uses_plan=True)
+TILE_FREE_BACKENDS = _plan_tile_frozenset(uses_plan=False)
 
 
 # ---------------------------------------------------------------------------
@@ -567,8 +842,9 @@ def grouped_gemm_fp8(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
                      config: Optional[KernelConfig] = None,
                      out_dtype=None,
                      plan: Optional[TilePlan] = None):
-    """Quantized grouped GEMM through the registry (the low-level entry —
-    operands already fp8 with DeepSeek-style tile/block scales).
+    """Quantized grouped GEMM through the ``(gemm, fp8)`` operator (the
+    low-level entry — operands already fp8 with DeepSeek-style tile/block
+    scales).
 
     Tile shapes travel in ``config`` (a :class:`KernelConfig`; defaults to
     the installed/per-device default); ``backend=``/``out_dtype=`` are
@@ -578,10 +854,30 @@ def grouped_gemm_fp8(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
     cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
     if cfg.out_dtype is None:
         cfg = cfg.with_(out_dtype=jnp.bfloat16)
-    name = resolve_backend(cfg.backend)
-    return _REGISTRY[name].run(
+    key = OpKey("gemm", "fp8")
+    name = resolve(key, cfg.backend)
+    return _OPERATORS[key][name].run(
         a_fp8, s_a, b_fp8, s_b, group_sizes, num_groups=num_groups,
         config=cfg, plan=plan)
+
+
+def grouped_gemm_bf16(x, w, group_sizes, *, backend: Optional[str] = None,
+                      num_groups: Optional[int] = None,
+                      config: Optional[KernelConfig] = None,
+                      out_dtype=None,
+                      plan: Optional[TilePlan] = None):
+    """bf16-operand grouped GEMM through the ``(gemm, bf16)`` operator —
+    the numerics-baseline orientation ``grouped_linear(precision="bf16")``
+    builds on (``jax.lax.ragged_dot``; a dense fallback keeps it available
+    on every JAX).  Not differentiable — training goes through
+    :func:`repro.core.grouped_gemm.grouped_linear`."""
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
+    if cfg.out_dtype is None:
+        cfg = cfg.with_(out_dtype=x.dtype)
+    key = OpKey("gemm", "bf16")
+    name = resolve(key, cfg.backend)
+    return _OPERATORS[key][name].run(
+        x, w, group_sizes, num_groups=num_groups, config=cfg, plan=plan)
 
 
 def grouped_gemm(x, w, group_sizes, *, backend: Optional[str] = None,
@@ -606,28 +902,6 @@ def grouped_gemm(x, w, group_sizes, *, backend: Optional[str] = None,
                             num_groups=w.shape[0], config=cfg, plan=plan)
 
 
-def _wgrad_tile_fallback(name: str, cfg: KernelConfig, m: int, k: int,
-                         n: int, precision: str) -> str:
-    """Shared tile-incompatibility policy for both wgrad precisions: an
-    *explicitly requested* plan backend whose tile shapes don't divide
-    (K, N) raises via ``validate``; an auto-resolved one falls back to the
-    first available tile-free entry of the same precision."""
-    explicit = cfg.backend not in (None, "auto") \
-        and _wgrad_twin(_ALIASES.get(cfg.backend, cfg.backend),
-                        precision) in _WGRAD_REGISTRY
-    if explicit:
-        cfg.validate(m, k, n)            # raises with the shape message
-    for fallback in (_wgrad_twin("xla_ragged", precision),
-                     _wgrad_twin("xla_exact", precision)):
-        ok, _ = _WGRAD_REGISTRY[fallback].available()
-        if ok:
-            return fallback
-    raise BackendUnavailableError(
-        name, f"tile shapes (block_k={cfg.block_k}, "
-              f"block_n={cfg.block_n}) do not divide (K={k}, N={n})"
-              f" and no tile-free {precision} wgrad backend is available")
-
-
 def grouped_gemm_wgrad(x, dy, group_sizes, *,
                        num_groups: Optional[int] = None,
                        backend: Optional[str] = None,
@@ -635,7 +909,7 @@ def grouped_gemm_wgrad(x, dy, group_sizes, *,
                        out_dtype=None,
                        plan: Optional[TilePlan] = None):
     """Ragged-contraction grouped GEMM ``dw[g] = x_g^T @ dy_g`` through
-    the wgrad registry.
+    the ``(wgrad, bf16)`` operator.
 
     x: [M, K] float; dy: [M, N] float; group_sizes: [G] int,
     ``sum <= M`` (tail rows are excluded from the contraction).  Returns
@@ -653,11 +927,10 @@ def grouped_gemm_wgrad(x, dy, group_sizes, *,
         cfg = cfg.with_(out_dtype=jnp.float32)
     num_groups = num_groups if num_groups is not None \
         else group_sizes.shape[0]
-    name = resolve_wgrad_backend(cfg.backend)
-    k, n = x.shape[1], dy.shape[1]
-    if name in PLAN_BACKENDS and not cfg.compatible(k, n):
-        name = _wgrad_tile_fallback(name, cfg, x.shape[0], k, n, "bf16")
-    return _WGRAD_REGISTRY[name].run(
+    key = OpKey("wgrad", "bf16")
+    name = resolve(key, cfg.backend,
+                   tile=(cfg, x.shape[0], x.shape[1], dy.shape[1]))
+    return _OPERATORS[key][name].run(
         x, dy, group_sizes, num_groups=num_groups, config=cfg, plan=plan)
 
 
@@ -668,15 +941,15 @@ def grouped_gemm_wgrad_fp8(x_fp8, s_x, dy_fp8, s_dy, group_sizes, *,
                            out_dtype=None,
                            plan: Optional[TilePlan] = None):
     """fp8-operand ragged-contraction grouped GEMM
-    ``dw[g] = dequant(x)_g^T @ dequant(dy)_g`` through the wgrad
-    registry's fp8 twins (arXiv 2505.20524's all-fp8 training step).
+    ``dw[g] = dequant(x)_g^T @ dequant(dy)_g`` through the
+    ``(wgrad, fp8)`` operator (arXiv 2505.20524's all-fp8 training step).
 
     x_fp8/s_x: [M, K] fp8 + [M, ceil(K/128)] f32 — the forward's quantized
     activation and its 1x128 tile scales (the VJP residual, NOT
     re-quantized here); dy_fp8/s_dy: [M, N] fp8 + [M, ceil(N/128)] f32 —
     the upstream gradient as the dgrad already quantized it.
     ``backend`` names the family-neutral engine (``"pallas"``,
-    ``"pallas_interpret"``, ...); resolution appends the precision twin.
+    ``"pallas_interpret"``, ...); the OpKey precision selects the twin.
     Same fallback semantics as :func:`grouped_gemm_wgrad`: auto-resolved
     tile shapes that don't divide (K, N) fall back to a tile-free fp8
     entry, explicit requests raise.
@@ -686,17 +959,25 @@ def grouped_gemm_wgrad_fp8(x_fp8, s_x, dy_fp8, s_dy, group_sizes, *,
         cfg = cfg.with_(out_dtype=jnp.float32)
     num_groups = num_groups if num_groups is not None \
         else group_sizes.shape[0]
-    name = resolve_wgrad_backend(cfg.backend, precision="fp8")
-    k, n = x_fp8.shape[1], dy_fp8.shape[1]
-    if name in PLAN_BACKENDS and not cfg.compatible(k, n):
-        name = _wgrad_tile_fallback(name, cfg, x_fp8.shape[0], k, n, "fp8")
-    return _WGRAD_REGISTRY[name].run(
+    key = OpKey("wgrad", "fp8")
+    name = resolve(key, cfg.backend,
+                   tile=(cfg, x_fp8.shape[0], x_fp8.shape[1],
+                         dy_fp8.shape[1]))
+    return _OPERATORS[key][name].run(
         x_fp8, s_x, dy_fp8, s_dy, group_sizes, num_groups=num_groups,
         config=cfg, plan=plan)
 
 
-def quantize_tilewise(x, *, backend: Optional[str] = None):
-    """1x128 per-tile fp8 activation quantization through the registry.
+def quantize_tilewise(x, *, backend: Optional[str] = None,
+                      config: Optional[KernelConfig] = None):
+    """1x128 per-tile fp8 activation quantization through the
+    ``(quantize, fp8)`` operator.
+
+    ``config`` (optional) routes an autotuned tile height
+    (``op="quantize"`` in :func:`repro.kernels.plan.autotune`) into the
+    kernel's ``block_m``; without one the kernel keeps its default.  The
+    OUTPUT is tile-height-independent — per-row 1x128 scales don't care
+    how rows are batched — so tuning only moves wall time.
 
     A pure-quantization call never *needs* a kernel backend — when
     *auto*-resolution fails (e.g. an installed default naming an
@@ -706,17 +987,14 @@ def quantize_tilewise(x, *, backend: Optional[str] = None):
     asked for that kernel, not a silent stand-in.
     """
     explicit = backend not in (None, "auto")
+    key = OpKey("quantize", "fp8")
     try:
-        backend = resolve_backend(backend)
+        name = resolve(key, backend)
     except BackendUnavailableError:
         if explicit:
             raise
         return _ref.quantize_tilewise_ref(x)
-    if backend == "pallas":
-        return quantize_tilewise_pallas(x, interpret=False)
-    if backend == "pallas_interpret":
-        return quantize_tilewise_pallas(x, interpret=True)
-    return _ref.quantize_tilewise_ref(x)
+    return _OPERATORS[key][name].run(x, config=config)
 
 
 def quantize_blockwise(w, *, backend: Optional[str] = None):
@@ -731,7 +1009,7 @@ def quantize_blockwise(w, *, backend: Optional[str] = None):
     """
     explicit = backend not in (None, "auto")
     try:
-        resolve_backend(backend)
+        resolve(OpKey("quantize", "fp8"), backend)
     except BackendUnavailableError:
         if explicit:
             raise
@@ -744,3 +1022,7 @@ def quantize_blockwise_batched(w, *, backend: Optional[str] = None):
     covers the batched (per-expert) path automatically."""
     return jax.vmap(
         lambda wg: quantize_blockwise(wg, backend=backend))(w)
+
+
+if __name__ == "__main__":
+    print(format_backend_matrix())

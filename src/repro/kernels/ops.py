@@ -1,10 +1,10 @@
 """Back-compat surface over :mod:`repro.kernels.dispatch`.
 
-Historically this module owned the backend switch; the unified registry in
-``dispatch.py`` replaced it.  Pre-registry callers (and tests) that import
-``ops.grouped_gemm_fp8`` / ``ops.quantize_tilewise`` keep working — every
-call routes through the registry, including the ``"xla"`` alias for the
-``"xla_ragged"`` backend.
+Historically this module owned the backend switch; the unified operator
+registry in ``dispatch.py`` replaced it.  Pre-registry callers (and
+tests) that import ``ops.grouped_gemm_fp8`` / ``ops.quantize_tilewise``
+keep working — every call routes through the ``OpKey``-keyed registry,
+including the ``"xla"`` alias for the ``"xla_ragged"`` backend.
 """
 from __future__ import annotations
 
@@ -12,6 +12,7 @@ from repro.kernels.dispatch import (        # noqa: F401  (re-exports)
     QUANT_BLOCK,
     BackendUnavailableError,
     KernelConfig,
+    OpKey,
     TilePlan,
     availability,
     backend_ignores_tiles,
@@ -22,15 +23,23 @@ from repro.kernels.dispatch import (        # noqa: F401  (re-exports)
     gmm_xla,
     gmm_xla_exact,
     grouped_gemm,
+    grouped_gemm_bf16,
     grouped_gemm_fp8,
     grouped_gemm_wgrad,
     grouped_gemm_wgrad_fp8,
     make_tile_plan,
+    op_availability,
+    op_backend_names,
+    op_ignores_tiles,
+    op_keys,
+    op_uses_plan,
     quantize_blockwise,
     quantize_blockwise_batched,
     quantize_tilewise,
     register_backend,
+    register_operator,
     register_wgrad_backend,
+    resolve,
     resolve_backend,
     resolve_config,
     resolve_wgrad_backend,

@@ -364,12 +364,88 @@ def make_tile_plan(group_sizes: jax.Array, m: int, *,
 
 
 # ---------------------------------------------------------------------------
+# PlanCache: serve every static plan shape once
+# ---------------------------------------------------------------------------
+
+class PlanCache:
+    """Serves every *static* plan shape exactly once.
+
+    A :class:`TilePlan`'s arrays depend on the ``group_sizes`` data, so
+    the plan itself cannot be cached across calls — but the plan
+    *builder* can: for one static key ``(m, block_m, num_groups,
+    group_sizes dtype, device)`` the schedule derivation traces once and
+    every later call (same static shape, new sizes) replays the compiled
+    builder.  Eager call sites that used to re-derive the schedule per
+    call — ``padded_baseline``'s block-aligned inner GEMM, a serving
+    loop's per-step plans — pay the metadata math once per shape class,
+    the same trade the paper's preconfigured descriptor pool makes.
+
+    ``builds`` counts builder compilations (the regression surface for
+    "two calls with the same static shape build exactly one plan").
+    """
+
+    def __init__(self):
+        self._builders: "dict[tuple, Any]" = {}
+        self.builds = 0
+
+    def clear(self) -> None:
+        self._builders.clear()
+        self.builds = 0
+
+    def get(self, group_sizes: jax.Array, m: int, *,
+            block_m: Optional[int] = None,
+            num_groups: Optional[int] = None) -> TilePlan:
+        if block_m is None:
+            block_m = get_default_config().block_m
+        if num_groups is None:
+            num_groups = group_sizes.shape[0]
+        key = (int(m), int(block_m), int(num_groups),
+               jnp.dtype(group_sizes.dtype).name, _device_kind())
+        builder = self._builders.get(key)
+        if builder is None:
+            self.builds += 1
+
+            def build(gs, _m=int(m), _bm=int(block_m), _g=int(num_groups)):
+                return make_tile_plan(gs, _m, block_m=_bm, num_groups=_g)
+
+            builder = jax.jit(build)
+            self._builders[key] = builder
+        return builder(group_sizes)
+
+
+#: process-wide instance — cached plans sit beside the autotune entries as
+#: the other per-shape-class artifact
+PLAN_CACHE = PlanCache()
+
+
+def shared_plan(group_sizes: jax.Array, m: int, *,
+                block_m: Optional[int] = None,
+                num_groups: Optional[int] = None) -> TilePlan:
+    """Build (or replay) a :class:`TilePlan` through the process-wide
+    :data:`PLAN_CACHE`."""
+    return PLAN_CACHE.get(group_sizes, m, block_m=block_m,
+                          num_groups=num_groups)
+
+
+# ---------------------------------------------------------------------------
 # Block-shape pool (the descriptor-pool analogue)
 # ---------------------------------------------------------------------------
 
 # block_m sweeps the paper's log2 descriptor axis; the (block_n, block_k)
 # cross stays small — one 128-lane output tile or a double-wide variant.
-CONFIG_POOL: "tuple[KernelConfig, ...]" = tuple(
+#
+# The decode-specialized entries (block_m=8/16) extend the descriptor axis
+# down to serving's tiny-M regime: a decode step's grouped GEMM has
+# M = batch*top_k rows TOTAL, so a 128-row tile wastes >=87% of its
+# fetched A rows and C flush.  The MXU-occupancy term in the cost model
+# (``_eff_rows``) keeps these entries from ever ranking at training
+# shapes: below 128 rows the compute time per visit is flat, so shrinking
+# block_m only buys anything when it cuts *memory* traffic — i.e. when M
+# itself is tiny.
+DECODE_BLOCK_MS = (8, 16)
+DECODE_POOL: "tuple[KernelConfig, ...]" = tuple(
+    KernelConfig(block_m=bm) for bm in DECODE_BLOCK_MS)
+CONFIG_POOL: "tuple[KernelConfig, ...]" = DECODE_POOL + tuple(
     KernelConfig(block_m=bm, block_n=bn, block_k=bk)
     for bm in (64, 128, 256, 512)
     for bn, bk in ((128, 128), (256, 128))
@@ -432,11 +508,25 @@ def device_spec(device_kind: Optional[str] = None) -> DeviceSpec:
     return DEVICE_SPECS["cpu"]
 
 
+# the MXU processes a full 128-row pass regardless of how few rows a tile
+# holds: compute time per visit is flat below this granularity, so the
+# cost model charges tiles their *occupied* MXU rows — the term that
+# confines the decode entries (block_m=8/16) to the tiny-M regime where
+# their memory-traffic savings are real
+MXU_M = 128
+
+
+def _eff_rows(block_m: int) -> int:
+    return -(-block_m // MXU_M) * MXU_M
+
+
 def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
                     spec: Optional[DeviceSpec] = None) -> float:
     """Roofline estimate of one grouped GEMM under ``config``: max of the
     compute and memory terms, with the visit-inflation the plan implies
-    (worst case: every group boundary splits a tile, +G-1 visits)."""
+    (worst case: every group boundary splits a tile, +G-1 visits).
+    Compute charges MXU occupancy (``_eff_rows``): a sub-128-row tile
+    takes a full MXU pass; memory charges the bytes actually moved."""
     spec = spec or device_spec()
     bm, bn = config.block_m, config.block_n
     num_tiles = -(-m // bm)
@@ -444,7 +534,7 @@ def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
     n_steps = -(-n // bn)
     kb = -(-k // QUANT_BLOCK)
     # every visit computes a full (bm, k) x (k, n) tile row
-    flops = 2.0 * visits * bm * k * n
+    flops = 2.0 * visits * _eff_rows(bm) * k * n
     a_bytes = visits * n_steps * bm * (k + 4 * kb)     # fp8 A + f32 S_A
     b_bytes = visits * k * n                           # fp8 B per visit
     c_bytes = num_tiles * bm * n * 2                   # bf16 C flush
@@ -469,7 +559,7 @@ def estimate_cost_s_wgrad(m: int, k: int, n: int, g: int,
     visits = num_tiles + max(g - 1, 0)
     k_steps = -(-k // config.block_k)
     n_steps = -(-n // config.block_n)
-    flops = 2.0 * visits * bm * k * n
+    flops = 2.0 * visits * _eff_rows(bm) * k * n
     if precision == "fp8":
         kb = -(-k // QUANT_BLOCK)
         nb = -(-n // QUANT_BLOCK)
@@ -481,6 +571,22 @@ def estimate_cost_s_wgrad(m: int, k: int, n: int, g: int,
     dw_bytes = g * k * n * 4                             # f32 dw flush
     return max(flops / spec.peak_flops,
                (x_bytes + dy_bytes + dw_bytes) / spec.hbm_bw)
+
+
+def estimate_cost_s_quantize(m: int, k: int, config: KernelConfig,
+                             spec: Optional[DeviceSpec] = None) -> float:
+    """Roofline estimate of one 1x128 tilewise quantization pass under
+    ``config`` (the kernel's tile height is ``block_m``).  The pass is
+    memory-bound and its traffic is tile-height-independent (read the
+    f32 payload, write fp8 + f32 scale rows); the grid term models
+    per-tile dispatch overhead, so the model ranks taller tiles first and
+    live measurement arbitrates the rest — exactly the split the GEMM
+    families use for their tile-free backends."""
+    spec = spec or device_spec()
+    tiles = -(-m // config.block_m)
+    kb = -(-k // QUANT_BLOCK)
+    bytes_moved = m * k * 4 + m * k * 1 + m * kb * 4
+    return bytes_moved / spec.hbm_bw + tiles * 1e-6
 
 
 # ---------------------------------------------------------------------------
@@ -558,18 +664,32 @@ def clear_cache_memo() -> None:
 # Autotuner: measured pool selection on the live backend
 # ---------------------------------------------------------------------------
 
+# autotune op family -> (dispatch OpKey, display suffix for cache keys)
+_AUTOTUNE_OPS = {
+    "gemm": ("gemm", "fp8"),
+    "decode": ("gemm", "fp8"),       # tiny-M serving shapes, decode pool
+    "wgrad": ("wgrad", "bf16"),
+    "wgrad_fp8": ("wgrad", "fp8"),
+    "quantize": ("quantize", "fp8"),
+}
+
+
 def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
                        *, iters: int = 3, warmup: int = 1,
                        seed: int = 0, op: str = "gemm") -> float:
-    """Median wall seconds of one grouped GEMM (``op="gemm"``) or ragged
-    wgrad contraction (``op="wgrad"``) under ``config`` on random operands
-    (the live-backend measurement behind pool selection)."""
+    """Median wall seconds of one operator application under ``config`` on
+    random operands (the live-backend measurement behind pool selection):
+    grouped GEMM (``"gemm"``/``"decode"``), ragged wgrad contraction
+    (``"wgrad"``/``"wgrad_fp8"``), or tilewise quantization
+    (``"quantize"``)."""
     import numpy as np
     from repro.kernels import dispatch, ref
 
     rng = np.random.default_rng(seed)
-    sizes = rng.multinomial(m, np.full(g, 1.0 / g)).astype(np.int32)
+    g_eff = max(g, 1)                       # "quantize" callers pass g=0
+    sizes = rng.multinomial(m, np.full(g_eff, 1.0 / g_eff)).astype(np.int32)
     gs = jnp.asarray(sizes)
+    g = g_eff
 
     if op == "wgrad":
         x = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
@@ -588,6 +708,12 @@ def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
             return dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs,
                                                    num_groups=g,
                                                    config=config)
+    elif op == "quantize":
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+
+        def run():
+            return dispatch.quantize_tilewise(x, backend=config.backend,
+                                              config=config)
     else:
         a8, sa = ref.quantize_tilewise_ref(
             jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
@@ -620,13 +746,16 @@ def autotune(m: int, k: int, n: int, g: int, *,
              op: str = "gemm") -> KernelConfig:
     """Select a ``KernelConfig`` for the shape class of (M, K, N, G).
 
-    ``op`` picks the operation family: ``"gemm"`` is the forward/dgrad
-    orientation (ragged M output rows), ``"wgrad"`` the ragged-contraction
-    orientation (``dw[g] = x_g^T @ dy_g`` — M is contracted, output is the
-    dense ``[G, K, N]``), and ``"wgrad_fp8"`` the same contraction with
-    fp8 operands + 1x128 tile scales (per-visit dequantization).  Each
-    ranks by its own roofline terms and caches under distinct keys: a
-    routing decision tunes once per family it uses.
+    ``op`` picks the operator (a first-class ``OpKey`` of the unified
+    dispatch registry): ``"gemm"`` is the forward/dgrad orientation
+    (ragged M output rows), ``"decode"`` the same orientation restricted
+    to the decode-specialized pool (tiny constant M per serving step;
+    block_m<=16), ``"wgrad"`` the ragged-contraction orientation
+    (``dw[g] = x_g^T @ dy_g``), ``"wgrad_fp8"`` that contraction on fp8
+    operands + 1x128 tile scales, and ``"quantize"`` the tilewise
+    quantizer's tile height (K-only legality; N and G are ignored — pass
+    0).  Each ranks by its own roofline terms and caches under distinct
+    keys: a routing decision tunes once per operator it uses.
 
     Pool candidates are ranked by the roofline cost model, the top
     ``max_candidates`` are measured on the live backend (skipped with
@@ -636,20 +765,18 @@ def autotune(m: int, k: int, n: int, g: int, *,
     """
     from repro.kernels import dispatch
 
-    if op not in ("gemm", "wgrad", "wgrad_fp8"):
-        raise ValueError(f"unknown autotune op {op!r}; use 'gemm', "
-                         "'wgrad' or 'wgrad_fp8'")
-    if op == "wgrad_fp8":
-        resolved = dispatch.resolve_wgrad_backend(backend, precision="fp8")
-    elif op == "wgrad":
-        resolved = dispatch.resolve_wgrad_backend(backend)
-    else:
-        resolved = dispatch.resolve_backend(backend)
+    if op not in _AUTOTUNE_OPS:
+        raise ValueError(f"unknown autotune op {op!r}; use one of "
+                         f"{tuple(_AUTOTUNE_OPS)}")
+    op_key = _AUTOTUNE_OPS[op]
     # configs carry the family-neutral backend name (one config string
-    # rides a whole training step); the fp8 wgrad dispatch re-derives its
-    # ``*_fp8`` registry twin from it at run time
-    base = dispatch._wgrad_twin(resolved, "bf16")
-    tile_free = resolved in dispatch.TILE_FREE_BACKENDS
+    # rides a whole training step); the OpKey precision — not the name —
+    # selects each family's twin at run time
+    base = dispatch.resolve(op_key, backend)
+    # cache keys keep the historical per-precision spelling (the fp8
+    # wgrad entries were published as ``<name>_fp8``)
+    resolved = base + ("_fp8" if op == "wgrad_fp8" else "")
+    tile_free = dispatch.op_ignores_tiles(op_key, base)
     kind = _device_kind()
     key = cache_key(kind, resolved, m, k, n, g, op=op)
     entries = load_cache(cache_path)
@@ -661,15 +788,30 @@ def autotune(m: int, k: int, n: int, g: int, *,
         if entry.get("source") == "measured" or not wants_measured:
             return KernelConfig.from_dict(entry["config"])
 
+    if pool is None and op == "decode":
+        pool = DECODE_POOL
     # wgrad's output is never transposed — forward/dgrad legality demands
-    # both orientations, wgrad only its own
+    # both orientations, wgrad only its own; the quantizer has no (K, N)
+    # output tile at all (its block_m is pure scheduling)
     cands = candidate_pool(k, n, pool,
-                           require_transposable=(op == "gemm"))
+                           require_transposable=(op in ("gemm", "decode")))
+    if op == "quantize":
+        # entries differing only in (block_n, block_k) are duplicates for
+        # the quantizer — keep one per tile height
+        seen, uniq = set(), []
+        for c in cands:
+            if c.block_m not in seen:
+                seen.add(c.block_m)
+                uniq.append(c)
+        cands = tuple(uniq)
     if not cands:
         raise ValueError(f"no pool candidate is legal for K={k}, N={n}")
     spec = device_spec(kind)
-    if op == "gemm":
+    if op in ("gemm", "decode"):
         cost = estimate_cost_s
+    elif op == "quantize":
+        cost = lambda m_, k_, n_, g_, c, s: \
+            estimate_cost_s_quantize(m_, k_, c, s)                # noqa: E731
     else:
         prec = "fp8" if op == "wgrad_fp8" else "bf16"
         cost = lambda *a: estimate_cost_s_wgrad(*a, precision=prec)  # noqa: E731
@@ -694,3 +836,19 @@ def autotune(m: int, k: int, n: int, g: int, *,
                     "source": source, "pool_size": len(cands), "op": op}
     save_cache(entries, cache_path)
     return best
+
+
+def decode_config(m: int, k: int, n: int, g: int, *,
+                  backend: Optional[str] = None,
+                  cache_path: Optional[str] = None,
+                  measure: bool = False,
+                  **kw) -> KernelConfig:
+    """Decode-specialized pool selection (``op="decode"``): the serving
+    engine's per-step grouped GEMM has tiny, *constant* M (batch x top_k
+    rows total), so selection runs once at engine construction and the
+    returned ``block_m<=16`` config rides every decode step.  Cost-model
+    selection by default (``measure=False``) — engine construction should
+    not block on kernel timing; pass ``measure=True`` to tune on-device.
+    """
+    return autotune(m, k, n, g, backend=backend, cache_path=cache_path,
+                    measure=measure, op="decode", **kw)

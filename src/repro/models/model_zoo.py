@@ -78,6 +78,19 @@ def make_model(cfg: ModelConfig) -> Model:
                  init_cache=init_cache)
 
 
+def with_kernel_config(model: Model, kernel_config) -> Model:
+    """Rebuild a :class:`Model`'s closures over ``kernel_config`` (tile
+    shapes/backend for every grouped/linear GEMM it traces).  Params are
+    untouched — tile shapes are execution schedule, not weights — so one
+    param tree serves several phase-specialized models (the serving
+    engine pins separate prefill and decode configs this way).  No-op
+    when the config already matches."""
+    if model.cfg.kernel_config == kernel_config:
+        return model
+    return make_model(dataclasses.replace(model.cfg,
+                                          kernel_config=kernel_config))
+
+
 # ---------------------------------------------------------------------------
 # Batches & specs
 # ---------------------------------------------------------------------------

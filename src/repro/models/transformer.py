@@ -42,7 +42,7 @@ def moe_config(cfg: ModelConfig) -> MoEConfig:
         d_ff_expert=m.d_ff_expert, num_shared_experts=m.num_shared_experts,
         norm_topk_prob=m.norm_topk_prob, capacity_factor=m.capacity_factor,
         precision=cfg.precision, backend=cfg.gemm_backend,
-        kernel_config=cfg.kernel_config,
+        kernel_config=cfg.resolved_kernel_config,
         dispatch=cfg.moe_dispatch,
         reduce_dtype=jnp.bfloat16 if cfg.moe_reduce_bf16 else jnp.float32)
 
@@ -130,7 +130,8 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, positions, *,
         else:
             act = "gelu" if cfg.family == "audio" else "swiglu"
             ff = mlp(p["mlp"], h2, act, precision=cfg.precision,
-                     backend=cfg.gemm_backend, config=cfg.kernel_config)
+                     backend=cfg.gemm_backend,
+                     config=cfg.resolved_kernel_config)
         return x + ff, new_cache, aux
     if kind == "rglru":
         h, new_state = rg.rglru_apply(
@@ -141,7 +142,7 @@ def block_apply(kind: str, p, x, cfg: ModelConfig, positions, *,
         x = x + h
         ff = mlp(p["mlp"], rms_norm(p["ln2"], x, cfg.norm_eps), "swiglu",
                  precision=cfg.precision, backend=cfg.gemm_backend,
-                 config=cfg.kernel_config)
+                 config=cfg.resolved_kernel_config)
         return x + ff, new_state, aux
     if kind == "mlstm":
         h, new_state = xl.mlstm_apply(

@@ -90,7 +90,7 @@ def whisper_encode(params, frames, cfg: ModelConfig):
         x = x + h
         x = x + mlp(lp["mlp"], rms_norm(lp["ln2"], x, cfg.norm_eps), "gelu",
                     precision=cfg.precision, backend=cfg.gemm_backend,
-                    config=cfg.kernel_config)
+                    config=cfg.resolved_kernel_config)
         return x, None
 
     fn = jax.checkpoint(body) if cfg.remat else body
@@ -126,7 +126,7 @@ def whisper_forward(params, tokens, frames, cfg: ModelConfig, *,
         x = x + h2
         x = x + mlp(lp["mlp"], rms_norm(lp["ln3"], x, cfg.norm_eps), "gelu",
                     precision=cfg.precision, backend=cfg.gemm_backend,
-                    config=cfg.kernel_config)
+                    config=cfg.resolved_kernel_config)
         out_cache = None
         if mode != "train":
             out_cache = {"self": nc, "xkv": xk}

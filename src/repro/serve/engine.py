@@ -1,7 +1,20 @@
 """Batched serving engine: prefill + greedy/temperature decode loop with a
 static KV-cache capacity (continuous-batching-lite: per-sequence stop with
 a done mask; finished rows keep decoding into padding, standard for
-static-shape TPU serving)."""
+static-shape TPU serving).
+
+Plan-aware decode: a decode step's MoE grouped GEMM sees *tiny, constant*
+M (batch x top_k routed rows in total), where the training-shaped 128-row
+tiles waste almost every fetched A row.  The engine therefore resolves a
+decode-specialized :class:`~repro.kernels.plan.KernelConfig` (the
+``block_m<=16`` pool entries, ``op="decode"`` in the autotuner) ONCE at
+construction and rebuilds the decode-phase model closures over it —
+prefill keeps the caller's (or default) config, so the two phases pin
+separate tuned tile geometries while sharing one param tree.  Inside the
+jitted decode loop the TilePlan schedule is then traced once and replayed
+every step — one plan build per phase, the serving analogue of the
+paper's configure-once/select-cheaply descriptor pool.
+"""
 from __future__ import annotations
 
 import dataclasses
@@ -11,7 +24,10 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import dispatch
+from repro.kernels import plan as plan_mod
 from repro.kernels.plan import KernelConfig
+from repro.models import model_zoo
 from repro.models.model_zoo import Model
 
 
@@ -22,17 +38,32 @@ class GenerationResult:
 
 
 class Engine:
+    """``kernel_config`` pins the *prefill* phase's tile shapes (and is
+    inherited as the base of the decode selection); ``decode_kernel_config``
+    pins the decode phase explicitly, skipping the pool selection.
+    ``decode_batch_size`` is the M-bucket hint for that selection — the
+    engine stays correct for any actual batch (plans are traced per
+    shape), the hint only steers which pool entry is pinned."""
+
     def __init__(self, model: Model, params, *, max_new_tokens: int = 32,
                  eos_id: int = -1, temperature: float = 0.0,
-                 kernel_config: Optional[KernelConfig] = None):
+                 kernel_config: Optional[KernelConfig] = None,
+                 decode_kernel_config: Optional[KernelConfig] = None,
+                 decode_batch_size: int = 8):
         if kernel_config is not None:
-            # pin tuned tile shapes for every GEMM this engine traces
-            # (prefill + decode) by rebuilding the model closures over a
-            # config carrying the KernelConfig
-            from repro.models.model_zoo import make_model
-            model = make_model(dataclasses.replace(
-                model.cfg, kernel_config=kernel_config))
+            # pin tuned tile shapes for every GEMM the prefill traces by
+            # rebuilding the model closures over a config carrying them
+            model = model_zoo.with_kernel_config(model, kernel_config)
         self.model = model
+        self.prefill_config = model.cfg.resolved_kernel_config
+        # decode-specialized plan: resolved exactly ONCE per engine
+        self.decode_config = (decode_kernel_config
+                              if decode_kernel_config is not None
+                              else self._select_decode_config(
+                                  model.cfg, decode_batch_size))
+        self._decode_model = (
+            model_zoo.with_kernel_config(model, self.decode_config)
+            if self.decode_config is not None else model)
         self.params = params
         self.max_new = max_new_tokens
         self.eos_id = eos_id
@@ -41,6 +72,29 @@ class Engine:
             functools.partial(self._prefill_impl),
             static_argnames=("cache_capacity",))
         self._decode_loop = jax.jit(self._decode_loop_impl)
+
+    @staticmethod
+    def _select_decode_config(cfg, batch_hint: int) -> Optional[KernelConfig]:
+        """One-time decode pool selection (cost-model ranked, cached
+        beside the measured autotune entries).  ``None`` when the model
+        has no grouped GEMM to specialize (non-MoE families) or the
+        decode pool has no legal entry for its dims."""
+        if cfg.moe is None:
+            return None
+        m = max(batch_hint, 1) * cfg.moe.top_k
+        k, n, g = cfg.d_model, cfg.moe.d_ff_expert, cfg.moe.num_experts
+        try:
+            sel = plan_mod.decode_config(m, k, n, g,
+                                         backend=cfg.gemm_backend)
+        except (ValueError, dispatch.BackendUnavailableError):
+            return None
+        base = cfg.resolved_kernel_config
+        if base is not None:
+            # keep the run config's backend/out_dtype/wgrad choices; only
+            # the tile geometry is decode-specialized
+            sel = base.with_(block_m=sel.block_m, block_n=sel.block_n,
+                             block_k=sel.block_k)
+        return sel
 
     def _prefill_impl(self, params, batch, cache_capacity):
         logits, cache = self.model.prefill(params, batch,
@@ -58,8 +112,8 @@ class Engine:
         def step(carry, _):
             tok, cache, done, key = carry
             key, sub = jax.random.split(key)
-            logits, cache = self.model.decode_step(params, tok[:, None],
-                                                   cache)
+            logits, cache = self._decode_model.decode_step(
+                params, tok[:, None], cache)
             nxt = self._sample(logits[:, 0], sub)
             nxt = jnp.where(done, 0, nxt)
             done = done | (nxt == self.eos_id)

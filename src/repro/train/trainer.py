@@ -20,19 +20,30 @@ from repro.optim import adamw
 
 def make_train_step(loss_fn: Callable, opt_cfg: adamw.OptConfig,
                     grad_accum: int = 1, donate: bool = True,
-                    kernel_config: Optional[plan_mod.KernelConfig] = None):
+                    kernel_config: Optional[plan_mod.KernelConfig] = None,
+                    wgrad_precision: Optional[str] = None):
     """loss_fn(params, batch) -> (loss, metrics dict of scalars).
 
     ``kernel_config`` pins tuned tile shapes (an autotuned
     :class:`~repro.kernels.plan.KernelConfig`) for every grouped/linear
     GEMM traced under this step — models that don't carry an explicit
     config resolve to it via the plan module's default-config seam.
+
+    ``wgrad_precision`` selects the training recipe from the run config:
+    ``"fp8"`` opts every fp8 grouped GEMM's backward into the all-fp8
+    wgrad (arXiv 2505.20524); ``None``/``"bf16"`` keeps the DeepSeek
+    default.  It folds into ``kernel_config`` (or the installed/per-device
+    default when none is pinned) through the same seam — models that pin
+    an explicit ``ModelConfig.kernel_config``/``wgrad_precision`` keep
+    their own setting.
     """
-    if kernel_config is not None:
+    if kernel_config is not None or wgrad_precision is not None:
         inner_loss = loss_fn
 
         def loss_fn(params, batch):
-            with plan_mod.default_config(kernel_config):
+            cfg = plan_mod.resolve_config(kernel_config,
+                                          wgrad_precision=wgrad_precision)
+            with plan_mod.default_config(cfg):
                 return inner_loss(params, batch)
 
     def train_step(params, opt_state, batch):

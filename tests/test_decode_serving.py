@@ -1,0 +1,169 @@
+"""Plan-aware serving decode path.
+
+The Engine resolves a decode-specialized ``block_m<=16`` KernelConfig
+exactly ONCE at construction (the decode pool, ``op="decode"``), pins
+separate prefill/decode configs over one param tree, and a full generate
+builds plan metadata exactly once per phase — the decode loop's traced
+plan is replayed for every step.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.kernels import plan as plan_mod
+from repro.kernels.plan import DECODE_POOL, KernelConfig
+from repro.models import model_zoo
+from repro.models.model_zoo import make_model, synthetic_batch
+from repro.serve.engine import Engine
+
+
+@pytest.fixture(scope="module")
+def moe_model():
+    cfg = dataclasses.replace(smoke_config("qwen2-moe-a2.7b"),
+                              precision="fp8",
+                              gemm_backend="pallas_interpret")
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    return model, params
+
+
+def test_decode_config_resolved_once_per_engine(moe_model, monkeypatch,
+                                                tmp_path):
+    model, params = moe_model
+    monkeypatch.setenv("REPRO_TILEPLAN_CACHE", str(tmp_path / "c.json"))
+    selections = []
+    real = plan_mod.decode_config
+    monkeypatch.setattr(plan_mod, "decode_config",
+                        lambda *a, **kw: selections.append(a) or
+                        real(*a, **kw))
+    engine = Engine(model, params, max_new_tokens=6, decode_batch_size=2)
+    assert len(selections) == 1, "one decode selection per engine"
+    assert engine.decode_config is not None
+    assert engine.decode_config.block_m <= 16
+    # prefill keeps its own (non-decode) geometry
+    pf = engine.prefill_config
+    assert pf is None or pf.block_m > 16
+    # ...and a second generate-sized workload does not re-select
+    batch = synthetic_batch(jax.random.PRNGKey(1), model.cfg, 16, 2)
+    engine.generate(batch, key=jax.random.PRNGKey(2))
+    assert len(selections) == 1
+
+
+def test_generate_builds_one_plan_per_phase(moe_model, monkeypatch,
+                                            tmp_path):
+    """prefill + >=4 decode steps = exactly TWO metadata builds: one for
+    the prefill trace, one for the decode loop's scanned body (every
+    decode step replays it)."""
+    model, params = moe_model
+    monkeypatch.setenv("REPRO_TILEPLAN_CACHE", str(tmp_path / "c.json"))
+    engine = Engine(model, params, max_new_tokens=6, decode_batch_size=2)
+    builds = []
+    inner = plan_mod.make_group_metadata
+    monkeypatch.setattr(plan_mod, "make_group_metadata",
+                        lambda *a, **kw: builds.append(a) or inner(*a, **kw))
+    batch = synthetic_batch(jax.random.PRNGKey(1), model.cfg, 16, 2)
+    res = engine.generate(batch, key=jax.random.PRNGKey(42))
+    assert res.tokens.shape == (2, 6)            # 1 prefill + 5 decode
+    assert len(builds) == 2, \
+        f"one plan build per phase, saw {len(builds)}"
+    # the decode phase's build runs under the decode-specialized tiling
+    assert int(builds[-1][2]) == engine.decode_config.block_m
+
+
+def test_explicit_decode_config_skips_selection(moe_model, monkeypatch):
+    model, params = moe_model
+    monkeypatch.setattr(plan_mod, "decode_config",
+                        lambda *a, **kw: pytest.fail("selection ran"))
+    pinned = KernelConfig(block_m=16, backend="pallas_interpret")
+    engine = Engine(model, params, decode_kernel_config=pinned)
+    assert engine.decode_config == pinned
+
+
+def test_non_moe_model_has_no_decode_config(monkeypatch):
+    monkeypatch.setattr(plan_mod, "decode_config",
+                        lambda *a, **kw: pytest.fail("selection ran"))
+    cfg = smoke_config("qwen3-1.7b")
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    engine = Engine(model, params, max_new_tokens=2)
+    assert engine.decode_config is None
+    assert engine._decode_model is engine.model
+    batch = synthetic_batch(jax.random.PRNGKey(1), cfg, 8, 1)
+    assert engine.generate(batch).tokens.shape == (1, 2)
+
+
+def test_decode_config_inherits_run_config_fields(moe_model, tmp_path,
+                                                  monkeypatch):
+    """The decode selection replaces tile geometry ONLY — backend,
+    out_dtype, and wgrad_precision of a pinned run config survive."""
+    model, params = moe_model
+    monkeypatch.setenv("REPRO_TILEPLAN_CACHE", str(tmp_path / "c.json"))
+    pinned = KernelConfig(block_m=256, backend="pallas_interpret",
+                          out_dtype=jnp.float32)
+    engine = Engine(model, params, kernel_config=pinned,
+                    decode_batch_size=2)
+    dc = engine.decode_config
+    assert dc.block_m <= 16
+    assert dc.backend == "pallas_interpret"
+    assert dc.out_dtype == jnp.float32
+    assert engine.prefill_config == pinned
+
+
+def test_decode_autotune_uses_decode_pool_and_key(tmp_path):
+    cache = str(tmp_path / "c.json")
+    cfg = plan_mod.decode_config(16, 128, 128, 4,
+                                 backend="pallas_interpret",
+                                 cache_path=cache)
+    assert cfg.block_m in {c.block_m for c in DECODE_POOL}
+    entries = plan_mod.load_cache(cache)
+    key = plan_mod.cache_key(plan_mod._device_kind(), "pallas_interpret",
+                             16, 128, 128, 4, op="decode")
+    assert key in entries and entries[key]["op"] == "decode"
+    # distinct from a generic gemm tune of the same shape class
+    plan_mod.autotune(16, 128, 128, 4, backend="pallas_interpret",
+                      cache_path=cache, measure=False)
+    assert len(plan_mod.load_cache(cache)) == 2
+
+
+def test_decode_entries_never_rank_at_training_shapes():
+    """The MXU-occupancy cost term confines block_m=8/16 to tiny M: at a
+    training shape the ranked-first candidate keeps a full tile."""
+    spec = plan_mod.device_spec("cpu")
+    cands = plan_mod.candidate_pool(512, 512)
+    best = min(cands, key=lambda c: plan_mod.estimate_cost_s(
+        8192, 512, 512, 16, c, spec))
+    assert best.block_m >= 64, best
+    tiny = min(cands, key=lambda c: plan_mod.estimate_cost_s(
+        8, 512, 512, 4, c, spec))
+    assert tiny.block_m <= 16, tiny
+
+
+def test_with_kernel_config_is_noop_on_match(moe_model):
+    model, _ = moe_model
+    assert model_zoo.with_kernel_config(model, model.cfg.kernel_config) \
+        is model
+    pinned = KernelConfig(block_m=16)
+    rebuilt = model_zoo.with_kernel_config(model, pinned)
+    assert rebuilt is not model
+    assert rebuilt.cfg.kernel_config == pinned
+
+
+def test_decode_output_matches_default_tiling(moe_model, tmp_path,
+                                              monkeypatch):
+    """Decode-specialized tiles are pure scheduling: greedy decode
+    produces the same tokens as an engine pinned to the training
+    geometry (same kernel arithmetic, different tile walk)."""
+    model, params = moe_model
+    monkeypatch.setenv("REPRO_TILEPLAN_CACHE", str(tmp_path / "c.json"))
+    batch = synthetic_batch(jax.random.PRNGKey(1), model.cfg, 16, 2)
+    fast = Engine(model, params, max_new_tokens=4, decode_batch_size=2)
+    ref = Engine(model, params, max_new_tokens=4,
+                 decode_kernel_config=KernelConfig(
+                     backend="pallas_interpret"))
+    t_fast = fast.generate(batch, key=jax.random.PRNGKey(7)).tokens
+    t_ref = ref.generate(batch, key=jax.random.PRNGKey(7)).tokens
+    np.testing.assert_array_equal(np.asarray(t_fast), np.asarray(t_ref))

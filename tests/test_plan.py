@@ -283,8 +283,11 @@ def test_candidate_pool_filters_legality():
     cands = candidate_pool(256, 128)
     assert cands and all(c.compatible(256, 128) for c in cands)
     assert all(c.block_n == 128 for c in cands)     # N=128 excludes bn=256
-    assert {c.block_m for c in candidate_pool(512, 512)} == {64, 128, 256,
-                                                             512}
+    # the pool spans the training tile heights AND the decode-specialized
+    # tiny-M entries (block_m=8/16, serving's per-step grouped GEMM)
+    assert {c.block_m for c in candidate_pool(512, 512)} == \
+        {8, 16, 64, 128, 256, 512}
+    assert {c.block_m for c in plan_mod.DECODE_POOL} == {8, 16}
 
 
 def test_candidate_pool_requires_transposed_legality():

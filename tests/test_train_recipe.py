@@ -1,0 +1,198 @@
+"""Selecting the all-fp8 training recipe from run config.
+
+``wgrad_precision="fp8"`` (arXiv 2505.20524) threads through
+``make_train_step`` and ``ModelConfig`` presets without hand-building a
+``KernelConfig``, and a short training run under the all-fp8 recipe stays
+loss-parity with the default bf16-wgrad recipe.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import smoke_config
+from repro.configs.base import ModelConfig
+from repro.core import moe as moe_mod
+from repro.kernels import dispatch
+from repro.kernels.plan import KernelConfig
+from repro.models import transformer as tfm
+from repro.optim.adamw import OptConfig
+from repro.train.trainer import make_train_step
+
+
+def test_model_config_folds_wgrad_precision():
+    cfg = smoke_config("qwen2-moe-a2.7b")
+    assert cfg.resolved_kernel_config is None          # nothing set: no pin
+    cfg8 = dataclasses.replace(cfg, wgrad_precision="fp8")
+    assert cfg8.resolved_kernel_config.wgrad_precision == "fp8"
+    # an explicit kernel_config keeps its tile fields, gains the recipe
+    pinned = dataclasses.replace(
+        cfg, kernel_config=KernelConfig(block_m=64),
+        wgrad_precision="fp8")
+    rc = pinned.resolved_kernel_config
+    assert rc.block_m == 64 and rc.wgrad_precision == "fp8"
+    # and the MoE layer consumes the folded config
+    mcfg = tfm.moe_config(dataclasses.replace(cfg8, precision="fp8"))
+    assert mcfg.kernel_config.wgrad_precision == "fp8"
+
+
+def _moe_loss_fn(cfg):
+    def loss(params, batch):
+        y, aux = moe_mod.moe_apply(params, batch["x"], cfg)
+        l = jnp.mean((y.astype(jnp.float32) - batch["t"]) ** 2)
+        return l, {"lb": aux["load_balance_loss"]}
+    return loss
+
+
+def _fixture():
+    cfg = moe_mod.MoEConfig(num_experts=4, top_k=2, d_model=128,
+                            d_ff_expert=128, precision="fp8",
+                            backend="pallas_interpret")
+    params = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    t = jax.random.normal(jax.random.PRNGKey(2), (32, cfg.d_model),
+                          jnp.float32)
+    return cfg, params, {"x": x, "t": t}
+
+
+def _run_steps(wgrad_precision, steps=3):
+    from repro.optim import adamw
+    cfg, params, batch = _fixture()
+    opt_cfg = OptConfig(lr=1e-2, warmup_steps=0)
+    step = make_train_step(_moe_loss_fn(cfg), opt_cfg,
+                           wgrad_precision=wgrad_precision)
+    opt_state = adamw.init_opt_state(params, opt_cfg)
+    losses = []
+    for _ in range(steps):
+        params, opt_state, metrics = step(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+    return losses
+
+
+def test_make_train_step_wgrad_precision_routes_fp8_wgrad(monkeypatch):
+    """The recipe flag must actually reach the dispatch seam: one train
+    step under wgrad_precision='fp8' routes >=1 wgrad through the fp8
+    operator; the default routes none."""
+    from repro.optim import adamw
+    cfg, params, batch = _fixture()
+    calls = []
+    real = dispatch.grouped_gemm_wgrad_fp8
+    monkeypatch.setattr(dispatch, "grouped_gemm_wgrad_fp8",
+                        lambda *a, **kw: calls.append(1) or real(*a, **kw))
+    opt_cfg = OptConfig(lr=1e-2)
+    opt_state = adamw.init_opt_state(params, opt_cfg)
+    step8 = make_train_step(_moe_loss_fn(cfg), opt_cfg,
+                            wgrad_precision="fp8")
+    step8(params, opt_state, batch)
+    assert calls, "fp8 recipe must route through grouped_gemm_wgrad_fp8"
+    calls.clear()
+    step16 = make_train_step(_moe_loss_fn(cfg), opt_cfg)
+    step16(params, opt_state, batch)
+    assert not calls, "default recipe must stay on the bf16 wgrad"
+
+
+@pytest.mark.slow
+def test_all_fp8_recipe_loss_parity_smoke():
+    """3 steps under the all-fp8 recipe track the bf16-wgrad default:
+    identical first loss (the forward is the same), and later losses
+    within fp8-quantization-level relative deviation."""
+    l16 = _run_steps(None)
+    l8 = _run_steps("fp8")
+    assert l8[0] == l16[0], (l8, l16)       # step-0 forward is untouched
+    for a, b in zip(l8[1:], l16[1:]):
+        assert abs(a - b) / max(abs(b), 1e-6) < 0.1, (l8, l16)
+    # and both recipes actually learn on this toy objective
+    assert l8[-1] < l8[0] and l16[-1] < l16[0], (l8, l16)
+
+
+def test_train_step_kernel_config_plus_wgrad_precision_compose(monkeypatch):
+    """An explicit kernel_config and the recipe flag compose: the folded
+    config drives the step (block shapes from the pin, recipe from the
+    flag)."""
+    from repro.kernels import plan as plan_mod
+    from repro.optim import adamw
+    seen = {}
+    orig = plan_mod.default_config
+
+    def spy(cfg):
+        seen["cfg"] = cfg
+        return orig(cfg)
+
+    monkeypatch.setattr(plan_mod, "default_config", spy)
+    opt_cfg = OptConfig(lr=1e-2)
+    step = make_train_step(
+        lambda p, b: (jnp.sum(p["w"] ** 2), {}), opt_cfg,
+        kernel_config=KernelConfig(block_m=64),
+        wgrad_precision="fp8")
+    params = {"w": jnp.zeros((2, 2))}
+    step(params, adamw.init_opt_state(params, opt_cfg), {})
+    assert seen["cfg"].block_m == 64
+    assert seen["cfg"].wgrad_precision == "fp8"
+
+
+def test_recipe_fold_respects_installed_default():
+    """REGRESSION: selecting the recipe 'from the preset'
+    (wgrad_precision set, kernel_config None) must land on top of the
+    installed/per-device default tile shapes, not silently revert them
+    to the untuned constructor defaults."""
+    from repro.kernels import plan as plan_mod
+    cfg = dataclasses.replace(smoke_config("qwen2-moe-a2.7b"),
+                              wgrad_precision="fp8")
+    with plan_mod.default_config(KernelConfig(block_m=512)):
+        rc = cfg.resolved_kernel_config
+        assert rc.block_m == 512 and rc.wgrad_precision == "fp8"
+    # and make_train_step's fold goes through the same resolution
+    seen = {}
+    orig = plan_mod.default_config
+    try:
+        plan_mod.default_config = lambda c: seen.update(cfg=c) or orig(c)
+        with orig(KernelConfig(block_m=512)):
+            step = make_train_step(lambda p, b: (jnp.sum(p["w"] ** 2), {}),
+                                   OptConfig(lr=1e-2),
+                                   wgrad_precision="fp8")
+            from repro.optim import adamw
+            params = {"w": jnp.zeros((2, 2))}
+            step(params, adamw.init_opt_state(params, OptConfig(lr=1e-2)),
+                 {})
+    finally:
+        plan_mod.default_config = orig
+    assert seen["cfg"].block_m == 512
+    assert seen["cfg"].wgrad_precision == "fp8"
+
+
+def test_audio_family_consumes_resolved_kernel_config(monkeypatch):
+    """REGRESSION: whisper's mlp call sites passed the raw kernel_config,
+    silently dropping a preset ``wgrad_precision`` for the audio family —
+    every family must consume ``resolved_kernel_config``."""
+    from repro.models import whisper as whs
+    cfg = dataclasses.replace(smoke_config("whisper-tiny"),
+                              wgrad_precision="fp8")
+    seen = []
+    real = whs.mlp
+    monkeypatch.setattr(
+        whs, "mlp",
+        lambda p, x, act, **kw: seen.append(kw.get("config")) or
+        real(p, x, act, **kw))
+    model_cfg = cfg
+    params = whs.init_whisper(jax.random.PRNGKey(0), model_cfg)
+    tokens = jnp.zeros((1, 4), jnp.int32)
+    frames = jnp.zeros((1, model_cfg.encoder_seq, model_cfg.d_model),
+                       jnp.bfloat16)
+    whs.whisper_loss(params, {"tokens": tokens, "labels": tokens,
+                              "frames": frames}, model_cfg)
+    assert seen and all(c is not None and c.wgrad_precision == "fp8"
+                        for c in seen), seen
+
+
+def test_wgrad_precision_field_survives_engine_phase_split():
+    """`with_kernel_config` replaces kernel_config only — the preset's
+    wgrad_precision keeps folding into whatever phase config is pinned."""
+    cfg = dataclasses.replace(smoke_config("qwen2-moe-a2.7b"),
+                              precision="fp8",
+                              gemm_backend="pallas_interpret",
+                              wgrad_precision="fp8")
+    cfg2 = dataclasses.replace(cfg, kernel_config=KernelConfig(block_m=16))
+    assert cfg2.resolved_kernel_config.wgrad_precision == "fp8"
+    assert cfg2.resolved_kernel_config.block_m == 16
