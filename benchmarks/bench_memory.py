@@ -35,3 +35,16 @@ def run(report):
             s = float(np.mean(savings)) * 100
             report(f"fig2b/M{m}_G{g}", 0.0,
                    f"mem_saving_pct={s:.1f}")
+
+    # Fused silu·mul→quantize epilogue: the bf16 h intermediate [M, ff]
+    # never exists, so its HBM write AND the quantizer's read-back vanish
+    # (4 bytes/element).  Traffic model per epilogue: unfused = read g+u
+    # (2·M·ff·2) + write h (M·ff·2) + read h (M·ff·2) + write q (M·ff) +
+    # write s (M·ff/128·4); fused drops the two h terms.
+    for m in (8192, 32768):
+        for ff in (1408, 4096):
+            h_bytes = 4 * m * ff
+            unfused = (2 * m * ff * 2) + h_bytes + m * ff + (m * ff // 128) * 4
+            report(f"fig2b_fused/M{m}_ff{ff}", 0.0,
+                   f"h_bytes_saved_mb={h_bytes / 2**20:.1f};"
+                   f"epilogue_traffic_saved_pct={h_bytes / unfused * 100:.1f}")

@@ -10,7 +10,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.moe import MoEConfig, init_moe_params, moe_apply
+from repro.core.moe import MoEConfig, _capacity, init_moe_params, moe_apply
 from benchmarks.common import time_fn
 
 
@@ -56,3 +56,16 @@ def run(report):
                t_ours * 1e6,
                f"paddingfree_vs_gshard_speedup="
                f"{(t_base - t_ours) / t_base * 100:.1f}pct")
+
+    # Fused-epilogue section: under precision="fp8" the routed experts'
+    # AND the shared FFN's silu·mul+quantize run as one (act_quant, fp8)
+    # pass, so the layer never materializes its bf16 h intermediates —
+    # write + read-back (4 bytes/element) saved per FFN per layer.
+    for t in (1024, 4096):
+        cap = _capacity(t * cfg.top_k, 1, cfg.capacity_factor)
+        routed = 4 * cap * cfg.d_ff_expert
+        shared = 4 * t * cfg.d_ff_expert * cfg.num_shared_experts
+        report(f"moe_layer_fused/T{t}_E{cfg.num_experts}", 0.0,
+               f"h_bytes_saved_mb={(routed + shared) / 2**20:.1f};"
+               f"routed_mb={routed / 2**20:.1f};"
+               f"shared_mb={shared / 2**20:.1f}")

@@ -3,15 +3,20 @@
 Prints ``name,us_per_call,derived`` CSV rows.
 
   PYTHONPATH=src python -m benchmarks.run [--only fig2a,...]
-      [--pin-config BMxBNxBK] [--backend NAME]
+      [--pin-config BMxBNxBK] [--backend NAME] [--json PATH]
 
 ``--pin-config`` installs a pinned ``KernelConfig`` as the process-wide
 default (every suite's GEMMs resolve to it); without it, suites that tune
-go through the TilePlan autotuner pool.
+go through the TilePlan autotuner pool.  ``--json`` additionally writes
+the rows as a machine-readable snapshot (the bench-snapshot protocol:
+commit the file as ``BENCH_<date>.json`` so perf regressions diff).
 """
 from __future__ import annotations
 
 import argparse
+import datetime
+import json
+import platform
 
 
 def main() -> None:
@@ -24,6 +29,8 @@ def main() -> None:
     ap.add_argument("--backend", default=None,
                     help="dispatch backend pin (alone it implies the "
                          "default tile shapes)")
+    ap.add_argument("--json", default=None, metavar="PATH",
+                    help="also write rows as a JSON snapshot")
     args = ap.parse_args()
 
     from repro.kernels import plan as plan_mod
@@ -46,12 +53,31 @@ def main() -> None:
     wanted = (args.only.split(",") if args.only else list(suites))
 
     print("name,us_per_call,derived")
+    rows = []
 
     def report(name, us, derived):
         print(f"{name},{us:.1f},{derived}", flush=True)
+        rows.append({"name": name, "us_per_call": round(us, 1),
+                     "derived": derived})
 
     for key in wanted:
         suites[key](report)
+
+    if args.json:
+        from repro.kernels.plan import _device_kind
+        snapshot = {
+            "date": datetime.date.today().isoformat(),
+            "suites": wanted,
+            "device": _device_kind(),
+            "platform": platform.platform(),
+            "pin_config": args.pin_config,
+            "backend": args.backend,
+            "rows": rows,
+        }
+        with open(args.json, "w") as f:
+            json.dump(snapshot, f, indent=2)
+            f.write("\n")
+        print(f"# wrote {len(rows)} rows to {args.json}", flush=True)
 
 
 if __name__ == "__main__":

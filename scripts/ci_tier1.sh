@@ -68,8 +68,10 @@ assert rel < 0.1, f"fp8 wgrad deviates {rel:.3f} from bf16 wgrad"
 print("grad smoke [fp8 wgrad_precision=fp8] OK")
 
 # Quantize-once gate: ONE tilewise quantization of the shared activation
-# buffer serves the MoE gate+up forward, and the backward's fp8 wgrad
-# reuses the residual instead of re-quantizing (down from three).
+# buffer serves the MoE gate+up forward, the down projection's silu·mul+
+# quantize runs as a fused (act_quant, fp8) pass (zero standalone
+# quantizes of h), and the backward's fp8 wgrad reuses the residuals
+# instead of re-quantizing.
 from repro.core import moe as moe_mod
 from repro.core import quantization as qz
 from repro.kernels.plan import KernelConfig
@@ -88,9 +90,11 @@ try:
 finally:
     qz.quantize_tilewise = real
 xs_like = [s for s in calls if s == (cap, cfg.d_model)]
-# (cap, d_model): the shared xs once + the down GEMM's dy once — a second
-# xs quantization anywhere (gate/up forward or any backward) would add one
-assert len(calls) == 5 and len(xs_like) == 2, \
+# 4 = the shared xs once (forward) + one dy per GEMM backward (gate, up,
+# down).  The silu·mul activation h is NEVER tilewise-quantized standalone
+# — the fused epilogue emits q+scales in one pass and the fp8 wgrad reuses
+# them as its residual.  (cap, d_model): the xs once + the down dy once.
+assert len(calls) == 4 and len(xs_like) == 2, \
     f"quantize-once violated: {calls}"
 print("quantize-once count OK")
 EOF
@@ -127,15 +131,54 @@ try:
     batch = synthetic_batch(jax.random.PRNGKey(1), cfg, 16, 2)
     res = engine.generate(batch, key=jax.random.PRNGKey(42))
     assert res.tokens.shape == (2, 6)
-    assert len(builds) == 2, \
-        f"expected one plan build per phase (prefill+decode), saw {builds}"
-    decode_build = builds[-1]
+    # two builds per phase: the routed experts' plan + the shared-expert
+    # FFN's G=1 plan (the shared FFN runs fp8 since the precision bugfix)
+    assert len(builds) == 4, \
+        f"expected two plan builds per phase (routed+shared), saw {builds}"
+    decode_build = builds[2]
     assert int(decode_build[2]) == engine.decode_config.block_m, decode_build
 finally:
     plan_mod.decode_config, plan_mod.make_group_metadata = \
         real_select, real_meta
 print(f"decode smoke OK: decode_config=bm{engine.decode_config.block_m}, "
-      f"plan builds={len(builds)} (one per phase)")
+      f"plan builds={len(builds)} (routed+shared per phase)")
+EOF
+
+# Fused-epilogue gate: the (act_quant, fp8) pass must stay bitwise
+# identical to the jitted unfused composition (activation, then the
+# tilewise quantize kernel), for BOTH activation variants, and the fused
+# grouped linear's value+grad must match the unfused pair exactly.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import numpy as np, jax, jax.numpy as jnp
+from repro.core.grouped_gemm import grouped_linear, grouped_linear_fused
+from repro.kernels.epilogue_kernel import _act_f32, act_quantize_pallas
+from repro.kernels.plan import KernelConfig
+from repro.kernels.quant_kernel import quantize_tilewise_pallas
+
+rng = np.random.default_rng(0)
+g = jnp.asarray(rng.standard_normal((200, 256)), jnp.float32)
+u = jnp.asarray(rng.standard_normal((200, 256)), jnp.float32)
+for act, uu in (("silu_mul", u), ("gelu", None)):
+    q8, s = act_quantize_pallas(g, uu, act=act, interpret=True)
+    h = jax.jit(lambda *a: _act_f32(*a, act))(g, uu)
+    q8c, sc = quantize_tilewise_pallas(h, interpret=True)
+    assert np.array_equal(np.asarray(q8, np.float32),
+                          np.asarray(q8c, np.float32)), act
+    assert np.array_equal(np.asarray(s), np.asarray(sc)), act
+    print(f"fused epilogue bitwise [{act}] OK")
+
+gs = jnp.asarray([60, 0, 130], jnp.int32)
+w = jnp.asarray(rng.standard_normal((3, 256, 128)), jnp.float32)
+cfg = KernelConfig(backend="pallas_interpret", wgrad_precision="fp8")
+lf, gf = jax.value_and_grad(lambda g, u, w: jnp.sum(
+    grouped_linear_fused(g, u, w, gs, config=cfg) ** 2), (0, 1, 2))(g, u, w)
+lu, gu = jax.value_and_grad(lambda g, u, w: jnp.sum(
+    grouped_linear(_act_f32(g, u, "silu_mul"), w, gs, precision="fp8",
+                   config=cfg) ** 2), (0, 1, 2))(g, u, w)
+assert float(lf) == float(lu), (float(lf), float(lu))
+for a, b, name in zip(gf, gu, ("dg", "du", "dw")):
+    assert np.array_equal(np.asarray(a), np.asarray(b)), name
+print("fused grouped linear value+grad parity OK")
 EOF
 
 # Tiny-M decode bench path must not rot either (cost-model selection —

@@ -179,6 +179,87 @@ _grouped_linear_bf16.defvjp(_bf16_fwd, _bf16_bwd)
 
 
 # ---------------------------------------------------------------------------
+# fp8 path with FUSED activation epilogue (gate/up outputs in, no bf16 h)
+# ---------------------------------------------------------------------------
+
+def _act_recompute(g, u, act):
+    """f32 activation as a VJP-able function of (g, u) — the same
+    elementwise definition the fused kernel runs, so the backward's
+    recompute matches the forward's quantization input exactly."""
+    from repro.kernels.epilogue_kernel import _act_f32
+    if u is None:
+        return jax.vjp(lambda gg: _act_f32(gg, None, act), g)
+    return jax.vjp(lambda gg, uu: _act_f32(gg, uu, act), g, u)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5,))
+def _grouped_linear_fp8_fused(g, u, w, group_sizes, plan, ctx):
+    y, _ = _fused_fwd(g, u, w, group_sizes, plan, ctx)
+    return y
+
+
+def _fused_fwd(g, u, w, group_sizes, plan, ctx):
+    config, act = ctx
+    # ONE fused pass: activation + 1x128 quantization, the bf16
+    # intermediate h never exists — the down GEMM consumes the
+    # QuantizedActivation straight from the epilogue kernel
+    qh = q.fused_act_quantize(g, u, act=act, backend=config.backend,
+                              config=config)
+    b8, sb = q.quantize_blockwise_batched(w.astype(jnp.float32),
+                                          backend=config.backend)
+    if plan is None and dispatch.backend_uses_plan(config.backend):
+        plan = make_tile_plan(group_sizes, g.shape[0],
+                              block_m=config.block_m,
+                              num_groups=w.shape[0])
+    y = dispatch.grouped_gemm_fp8(qh.q, qh.scale, b8, sb, group_sizes,
+                                  config=config, plan=plan)
+    # (g, u) are the residuals for dsilu(g)*u / silu(g)*du — under
+    # wgrad_precision="fp8" the quantized h additionally rides along so
+    # the backward performs ZERO standalone quantizes of h
+    h_res = (qh.q, qh.scale) if config.wgrad_precision == "fp8" else None
+    return y, (g, u, h_res, w, group_sizes, plan)
+
+
+def _fused_bwd(ctx, res, dy):
+    config, act = ctx
+    g, u, h_res, w, group_sizes, plan = res
+    num_groups = w.shape[0]
+    # one quantize_tilewise(dy) serves the dgrad AND the fp8 wgrad
+    d8, sd = q.quantize_tilewise(dy.astype(jnp.float32),
+                                 backend=config.backend, config=config)
+    wt = jnp.swapaxes(w, 1, 2)                       # [G, N, K]
+    bt8, sbt = q.quantize_blockwise_batched(wt.astype(jnp.float32),
+                                            backend=config.backend)
+    dh = dispatch.grouped_gemm_fp8(d8, sd, bt8, sbt, group_sizes,
+                                   config=config.with_(out_dtype=jnp.float32),
+                                   plan=plan)
+    # dsilu(g)·u / silu(g)·du from residuals: autodiff of the exact f32
+    # activation the kernel fused (tail rows of dh are zero, so dg/du
+    # keep the defined-zeros tail contract)
+    h_f32, act_vjp = _act_recompute(g, u, act)
+    if u is None:
+        (dg,) = act_vjp(dh)
+        du = None
+    else:
+        dg, du = act_vjp(dh)
+    if config.wgrad_precision == "fp8":
+        h8, sh = h_res
+        dw = dispatch.grouped_gemm_wgrad_fp8(
+            h8, sh, d8, sd, group_sizes, num_groups=num_groups,
+            config=config, out_dtype=jnp.float32, plan=plan)
+    else:
+        # DeepSeek recipe: the wgrad contracts the recomputed h (bf16
+        # operands, f32 accumulation) — recompute beats materializing
+        dw = _wgrad(h_f32, dy, group_sizes, num_groups, config=config,
+                    plan=plan)
+    return (dg.astype(g.dtype), du if du is None else du.astype(u.dtype),
+            dw.astype(w.dtype), None, None)
+
+
+_grouped_linear_fp8_fused.defvjp(_fused_fwd, _fused_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
 
@@ -268,15 +349,81 @@ def grouped_linear(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
 def dense_linear_fp8(x: jax.Array, w: jax.Array, *,
                      backend: str | None = None,
                      out_dtype: Any = None,
-                     config: KernelConfig | None = None) -> jax.Array:
+                     config: KernelConfig | None = None,
+                     plan: TilePlan | None = None,
+                     quantized: "q.QuantizedActivation | None" = None
+                     ) -> jax.Array:
     """The G=1 degenerate case — DeepSeek-style fp8 linear for dense layers
     (optional beyond-paper feature for the dense architectures).
 
     ``out_dtype`` forwards like :func:`grouped_linear`'s (explicit kwarg >
     the ``config``'s pinned ``out_dtype`` > ``x.dtype``) instead of being
-    silently dropped."""
+    silently dropped.  ``plan``/``quantized`` forward too, so several
+    dense GEMMs sharing one input buffer (the MoE shared-expert gate/up
+    pair) amortize one G=1 TilePlan and one quantization."""
     m = x.shape[0]
     gs = jnp.array([m], jnp.int32)
     return grouped_linear(x, w[None], gs, precision="fp8",
                           backend=backend, out_dtype=out_dtype,
-                          config=config)
+                          config=config, plan=plan, quantized=quantized)
+
+
+def grouped_linear_fused(g: jax.Array, u: jax.Array | None,
+                         w: jax.Array, group_sizes: jax.Array, *,
+                         act: str = "silu_mul",
+                         backend: str | None = None,
+                         out_dtype: Any = None,
+                         config: KernelConfig | None = None,
+                         plan: TilePlan | None = None,
+                         wgrad_precision: str | None = None) -> jax.Array:
+    """Fused-epilogue fp8 grouped linear: ``y[rows of group g'] =
+    act(g, u)[rows of g'] @ w[g']`` where ``act(g, u)`` is ``silu(g)*u``
+    (SwiGLU; ``u`` required) or unary ``gelu(g)`` (``u=None``).
+
+    The replacement for the unfused ``h = silu(g)*u;
+    grouped_linear(h, ...)`` pair on the fp8 path: the activation and its
+    1x128 quantization run as ONE ``(act_quant, fp8)`` pass, so the bf16
+    ``h`` intermediate never touches HBM and the down GEMM consumes the
+    :class:`~repro.core.quantization.QuantizedActivation` directly.
+
+    The custom VJP computes ``dsilu(g)·u`` / ``silu(g)·du`` (or gelu')
+    from the ``(g, u)`` residuals; the wgrad follows ``wgrad_precision``
+    exactly like :func:`grouped_linear` — ``"fp8"`` reuses the fused
+    pass's quantized h as the residual (zero standalone quantizes of h),
+    ``"bf16"`` recomputes h in f32 for the highest-precision contraction.
+    ``plan`` semantics match :func:`grouped_linear`: pass the routing
+    decision's TilePlan so the schedule is built once.
+    """
+    from repro.kernels.epilogue_kernel import ACTIVATIONS
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; "
+                         f"expected one of {ACTIVATIONS}")
+    if act == "silu_mul" and u is None:
+        raise ValueError("act='silu_mul' needs both g and u")
+    if act != "silu_mul" and u is not None:
+        raise ValueError(f"act={act!r} is unary; got a second operand")
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype,
+                         wgrad_precision=wgrad_precision)
+    if cfg.out_dtype is None:
+        cfg = cfg.with_(out_dtype=g.dtype)
+    return _grouped_linear_fp8_fused(g, u, w, group_sizes, plan, (cfg, act))
+
+
+def dense_linear_fp8_fused(g: jax.Array, u: jax.Array | None,
+                           w: jax.Array, *, act: str = "silu_mul",
+                           backend: str | None = None,
+                           out_dtype: Any = None,
+                           config: KernelConfig | None = None,
+                           plan: TilePlan | None = None) -> jax.Array:
+    """G=1 fused-epilogue fp8 linear for dense layers (the MLP down
+    projection and the MoE shared-expert FFN).  Accepts arbitrary leading
+    dims on ``g``/``u`` (flattened to rows like ``models.layers.linear``);
+    ``plan`` is the same G=1 TilePlan the sibling gate/up GEMMs consumed.
+    """
+    lead, f = g.shape[:-1], g.shape[-1]
+    g2 = g.reshape(-1, f)
+    u2 = None if u is None else u.reshape(-1, f)
+    gs = jnp.array([g2.shape[0]], jnp.int32)
+    y = grouped_linear_fused(g2, u2, w[None], gs, act=act, backend=backend,
+                             out_dtype=out_dtype, config=config, plan=plan)
+    return y.reshape(*lead, w.shape[-1])

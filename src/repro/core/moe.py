@@ -29,7 +29,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.grouped_gemm import grouped_linear
+from repro.core.grouped_gemm import (dense_linear_fp8, dense_linear_fp8_fused,
+                                     grouped_linear, grouped_linear_fused)
 from repro.core.quantization import quantize_activation
 from repro.kernels import dispatch
 from repro.kernels.plan import KernelConfig, make_tile_plan, resolve_config
@@ -226,8 +227,18 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
                                  config=kcfg, plan=tile_plan)
         g = glin(xs, params["w_gate"], gs, quantized=qx)    # [cap, f_loc]
         u = glin(xs, params["w_up"], gs, quantized=qx)
-        h = jax.nn.silu(g) * u                              # bf16 act (I5)
-        y = glin(h, params["w_down"], gs)                   # [cap, d]
+        if cfg.precision == "fp8":
+            # fused epilogue: silu(g)*u + 1x128 quantization in one
+            # (act_quant, fp8) pass — the bf16 h intermediate never
+            # touches HBM and the down GEMM consumes the
+            # QuantizedActivation directly (zero standalone quantizes
+            # of h, forward and backward)
+            y = grouped_linear_fused(g, u, params["w_down"], gs,
+                                     act="silu_mul", config=kcfg,
+                                     plan=tile_plan)         # [cap, d]
+        else:
+            h = jax.nn.silu(g) * u                          # bf16 act (I5)
+            y = glin(h, params["w_down"], gs)               # [cap, d]
 
     # ---- combine (rows beyond `total` are defined zeros on the kernel
     # path, but hard-masking stays: it is cheap, explicit, and covers the
@@ -241,10 +252,31 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
 
     # ---- shared experts (TP over the axis in both modes) ---------------
     if cfg.num_shared_experts:
-        sg = x @ params["shared_gate"]
-        su = x @ params["shared_up"]
-        sh = jax.nn.silu(sg) * su                           # bf16 act (I5)
-        out = out + (sh @ params["shared_down"]).astype(jnp.float32)
+        fs = params["shared_gate"].shape[1]
+        if cfg.precision == "fp8" and d % 128 == 0 and fs % 128 == 0:
+            # BUGFIX: this FFN used to run bf16 ``@`` regardless of
+            # cfg.precision — the shared experts now follow the layer's
+            # precision through dense_linear_fp8 and finish with the same
+            # fused silu·mul->quantize epilogue as the routed experts.
+            # Plan-once + quantize-once, like the routed path: ONE G=1
+            # TilePlan and ONE quantization of x serve all three GEMMs.
+            splan = None
+            if dispatch.backend_uses_plan(kcfg.backend):
+                splan = make_tile_plan(jnp.array([t], jnp.int32), t,
+                                       block_m=kcfg.block_m, num_groups=1)
+            qs = quantize_activation(x, backend=kcfg.backend, config=kcfg)
+            sg = dense_linear_fp8(x, params["shared_gate"], config=kcfg,
+                                  plan=splan, quantized=qs)
+            su = dense_linear_fp8(x, params["shared_up"], config=kcfg,
+                                  plan=splan, quantized=qs)
+            out = out + dense_linear_fp8_fused(
+                sg, su, params["shared_down"], act="silu_mul", config=kcfg,
+                out_dtype=jnp.float32, plan=splan)
+        else:
+            sg = x @ params["shared_gate"]
+            su = x @ params["shared_up"]
+            sh = jax.nn.silu(sg) * su                       # bf16 act (I5)
+            out = out + (sh @ params["shared_down"]).astype(jnp.float32)
 
     if axis_name is not None:
         out = jax.lax.psum(out.astype(cfg.reduce_dtype), axis_name) \

@@ -67,6 +67,28 @@ def quantize_activation(x, *, backend=None, config=None) -> QuantizedActivation:
     return QuantizedActivation(q8, s)
 
 
+def fused_act_quantize(g, u=None, *, act="silu_mul", backend=None,
+                       config=None) -> QuantizedActivation:
+    """Fused producer: activation + ONE tilewise quantization, no bf16
+    intermediate.
+
+    Routes ``silu(g)*u`` (or unary ``gelu(g)``) through the
+    ``(act_quant, fp8)`` operator and wraps the result as a
+    :class:`QuantizedActivation` — the same record
+    :func:`quantize_activation` builds, minus the HBM round-trip of the
+    activation buffer.  Inputs are ``stop_gradient``-ed: gradients reach
+    ``g``/``u`` through the fused ``grouped_linear`` VJP's activation
+    recompute, not through the quantization graph.  ``config`` routes an
+    autotuned tile height (``op="act_quant"``); the record is
+    tile-height independent.
+    """
+    gq = jax.lax.stop_gradient(g).astype(jnp.float32)
+    uq = None if u is None else jax.lax.stop_gradient(u).astype(jnp.float32)
+    q8, s = kops.act_quantize(gq, uq, act=act, backend=backend,
+                              config=config)
+    return QuantizedActivation(q8, s)
+
+
 @jax.custom_vjp
 def quantize_dequantize_tilewise(x):
     """fake-quant (quant->dequant) with straight-through gradient; used to

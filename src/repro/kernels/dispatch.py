@@ -21,6 +21,9 @@ precision)`` —
                               (arXiv 2505.20524's all-fp8 step)
   ``quantize``   ``fp8``      1x128 per-tile fp8 activation quantization
                               (the producer of the gemm family's operands)
+  ``act_quant``  ``fp8``      fused activation -> 1x128 fp8 quantization
+                              (``silu(g)*u`` / ``gelu(g)`` epilogue; the
+                              bf16 intermediate never touches HBM)
   =============  ===========  ==============================================
 
 Backend *names* are family-neutral and shared across the table: one
@@ -80,6 +83,7 @@ from repro.kernels import ref as _ref
 from repro.kernels.grouped_gemm_kernel import QUANT_BLOCK, gmm_pallas
 from repro.kernels.plan import (KernelConfig, TilePlan,  # noqa: F401
                                 make_tile_plan, resolve_config)
+from repro.kernels.epilogue_kernel import act_quantize_pallas
 from repro.kernels.quant_kernel import quantize_tilewise_pallas
 from repro.kernels.wgrad_kernel import gmm_pallas_wgrad, gmm_pallas_wgrad_fp8
 
@@ -93,7 +97,7 @@ _ALIASES = {"xla": "xla_ragged"}
 # not the name, selects the arithmetic
 _FP8_SUFFIX = "_fp8"
 
-FAMILIES = ("gemm", "wgrad", "quantize")
+FAMILIES = ("gemm", "wgrad", "quantize", "act_quant")
 PRECISIONS = ("bf16", "fp8")
 
 
@@ -102,7 +106,7 @@ class OpKey:
     """One operator of the registry: an operation family at an operand
     precision.  Hashable; accepted anywhere as a plain ``(family,
     precision)`` tuple."""
-    family: str      # "gemm" | "wgrad" | "quantize"
+    family: str      # "gemm" | "wgrad" | "quantize" | "act_quant"
     precision: str   # "bf16" | "fp8"
 
     def __post_init__(self):
@@ -465,7 +469,8 @@ def _plan_tile_frozenset(uses_plan: bool) -> "frozenset[str]":
     for key, table in _OPERATORS.items():
         for name, spec in table.items():
             if (spec.uses_plan if uses_plan
-                    else (not spec.uses_tiles and key.family != "quantize")):
+                    else (not spec.uses_tiles
+                          and key.family not in ("quantize", "act_quant"))):
                 names.add(_display(key, name))
     return frozenset(names)
 
@@ -826,6 +831,58 @@ register_operator(
     run=_run_quant_ref)
 
 
+# ---- (act_quant, fp8): the fused activation epilogue ----------------------
+
+def _run_act_quant_pallas(g, u=None, *, act, config, interpret, **_):
+    kw = {} if config is None else {"block_m": config.block_m}
+    return act_quantize_pallas(g, u, act=act, interpret=interpret, **kw)
+
+
+def _run_act_quant_ref(g, u=None, *, act, **_):
+    return _ref.act_quantize_ref(g, u, act)
+
+
+register_operator(
+    ("act_quant", "fp8"), "pallas",
+    description="fused Pallas epilogue: silu(g)*u / gelu(g) + 1x128 fp8 "
+                "quantization in one grid pass (tile height autotunable "
+                "via op='act_quant')",
+    available=_avail_tpu,
+    run=lambda *a, **kw: _run_act_quant_pallas(*a, interpret=False, **kw),
+    uses_tiles=True)
+register_operator(
+    ("act_quant", "fp8"), "pallas_interpret",
+    description="fused epilogue kernel in interpret mode — CPU-verifiable, "
+                "bit-identical to 'pallas'",
+    available=_avail_always,
+    run=lambda *a, **kw: _run_act_quant_pallas(*a, interpret=True, **kw),
+    uses_tiles=True)
+register_operator(
+    ("act_quant", "fp8"), "xla_ragged",
+    description="unfused XLA reference: activation then tilewise quantize "
+                "(tile shapes are a no-op)",
+    available=_avail_ragged_dot,
+    run=_run_act_quant_ref)
+register_operator(
+    ("act_quant", "fp8"), "xla_exact",
+    description="unfused XLA reference: activation then tilewise quantize "
+                "(tile shapes are a no-op)",
+    available=_avail_ragged_dot,
+    run=_run_act_quant_ref)
+register_operator(
+    ("act_quant", "fp8"), "padded_baseline",
+    description="unfused XLA reference (the baseline has no fused "
+                "epilogue either)",
+    available=_avail_always,
+    run=_run_act_quant_ref)
+register_operator(
+    ("act_quant", "fp8"), "ref",
+    description="unfused silu·mul/gelu + quantize_tilewise reference — "
+                "always available",
+    available=_avail_always,
+    run=_run_act_quant_ref)
+
+
 # back-compat membership views (derived from the registry flags; prefer
 # op_uses_plan / op_ignores_tiles)
 PLAN_BACKENDS = _plan_tile_frozenset(uses_plan=True)
@@ -995,6 +1052,36 @@ def quantize_tilewise(x, *, backend: Optional[str] = None,
             raise
         return _ref.quantize_tilewise_ref(x)
     return _OPERATORS[key][name].run(x, config=config)
+
+
+def act_quantize(g, u=None, *, act: str = "silu_mul",
+                 backend: Optional[str] = None,
+                 config: Optional[KernelConfig] = None):
+    """Fused activation -> 1x128 fp8 quantization through the
+    ``(act_quant, fp8)`` operator.
+
+    ``act="silu_mul"`` computes ``silu(g) * u`` (the SwiGLU expert
+    epilogue; ``u`` required); ``act="gelu"`` is unary (``u`` must be
+    None).  Returns ``(q[M, K] fp8e4m3, s[M, K/128] f32)`` — the exact
+    :func:`quantize_tilewise` output contract applied to the activation,
+    so every existing GEMM consumer accepts it unchanged.
+
+    ``config`` routes an autotuned tile height (``op="act_quant"``) into
+    the kernel's ``block_m``; the output is tile-height-independent.
+    Same fallback semantics as :func:`quantize_tilewise`: auto-resolution
+    failures fall back to the unfused reference (activation then
+    ``quantize_tilewise_ref``), an explicitly requested unavailable
+    backend raises.
+    """
+    explicit = backend not in (None, "auto")
+    key = OpKey("act_quant", "fp8")
+    try:
+        name = resolve(key, backend)
+    except BackendUnavailableError:
+        if explicit:
+            raise
+        return _ref.act_quantize_ref(g, u, act)
+    return _OPERATORS[key][name].run(g, u, act=act, config=config)
 
 
 def quantize_blockwise(w, *, backend: Optional[str] = None):

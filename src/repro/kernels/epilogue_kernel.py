@@ -1,0 +1,99 @@
+"""Pallas TPU kernel: fused activation -> 1x128 per-tile fp8 quantization.
+
+The fp8 MoE hot path used to materialize ``h = silu(g) * u`` in bf16, write
+it to HBM, and read it straight back through ``quant_kernel`` — three HBM
+passes over a tensor that exists only to feed the down GEMM.  This kernel
+fuses the epilogue: one grid pass reads the gate/up GEMM outputs, computes
+the activation per tile in f32, and emits the fp8 payload plus 1x128 scales
+directly.  The intermediate never touches HBM.
+
+The scale layout is byte-identical to ``quant_kernel``'s (``[M, K/128]``
+f32, orientation-agnostic, travelling on the same global M-tiles as the
+payload), so every existing consumer — forward GEMM x-side, dgrad dy-side,
+both fp8 wgrad operands — accepts the fused output unchanged.
+
+Supported activations:
+  - ``silu_mul``: ``silu(g) * u`` (the SwiGLU expert FFN epilogue)
+  - ``gelu``: unary ``gelu(g)`` (whisper's MLP; ``u`` must be None)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.quant_kernel import FP8_MAX, QUANT_BLOCK
+
+ACTIVATIONS = ("silu_mul", "gelu")
+
+
+def _act_f32(g, u, act):
+    """The activation in f32 — the single definition shared by the kernel,
+    the ref oracle, and the backward's recompute (bitwise agreement)."""
+    gf = g.astype(jnp.float32)
+    if act == "silu_mul":
+        return jax.nn.silu(gf) * u.astype(jnp.float32)
+    if act == "gelu":
+        return jax.nn.gelu(gf)
+    raise ValueError(f"unknown activation {act!r}; expected {ACTIVATIONS}")
+
+
+def _epilogue_kernel(*refs, kb, act):
+    if act == "silu_mul":
+        g_ref, u_ref, q_ref, s_ref = refs
+        h = _act_f32(g_ref[...], u_ref[...], act)
+    else:
+        g_ref, q_ref, s_ref = refs
+        h = _act_f32(g_ref[...], None, act)
+    bm, k = h.shape
+    tiles = h.reshape(bm, kb, QUANT_BLOCK)
+    amax = jnp.max(jnp.abs(tiles), axis=-1)                  # (bm, kb)
+    scale = jnp.where(amax > 0, amax / FP8_MAX, 1.0)
+    q = tiles / scale[..., None]
+    q_ref[...] = q.reshape(bm, k).astype(q_ref.dtype)
+    s_ref[...] = scale.astype(jnp.float32)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("act", "block_m", "interpret"))
+def act_quantize_pallas(g: jax.Array, u: jax.Array | None = None, *,
+                        act: str = "silu_mul", block_m: int = 256,
+                        interpret: bool = False):
+    """g (and u for silu_mul): [M, K] f32/bf16, K % 128 == 0.
+
+    Returns ``(q[M, K] fp8e4m3, s[M, K/128] f32)`` — the same contract as
+    ``quantize_tilewise_pallas`` applied to the activation output.
+    """
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; expected {ACTIVATIONS}")
+    if act == "silu_mul":
+        if u is None:
+            raise ValueError("act='silu_mul' needs both g and u")
+        if u.shape != g.shape:
+            raise ValueError(f"g {g.shape} and u {u.shape} must match")
+    elif u is not None:
+        raise ValueError(f"act={act!r} is unary; got a second operand")
+    m, k = g.shape
+    if k % QUANT_BLOCK != 0:
+        raise ValueError(f"K={k} must be a multiple of {QUANT_BLOCK}")
+    kb = k // QUANT_BLOCK
+    block_m = min(block_m, max(8, m))
+    grid = ((m + block_m - 1) // block_m,)
+    operands = (g,) if u is None else (g, u)
+    return pl.pallas_call(
+        functools.partial(_epilogue_kernel, kb=kb, act=act),
+        grid=grid,
+        in_specs=[pl.BlockSpec((block_m, k), lambda i: (i, 0))
+                  for _ in operands],
+        out_specs=[
+            pl.BlockSpec((block_m, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_m, kb), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, k), jnp.float8_e4m3fn),
+            jax.ShapeDtypeStruct((m, kb), jnp.float32),
+        ],
+        interpret=interpret,
+    )(*operands)

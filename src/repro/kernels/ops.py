@@ -14,6 +14,7 @@ from repro.kernels.dispatch import (        # noqa: F401  (re-exports)
     KernelConfig,
     OpKey,
     TilePlan,
+    act_quantize,
     availability,
     backend_ignores_tiles,
     backend_matrix,

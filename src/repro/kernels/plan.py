@@ -589,6 +589,22 @@ def estimate_cost_s_quantize(m: int, k: int, config: KernelConfig,
     return bytes_moved / spec.hbm_bw + tiles * 1e-6
 
 
+def estimate_cost_s_act_quant(m: int, k: int, config: KernelConfig,
+                              spec: Optional[DeviceSpec] = None) -> float:
+    """Roofline estimate of one fused activation->quantize epilogue pass
+    (``op="act_quant"``): reads the gate AND up GEMM outputs (bf16),
+    writes fp8 payload + f32 scale rows — ~3x fewer HBM bytes for the
+    intermediate than the unfused write-h/read-h/write-q sequence.  Same
+    model split as :func:`estimate_cost_s_quantize`: traffic is
+    tile-height-independent, the grid term ranks taller tiles first,
+    measurement arbitrates."""
+    spec = spec or device_spec()
+    tiles = -(-m // config.block_m)
+    kb = -(-k // QUANT_BLOCK)
+    bytes_moved = 2 * m * k * 2 + m * k * 1 + m * kb * 4
+    return bytes_moved / spec.hbm_bw + tiles * 1e-6
+
+
 # ---------------------------------------------------------------------------
 # Persistent autotune cache
 # ---------------------------------------------------------------------------
@@ -671,6 +687,7 @@ _AUTOTUNE_OPS = {
     "wgrad": ("wgrad", "bf16"),
     "wgrad_fp8": ("wgrad", "fp8"),
     "quantize": ("quantize", "fp8"),
+    "act_quant": ("act_quant", "fp8"),
 }
 
 
@@ -680,8 +697,8 @@ def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
     """Median wall seconds of one operator application under ``config`` on
     random operands (the live-backend measurement behind pool selection):
     grouped GEMM (``"gemm"``/``"decode"``), ragged wgrad contraction
-    (``"wgrad"``/``"wgrad_fp8"``), or tilewise quantization
-    (``"quantize"``)."""
+    (``"wgrad"``/``"wgrad_fp8"``), tilewise quantization (``"quantize"``),
+    or the fused activation->quantize epilogue (``"act_quant"``)."""
     import numpy as np
     from repro.kernels import dispatch, ref
 
@@ -714,6 +731,13 @@ def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
         def run():
             return dispatch.quantize_tilewise(x, backend=config.backend,
                                               config=config)
+    elif op == "act_quant":
+        ga = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        ua = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+
+        def run():
+            return dispatch.act_quantize(ga, ua, backend=config.backend,
+                                         config=config)
     else:
         a8, sa = ref.quantize_tilewise_ref(
             jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
@@ -752,10 +776,11 @@ def autotune(m: int, k: int, n: int, g: int, *,
     to the decode-specialized pool (tiny constant M per serving step;
     block_m<=16), ``"wgrad"`` the ragged-contraction orientation
     (``dw[g] = x_g^T @ dy_g``), ``"wgrad_fp8"`` that contraction on fp8
-    operands + 1x128 tile scales, and ``"quantize"`` the tilewise
-    quantizer's tile height (K-only legality; N and G are ignored — pass
-    0).  Each ranks by its own roofline terms and caches under distinct
-    keys: a routing decision tunes once per operator it uses.
+    operands + 1x128 tile scales, ``"quantize"`` the tilewise quantizer's
+    tile height, and ``"act_quant"`` the fused activation->quantize
+    epilogue's tile height (both K-only legality; N and G are ignored —
+    pass 0).  Each ranks by its own roofline terms and caches under
+    distinct keys: a routing decision tunes once per operator it uses.
 
     Pool candidates are ranked by the roofline cost model, the top
     ``max_candidates`` are measured on the live backend (skipped with
@@ -795,9 +820,9 @@ def autotune(m: int, k: int, n: int, g: int, *,
     # output tile at all (its block_m is pure scheduling)
     cands = candidate_pool(k, n, pool,
                            require_transposable=(op in ("gemm", "decode")))
-    if op == "quantize":
+    if op in ("quantize", "act_quant"):
         # entries differing only in (block_n, block_k) are duplicates for
-        # the quantizer — keep one per tile height
+        # the quantizer/epilogue — keep one per tile height
         seen, uniq = set(), []
         for c in cands:
             if c.block_m not in seen:
@@ -812,6 +837,9 @@ def autotune(m: int, k: int, n: int, g: int, *,
     elif op == "quantize":
         cost = lambda m_, k_, n_, g_, c, s: \
             estimate_cost_s_quantize(m_, k_, c, s)                # noqa: E731
+    elif op == "act_quant":
+        cost = lambda m_, k_, n_, g_, c, s: \
+            estimate_cost_s_act_quant(m_, k_, c, s)               # noqa: E731
     else:
         prec = "fp8" if op == "wgrad_fp8" else "bf16"
         cost = lambda *a: estimate_cost_s_wgrad(*a, precision=prec)  # noqa: E731

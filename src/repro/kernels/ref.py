@@ -40,6 +40,19 @@ def quantize_tilewise_ref(a: jax.Array, block: int = QUANT_BLOCK):
     return q.astype(jnp.float8_e4m3fn), scale.astype(jnp.float32)
 
 
+def act_quantize_ref(g: jax.Array, u: jax.Array | None = None,
+                     act: str = "silu_mul", block: int = QUANT_BLOCK):
+    """Unfused oracle for the fused activation->quantize epilogue.
+
+    Computes the activation in f32 (``silu(g) * u`` or unary ``gelu(g)``)
+    and feeds it through :func:`quantize_tilewise_ref`.  The fused Pallas
+    kernel performs the identical elementwise f32 ops, so interpret-mode
+    comparisons against this oracle can demand bitwise equality.
+    """
+    from repro.kernels.epilogue_kernel import _act_f32
+    return quantize_tilewise_ref(_act_f32(g, u, act), block)
+
+
 def quantize_blockwise_ref(b: jax.Array, block: int = QUANT_BLOCK):
     """`block` x `block` per-block symmetric fp8 quantization of a 2-D weight.
 

@@ -11,7 +11,7 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.grouped_gemm import dense_linear_fp8
+from repro.core.grouped_gemm import dense_linear_fp8, dense_linear_fp8_fused
 from repro.distributed.context import constrain
 
 
@@ -83,11 +83,24 @@ def mlp(p, x, act: str = "swiglu", *, precision="bf16", backend=None,
     # — MaxText practice; the f32 upcast doubled MLP elementwise traffic
     up = linear(x, p["w_up"], precision=precision, backend=backend,
                 config=config)
+    f, d_out = p["w_down"].shape
+    fused = (precision == "fp8" and f % 128 == 0 and d_out % 128 == 0)
     if act == "swiglu":
         gate = linear(x, p["w_gate"], precision=precision, backend=backend,
                       config=config)
+        if fused:
+            # fused (act_quant, fp8) epilogue: h never materializes, the
+            # down GEMM consumes fp8 values + 1x128 scales directly
+            y = dense_linear_fp8_fused(gate, up, p["w_down"],
+                                       act="silu_mul", backend=backend,
+                                       config=config)
+            return y.astype(x.dtype)
         h = jax.nn.silu(gate) * up
     else:  # gelu
+        if fused:
+            y = dense_linear_fp8_fused(up, None, p["w_down"], act="gelu",
+                                       backend=backend, config=config)
+            return y.astype(x.dtype)
         h = jax.nn.gelu(up)
     h = constrain(h, "batch", "seq", "mlp")
     return linear(h, p["w_down"], precision=precision, backend=backend,

@@ -55,9 +55,11 @@ def test_decode_config_resolved_once_per_engine(moe_model, monkeypatch,
 
 def test_generate_builds_one_plan_per_phase(moe_model, monkeypatch,
                                             tmp_path):
-    """prefill + >=4 decode steps = exactly TWO metadata builds: one for
-    the prefill trace, one for the decode loop's scanned body (every
-    decode step replays it)."""
+    """prefill + >=4 decode steps = exactly FOUR metadata builds: per
+    phase trace, one for the routed experts and one for the shared-expert
+    FFN's G=1 plan (the shared experts run fp8 since the precision
+    bugfix, with their own plan-once group structure); the decode loop's
+    scanned body replays its pair on every step without rebuilding."""
     model, params = moe_model
     monkeypatch.setenv("REPRO_TILEPLAN_CACHE", str(tmp_path / "c.json"))
     engine = Engine(model, params, max_new_tokens=6, decode_batch_size=2)
@@ -68,10 +70,14 @@ def test_generate_builds_one_plan_per_phase(moe_model, monkeypatch,
     batch = synthetic_batch(jax.random.PRNGKey(1), model.cfg, 16, 2)
     res = engine.generate(batch, key=jax.random.PRNGKey(42))
     assert res.tokens.shape == (2, 6)            # 1 prefill + 5 decode
-    assert len(builds) == 2, \
-        f"one plan build per phase, saw {len(builds)}"
-    # the decode phase's build runs under the decode-specialized tiling
-    assert int(builds[-1][2]) == engine.decode_config.block_m
+    assert len(builds) == 4, \
+        f"two plan builds per phase (routed + shared), saw {len(builds)}"
+    # per phase: one routed build (G=num_experts) + one shared G=1 build
+    assert [b[3] for b in builds] == [model.cfg.moe.num_experts, 1,
+                                      model.cfg.moe.num_experts, 1]
+    # the decode phase's routed build runs under the decode-specialized
+    # tiling
+    assert int(builds[2][2]) == engine.decode_config.block_m
 
 
 def test_explicit_decode_config_skips_selection(moe_model, monkeypatch):

@@ -1,0 +1,365 @@
+"""Fused activation->quantize epilogue: the ``(act_quant, fp8)`` family.
+
+The tentpole seam of the fused-epilogue PR: ``silu(g)*u`` (or ``gelu(g)``)
+and its 1x128 fp8 quantization run as ONE kernel pass, so the bf16 ``h``
+intermediate never exists as a standalone array on the fp8 hot path.
+Covers the kernel vs its oracles, the registry family's resolution
+semantics, the :class:`QuantizedActivation` producer, the fused
+grouped-linear custom VJP (value and grad parity vs the unfused pair in
+both wgrad precisions), the whisper gelu variant, the shared-expert
+precision bugfix, and the ``op="act_quant"`` autotune family.
+"""
+import dataclasses
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import moe as moe_mod
+from repro.core import quantization as qz
+from repro.core.grouped_gemm import (dense_linear_fp8, dense_linear_fp8_fused,
+                                     grouped_linear, grouped_linear_fused)
+from repro.core.moe import MoEConfig, init_moe_params, moe_apply
+from repro.kernels import dispatch, ref
+from repro.kernels import plan as plan_mod
+from repro.kernels.epilogue_kernel import (ACTIVATIONS, _act_f32,
+                                           act_quantize_pallas)
+from repro.kernels.plan import KernelConfig, make_tile_plan
+from repro.kernels.quant_kernel import quantize_tilewise_pallas
+
+
+def _operands(m, k, act, seed=0):
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    u = (jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+         if act == "silu_mul" else None)
+    return g, u
+
+
+# ---------------------------------------------------------------------------
+# Kernel vs oracles
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+@pytest.mark.parametrize("m,k", [(64, 128), (200, 256), (7, 128)])
+def test_fused_kernel_bitwise_vs_jitted_composition(act, m, k):
+    """The fused pass is bitwise identical (payload AND scales) to the
+    jitted unfused composition: activation, then the existing tilewise
+    quantize kernel.  Ragged/odd M exercises the tail program."""
+    g, u = _operands(m, k, act, seed=m + k)
+    q8, s = act_quantize_pallas(g, u, act=act, interpret=True)
+    h = jax.jit(lambda *a: _act_f32(*a, act))(g, u)
+    q8_c, s_c = quantize_tilewise_pallas(h, interpret=True)
+    np.testing.assert_array_equal(np.asarray(q8, jnp.float32),
+                                  np.asarray(q8_c, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(s), np.asarray(s_c))
+    assert q8.dtype == jnp.float8_e4m3fn and s.shape == (m, k // 128)
+
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_fused_kernel_matches_ref(act):
+    """vs the eager reference: payload bitwise, scales allclose (the
+    jitted ``amax/448`` division can differ from eager by one f32 ulp —
+    the same property the standalone quantize kernel has vs its ref)."""
+    g, u = _operands(96, 256, act, seed=3)
+    q8, s = act_quantize_pallas(g, u, act=act, interpret=True)
+    qr, sr = ref.act_quantize_ref(g, u, act)
+    np.testing.assert_array_equal(np.asarray(q8, jnp.float32),
+                                  np.asarray(qr, jnp.float32))
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr), rtol=1e-6)
+
+
+def test_fused_kernel_validates_operands():
+    g, u = _operands(16, 128, "silu_mul")
+    with pytest.raises(ValueError):
+        act_quantize_pallas(g, None, act="silu_mul", interpret=True)
+    with pytest.raises(ValueError):
+        act_quantize_pallas(g, u, act="gelu", interpret=True)
+    with pytest.raises(ValueError):
+        act_quantize_pallas(g, u, act="tanh_mul", interpret=True)
+    with pytest.raises(ValueError):
+        act_quantize_pallas(g[:, :100], u[:, :100], interpret=True)
+
+
+# ---------------------------------------------------------------------------
+# Registry family
+# ---------------------------------------------------------------------------
+
+def test_act_quant_family_registered():
+    key = dispatch.OpKey("act_quant", "fp8")
+    assert key in dispatch._OPERATORS
+    names = set(dispatch._OPERATORS[key])
+    assert {"pallas", "pallas_interpret", "xla_ragged", "xla_exact",
+            "padded_baseline", "ref"} <= names
+    row = dispatch.backend_matrix(key)
+    assert row, "backend_matrix must report the act_quant family"
+
+
+def test_act_quantize_dispatch_and_fallback_semantics(monkeypatch):
+    """Auto-resolution failure serves the unfused reference (a fused
+    epilogue is an optimization, never a refusal); an explicitly
+    requested unavailable backend still raises."""
+    g, u = _operands(8, 128, "silu_mul")
+    q8, s = dispatch.act_quantize(g, u, backend="pallas_interpret")
+    qr, sr = ref.act_quantize_ref(g, u, "silu_mul")
+    np.testing.assert_array_equal(np.asarray(q8, jnp.float32),
+                                  np.asarray(qr, jnp.float32))
+    from repro import compat
+    monkeypatch.setattr(compat, "has_tpu", lambda: False)
+    with pytest.raises(dispatch.BackendUnavailableError):
+        dispatch.act_quantize(g, u, backend="pallas")
+    dispatch.set_default_backend("pallas")      # unavailable here
+    try:
+        dispatch.act_quantize(g, u)             # must not raise
+    finally:
+        dispatch.set_default_backend(None)
+
+
+def test_fused_act_quantize_is_a_quantized_activation():
+    """core producer == quantize_activation of the materialized h (same
+    jitted-composition contract the kernel is pinned to)."""
+    g, u = _operands(64, 128, "silu_mul", seed=11)
+    qa = qz.fused_act_quantize(g, u, backend="pallas_interpret")
+    assert isinstance(qa, qz.QuantizedActivation)
+    h = jax.jit(lambda a, b: _act_f32(a, b, "silu_mul"))(g, u)
+    want = qz.quantize_activation(h, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(qa.q, jnp.float32),
+                                  np.asarray(want.q, jnp.float32))
+    np.testing.assert_array_equal(np.asarray(qa.scale),
+                                  np.asarray(want.scale))
+
+
+# ---------------------------------------------------------------------------
+# Fused grouped linear: value + grad parity, zero standalone h quantizes
+# ---------------------------------------------------------------------------
+
+def _fused_vs_unfused(wgrad_precision):
+    sizes, m_buf, k, n = [60, 0, 130], 256, 128, 128
+    rng = np.random.default_rng(17)
+    g = jnp.asarray(rng.standard_normal((m_buf, k)), jnp.float32)
+    u = jnp.asarray(rng.standard_normal((m_buf, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((len(sizes), k, n)), jnp.float32)
+    gs = jnp.asarray(sizes, jnp.int32)
+    cfg = KernelConfig(backend="pallas_interpret",
+                       wgrad_precision=wgrad_precision)
+
+    def fused(g, u, w):
+        y = grouped_linear_fused(g, u, w, gs, config=cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2), y
+
+    def unfused(g, u, w):
+        h = _act_f32(g, u, "silu_mul")
+        y = grouped_linear(h, w, gs, precision="fp8", config=cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2), y
+
+    (lf, yf), gradf = jax.value_and_grad(fused, (0, 1, 2),
+                                         has_aux=True)(g, u, w)
+    (lu, yu), gradu = jax.value_and_grad(unfused, (0, 1, 2),
+                                         has_aux=True)(g, u, w)
+    return (lf, yf, gradf), (lu, yu, gradu)
+
+
+@pytest.mark.parametrize("wgrad_precision", ["bf16", "fp8"])
+def test_grouped_linear_fused_matches_unfused(wgrad_precision):
+    """Values AND jax.grad of the fused path match the unfused
+    ``h = silu(g)*u; grouped_linear(h)`` pair in both wgrad modes."""
+    (lf, yf, gradf), (lu, yu, gradu) = _fused_vs_unfused(wgrad_precision)
+    np.testing.assert_array_equal(np.asarray(yf, jnp.float32),
+                                  np.asarray(yu, jnp.float32))
+    assert float(lf) == float(lu)
+    for df, du_, name in zip(gradf, gradu, ("dg", "du", "dw")):
+        np.testing.assert_array_equal(np.asarray(df, jnp.float32),
+                                      np.asarray(du_, jnp.float32),
+                                      err_msg=name)
+
+
+def test_grouped_linear_fused_tail_rows_zero():
+    sizes, m_buf = [40, 24], 128
+    g, u = _operands(m_buf, 128, "silu_mul", seed=5)
+    w = jnp.asarray(np.random.default_rng(6).standard_normal((2, 128, 128)),
+                    jnp.float32)
+    y = grouped_linear_fused(g, u, w, jnp.asarray(sizes, jnp.int32),
+                             backend="pallas_interpret")
+    assert not np.any(np.asarray(y[sum(sizes):], jnp.float32))
+    assert np.any(np.asarray(y[:sum(sizes)], jnp.float32))
+
+
+def test_grouped_linear_fused_never_quantizes_h_standalone(monkeypatch):
+    """The whole point of the seam: forward+backward of the fused path
+    performs ZERO standalone ``quantize_tilewise`` calls on h — the only
+    tilewise quantize is the backward's dy (wgrad_precision='fp8' reuses
+    the fused pass's q/scales as the wgrad residual)."""
+    calls = []
+    inner = qz.quantize_tilewise
+
+    def counting(x, **kw):
+        calls.append(x.shape)
+        return inner(x, **kw)
+
+    monkeypatch.setattr(qz, "quantize_tilewise", counting)
+    g, u = _operands(64, 128, "silu_mul", seed=9)
+    w = jnp.asarray(np.random.default_rng(9).standard_normal((2, 128, 256)),
+                    jnp.float32)
+    gs = jnp.asarray([30, 34], jnp.int32)
+    cfg = KernelConfig(backend="pallas_interpret", wgrad_precision="fp8")
+
+    def loss(g, u, w):
+        y = grouped_linear_fused(g, u, w, gs, config=cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    jax.grad(loss, (0, 1, 2))(g, u, w)
+    assert calls == [(64, 256)], \
+        f"expected exactly one quantize (dy), saw {calls}"
+
+
+def test_grouped_linear_fused_validates_activation():
+    g, u = _operands(16, 128, "silu_mul")
+    w = jnp.zeros((1, 128, 128))
+    gs = jnp.asarray([16], jnp.int32)
+    with pytest.raises(ValueError):
+        grouped_linear_fused(g, None, w, gs, backend="pallas_interpret")
+    with pytest.raises(ValueError):
+        grouped_linear_fused(g, u, w, gs, act="gelu",
+                             backend="pallas_interpret")
+    with pytest.raises(ValueError):
+        grouped_linear_fused(g, u, w, gs, act="relu",
+                             backend="pallas_interpret")
+
+
+# ---------------------------------------------------------------------------
+# Satellite: whisper gelu variant on whisper-tiny MLP dims
+# ---------------------------------------------------------------------------
+
+def test_gelu_epilogue_whisper_tiny_mlp_dims():
+    """Unary gelu epilogue at whisper-tiny geometry (d_model=384,
+    d_ff=1536): the fused down projection matches the unfused
+    quantize-then-GEMM of the materialized gelu activation."""
+    d_model, d_ff = 384, 1536
+    rng = np.random.default_rng(23)
+    up = jnp.asarray(rng.standard_normal((8, 10, d_ff)), jnp.float32)
+    w_down = jnp.asarray(rng.standard_normal((d_ff, d_model)) * 0.02,
+                         jnp.float32)
+    y = dense_linear_fp8_fused(up, None, w_down, act="gelu",
+                               backend="pallas_interpret")
+    h = jax.jit(lambda a: _act_f32(a.reshape(-1, d_ff), None, "gelu"))(up)
+    want = dense_linear_fp8(h, w_down, backend="pallas_interpret")
+    np.testing.assert_array_equal(np.asarray(y, jnp.float32),
+                                  np.asarray(want, jnp.float32)
+                                  .reshape(8, 10, d_model))
+
+
+# ---------------------------------------------------------------------------
+# Satellite/bugfix: shared-expert FFN honors cfg.precision
+# ---------------------------------------------------------------------------
+
+def _shared_cfg(**kw):
+    base = dict(num_experts=4, top_k=2, d_model=128, d_ff_expert=128,
+                num_shared_experts=1, precision="fp8",
+                backend="pallas_interpret")
+    base.update(kw)
+    return MoEConfig(**base)
+
+
+def test_shared_expert_ffn_runs_fp8(monkeypatch):
+    """Regression for the precision bug: under precision='fp8' the
+    shared-expert FFN must route through the fp8 dense path (gate/up via
+    dense_linear_fp8 + fused silu·mul down projection), not silently
+    stay a bf16 einsum."""
+    cfg = _shared_cfg()
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    dense_calls, fused_calls = [], []
+    real_d, real_f = moe_mod.dense_linear_fp8, moe_mod.dense_linear_fp8_fused
+    monkeypatch.setattr(moe_mod, "dense_linear_fp8",
+                        lambda *a, **kw: dense_calls.append(a[1].shape)
+                        or real_d(*a, **kw))
+    monkeypatch.setattr(moe_mod, "dense_linear_fp8_fused",
+                        lambda *a, **kw: fused_calls.append(a[2].shape)
+                        or real_f(*a, **kw))
+    y, _ = moe_apply(params, x, cfg)
+    assert len(dense_calls) == 2, "shared gate+up through the fp8 path"
+    assert len(fused_calls) == 1, "shared down through the fused epilogue"
+    assert np.all(np.isfinite(np.asarray(y, jnp.float32)))
+
+
+def test_shared_expert_ffn_stays_bf16_without_fp8(monkeypatch):
+    cfg = _shared_cfg(precision="bf16", backend=None)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    monkeypatch.setattr(moe_mod, "dense_linear_fp8",
+                        lambda *a, **kw: pytest.fail("fp8 path ran"))
+    monkeypatch.setattr(moe_mod, "dense_linear_fp8_fused",
+                        lambda *a, **kw: pytest.fail("fused path ran"))
+    y, _ = moe_apply(params, x, cfg)
+    assert np.all(np.isfinite(np.asarray(y, jnp.float32)))
+
+
+def test_shared_expert_fp8_changes_numerics_vs_bf16():
+    """The bugfix is observable: shared-expert outputs now carry fp8
+    quantization noise relative to the bf16 shared path (previously
+    identical because precision was ignored)."""
+    cfg8 = _shared_cfg()
+    cfg16 = _shared_cfg(precision="bf16", backend=None)
+    params = init_moe_params(jax.random.PRNGKey(0), cfg8)
+    x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg8.d_model))
+    y8, _ = moe_apply(params, x, cfg8)
+    y16, _ = moe_apply(params, x, cfg16)
+    diff = np.abs(np.asarray(y8, np.float32) - np.asarray(y16, np.float32))
+    scale = np.abs(np.asarray(y16, np.float32)).max()
+    assert 0 < diff.max() < 0.2 * max(scale, 1.0), \
+        "fp8 shared path: nonzero but bounded quantization noise"
+
+
+# ---------------------------------------------------------------------------
+# Satellite: op="act_quant" autotune family
+# ---------------------------------------------------------------------------
+
+def test_autotune_act_quant_caches_under_distinct_key(tmp_path):
+    cache = str(tmp_path / "c.json")
+    cfg = plan_mod.autotune(512, 256, 0, 0, backend="pallas_interpret",
+                            cache_path=cache, measure=False,
+                            op="act_quant")
+    assert cfg.backend == "pallas_interpret"
+    key = plan_mod.cache_key(plan_mod._device_kind(), "pallas_interpret",
+                             512, 256, 0, 0, op="act_quant")
+    entries = plan_mod.load_cache(cache)
+    assert key in entries and entries[key]["op"] == "act_quant"
+    # distinct from the standalone quantizer's family at the same shape
+    plan_mod.autotune(512, 256, 0, 0, backend="pallas_interpret",
+                      cache_path=cache, measure=False, op="quantize")
+    assert len(plan_mod.load_cache(cache)) == 2
+    plan_mod.clear_cache_memo()
+    again = plan_mod.autotune(512, 256, 0, 0, backend="pallas_interpret",
+                              cache_path=cache, measure=False,
+                              op="act_quant")
+    assert again == cfg
+
+
+def test_autotune_act_quant_dedupes_tile_heights(tmp_path):
+    """Like the quantizer, the epilogue only varies in tile height —
+    pool entries differing in (block_n, block_k) are one candidate."""
+    cache = str(tmp_path / "c.json")
+    plan_mod.autotune(256, 128, 0, 0, backend="pallas_interpret",
+                      cache_path=cache, measure=False, op="act_quant")
+    (entry,) = plan_mod.load_cache(cache).values()
+    pool_heights = {c.block_m for c in plan_mod.CONFIG_POOL}
+    assert entry["pool_size"] == len(pool_heights)
+
+
+def test_autotune_act_quant_measures_the_fused_dispatch(tmp_path,
+                                                       monkeypatch):
+    cache = str(tmp_path / "c.json")
+    seen = []
+    real = plan_mod._measure_candidate
+
+    def spying(*a, **kw):
+        seen.append(kw.get("op", "gemm"))
+        return real(*a, iters=1, warmup=0,
+                    **{k: v for k, v in kw.items()
+                       if k not in ("iters", "warmup")})
+
+    monkeypatch.setattr(plan_mod, "_measure_candidate", spying)
+    plan_mod.autotune(256, 128, 0, 0, backend="pallas_interpret",
+                      cache_path=cache, max_candidates=2, op="act_quant")
+    assert seen and all(op == "act_quant" for op in seen)

@@ -204,9 +204,11 @@ def _moe_loss(cfg):
 
 
 def test_moe_fwd_bwd_builds_metadata_exactly_once(monkeypatch):
-    """One moe_apply forward+backward = ONE group-metadata build: the
-    TilePlan is constructed per routing decision and shared by the
-    gate/up/down forward GEMMs and both dgrads in the custom VJP."""
+    """One moe_apply forward+backward = ONE group-metadata build per
+    group structure: the routed TilePlan is constructed per routing
+    decision and shared by the gate/up/down forward GEMMs and both
+    dgrads in the custom VJP; the shared-expert FFN (fp8 since the
+    precision bugfix) adds exactly one G=1 plan of its own."""
     cfg, params, x = _moe_fixture()
     calls = []
     inner = plan_mod.make_group_metadata
@@ -218,25 +220,28 @@ def test_moe_fwd_bwd_builds_metadata_exactly_once(monkeypatch):
     monkeypatch.setattr(plan_mod, "make_group_metadata", counting)
     loss = _moe_loss(cfg)
     jax.grad(lambda p: loss(p, x)[0])(params)   # fresh fwd+bwd trace
-    assert len(calls) == 1, \
-        f"expected exactly one metadata build, saw {len(calls)}"
+    assert len(calls) == 2, \
+        f"expected one routed + one shared metadata build, saw {len(calls)}"
+    assert [c[3] for c in calls] == [cfg.num_experts, 1]
 
 
 # Golden values pin the fp8 MoE fwd+bwd bitwise so refactors stay pure
 # plumbing.  Recaptured once for the init_moe_params key-split bugfix
 # (splitting 7 keys instead of 6 redraws every param — the distributions
-# are unchanged, the draws are not); the quantize-once refactor landing in
-# the same PR was verified bitwise-neutral against the PREVIOUS goldens by
-# reconstructing the pre-fix params (split 6 + parent-key shared_down) and
-# reproducing them exactly.
-_GOLDEN_FWD_SUM = 16.611400604248047
-_GOLDEN_LOSS = -10.41189956665039
-_GOLDEN_Y00 = -0.0176808163523674
+# are unchanged, the draws are not), and again for the shared-expert
+# precision bugfix (the shared FFN now runs fp8 under precision="fp8"
+# instead of silently staying bf16 — only shared_* grad norms and the
+# forward sums moved).  The fused silu·mul→quantize epilogue landing in
+# the same PR was verified bitwise-neutral: router/w_gate/w_up/w_down
+# grad norms are unchanged from the previous goldens.
+_GOLDEN_FWD_SUM = 12.953460693359375
+_GOLDEN_LOSS = -12.785236358642578
+_GOLDEN_Y00 = -0.022556953132152557
 _GOLDEN_GRADNORMS = {
     "router": 178.5314483642578,
-    "shared_down": 416.1788635253906,
-    "shared_gate": 450.4234313964844,
-    "shared_up": 437.5754699707031,
+    "shared_down": 415.6036376953125,
+    "shared_gate": 450.72210693359375,
+    "shared_up": 436.6423034667969,
     "w_down": 271.82525634765625,
     "w_gate": 289.45892333984375,
     "w_up": 267.9383544921875,

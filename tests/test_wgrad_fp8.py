@@ -390,8 +390,11 @@ def _moe_cfg(**kw):
 def test_moe_fp8_quantizes_shared_activation_exactly_once(monkeypatch):
     """ACCEPTANCE: one fp8 MoE layer forward+backward performs exactly ONE
     quantize_tilewise of the shared activation buffer (down from three —
-    gate fwd + up fwd + backward requant).  Total call census: xs once,
-    the down-projection's input h once, and one dy per GEMM's backward."""
+    gate fwd + up fwd + backward requant) and ZERO standalone quantizes of
+    the down-projection's input h — the fused (act_quant, fp8) epilogue
+    produces the down GEMM's QuantizedActivation without a separate
+    quantize_tilewise pass.  Total call census: xs once forward, plus one
+    dy per GEMM's backward."""
     cfg = _moe_cfg()
     params = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
     x = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
@@ -403,9 +406,9 @@ def test_moe_fp8_quantizes_shared_activation_exactly_once(monkeypatch):
                         lambda a, **kw: calls.append(a.shape) or
                         real(a, **kw))
 
-    # forward only: xs once (shared by gate+up) + h once
+    # forward only: xs once (shared by gate+up); h is fused away entirely
     moe_mod.moe_apply(params, x, cfg)
-    assert calls == [(cap, cfg.d_model), (cap, cfg.d_ff_expert)], calls
+    assert calls == [(cap, cfg.d_model)], calls
 
     # forward+backward: + one dy per GEMM backward (down/gate/up); the
     # wgrads reuse the forward residuals — NO extra xs/h quantization
@@ -419,7 +422,7 @@ def test_moe_fp8_quantizes_shared_activation_exactly_once(monkeypatch):
     xs_like = [s for s in calls if s == (cap, cfg.d_model)]
     # (cap, d_model) twice: the shared xs + the down GEMM's dy (same shape)
     assert len(xs_like) == 2, f"shared-buffer quantizations: {calls}"
-    assert len(calls) == 5, f"expected 2 fwd + 3 dy quants, saw {calls}"
+    assert len(calls) == 4, f"expected 1 fwd + 3 dy quants, saw {calls}"
     for leaf in jax.tree_util.tree_leaves(g):
         assert bool(jnp.isfinite(leaf).all())
 
