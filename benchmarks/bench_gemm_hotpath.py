@@ -1,0 +1,90 @@
+"""fp8 hot-path suite: the GEMMs a fused-producer training step runs.
+
+Three row families:
+
+  * ``fwd``      — the forward grouped GEMM in both operand precisions
+                   (fp8 + tile scales vs bf16 ragged_dot), same shape.
+  * ``producer`` — the gate/up projection as ONE fused
+                   ``grouped_gemm_quant`` vs the unfused GEMM -> quantize
+                   composition.  Derived columns carry the HBM bytes the
+                   fusion removes (the wide output's write plus the
+                   quantizer's read-back: 4 bytes/element) and the fused
+                   output's actual footprint (fp8 payload + 1x128 scales).
+  * ``quantize`` — the standalone tilewise quantizer on the producer's
+                   input rows, for scale against the producer rows.
+
+The xla_* backends compose the producer from the same two ops, so their
+fused-vs-unfused time delta is noise; the *bytes* columns are the
+backend-independent content, and the pallas path (interpret here, TPU on
+device) is where the time delta becomes real.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.bench_grouped_gemm import (_make_inputs, _ours, _ours_quant,
+                                           _select_config, _unfused_quant)
+from benchmarks.common import time_fn
+from repro.kernels import dispatch
+from repro.kernels.plan import KernelConfig
+
+CASES = [(2048, 256, 256, 8), (2048, 512, 512, 8)]
+# interpret-mode-feasible shape for the Pallas producer row
+PALLAS_CASES = [(256, 128, 128, 4)]
+
+
+def _bf16_inputs(m, k, n, g, seed):
+    rng = np.random.default_rng(seed)
+    from benchmarks.common import generate_group_sizes
+    sizes = generate_group_sizes(m, g, seed)
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+    w = jnp.asarray(rng.standard_normal((g, k, n)), jnp.bfloat16)
+    return x, w, jnp.asarray(sizes)
+
+
+def run(report, *, backend="xla_ragged"):
+    cfg_bf16 = KernelConfig()
+
+    for m, n, k, g in CASES:
+        cfg = _select_config(m, k, n, g, backend, measure=True)
+        a8, sa, b8, sb, gs, _ = _make_inputs(m, k, n, g, seed=m + g + n)
+        t_fp8 = time_fn(_ours, a8, sa, b8, sb, gs, cfg)
+        x, w, gs_b = _bf16_inputs(m, k, n, g, seed=m + g + n)
+        t_bf16 = time_fn(
+            lambda x_, w_, gs_: dispatch.grouped_gemm_bf16(
+                x_, w_, gs_, config=cfg_bf16), x, w, gs_b)
+        report(f"gemm_hotpath/fwd/M{m}_N{n}_K{k}_G{g}",
+               t_fp8 * 1e6,
+               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"@{cfg.backend or 'auto'};bf16_us={t_bf16 * 1e6:.1f}")
+
+    # producer epilogue: fused grouped_gemm_quant vs the unfused
+    # composition — xla rows for the bytes math at training shapes,
+    # one pallas_interpret row where the fusion is a real kernel
+    prod_cases = [(be, case) for be in (backend,) for case in CASES]
+    prod_cases += [("pallas_interpret", case) for case in PALLAS_CASES
+                   if dispatch.availability("pallas_interpret")[0]]
+    for be, (m, n, k, g) in prod_cases:
+        cfg = _select_config(m, k, n, g, be, measure=True, op="gemm_quant")
+        a8, sa, b8, sb, gs, _ = _make_inputs(m, k, n, g, seed=m + g + n)
+        t_fused = time_fn(_ours_quant, a8, sa, b8, sb, gs, cfg)
+        t_unfused = time_fn(_unfused_quant, a8, sa, b8, sb, gs, cfg)
+        nb = (n + 127) // 128
+        saved = 4 * m * n
+        fused_out = m * n + m * nb * 4
+        report(f"gemm_hotpath/producer/M{m}_N{n}_K{k}_G{g}@{be}",
+               t_fused * 1e6,
+               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k};"
+               f"unfused_us={t_unfused * 1e6:.1f};"
+               f"producer_bytes_saved={saved};"
+               f"fused_out_bytes={fused_out}")
+
+    for m, n, k, g in CASES:
+        rng = np.random.default_rng(m)
+        x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        t_q = time_fn(lambda x_: dispatch.quantize_tilewise(x_), x)
+        report(f"gemm_hotpath/quantize/M{m}_K{n}",
+               t_q * 1e6,
+               f"bytes_in={x.size * 4};bytes_out={m * n + m * (n // 128) * 4}")

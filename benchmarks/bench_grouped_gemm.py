@@ -57,6 +57,17 @@ def _ours(a8, sa, b8, sb, gs, config):
 
 
 @functools.partial(jax.jit, static_argnames=("config",))
+def _ours_quant(a8, sa, b8, sb, gs, config):
+    return dispatch.grouped_gemm_quant(a8, sa, b8, sb, gs, config=config)
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
+def _unfused_quant(a8, sa, b8, sb, gs, config):
+    y = dispatch.grouped_gemm_fp8(a8, sa, b8, sb, gs, config=config)
+    return dispatch.quantize_tilewise(y.astype(jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("config",))
 def _wgrad(x, dy, gs, config):
     return dispatch.grouped_gemm_wgrad(x, dy, gs, config=config)
 
@@ -107,6 +118,32 @@ def bench_cases(report, cases, *, backend=None, measure_autotune=True):
                f"accel_pct={accel:.1f};pad_rows={ov['pad_rows']};"
                f"pad_extra_bytes={ov['a_bytes'] + ov['sa_bytes']};"
                f"tiles={pad_tiles}vs{min_tiles + g - 1}")
+
+
+def bench_gemm_quant_cases(report, cases, *, backend=None,
+                           measure_autotune=True):
+    """The producer-side quantizing epilogue (``op="gemm_quant"``): the
+    gate/up GEMM emits its fp8 payload + 1x128 scales straight from the
+    store phase vs the unfused GEMM -> quantize composition on the same
+    shape.  The derived columns carry the HBM bytes the fusion removes —
+    the wide output's write plus the quantizer's read-back, 4
+    bytes/element — and the fused output's actual footprint."""
+    for m, n, k, g in cases:
+        cfg = _select_config(m, k, n, g, backend, measure=measure_autotune,
+                             op="gemm_quant")
+        a8, sa, b8, sb, gs, _ = _make_inputs(m, k, n, g, seed=m + g + n)
+        t_fused = time_fn(_ours_quant, a8, sa, b8, sb, gs, cfg)
+        t_unfused = time_fn(_unfused_quant, a8, sa, b8, sb, gs, cfg)
+        nb = (n + 127) // 128
+        saved = 4 * m * n                     # bf16 write + read-back
+        fused_out = m * n + m * nb * 4        # fp8 payload + f32 scales
+        report(f"gemm_quant/M{m}_N{n}_K{k}_G{g}",
+               t_fused * 1e6,
+               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"@{cfg.backend or 'auto'};"
+               f"unfused_us={t_unfused * 1e6:.1f};"
+               f"producer_bytes_saved={saved};"
+               f"fused_out_bytes={fused_out}")
 
 
 def bench_wgrad_cases(report, cases, *, backend=None, measure_autotune=True):
@@ -238,6 +275,10 @@ def main() -> None:
     ap.add_argument("--decode", action="store_true",
                     help="tiny-M serving shapes (M in {1, 8, 16}) through "
                          "the decode-specialized pool (block_m<=16)")
+    ap.add_argument("--gemm-quant", action="store_true",
+                    help="the producer-side quantizing epilogue "
+                         "(op=gemm_quant) vs the unfused GEMM->quantize "
+                         "composition")
     ap.add_argument("--backend", default=None,
                     help="dispatch backend (default: auto-resolved)")
     args = ap.parse_args()
@@ -250,6 +291,11 @@ def main() -> None:
     if args.decode:
         bench_decode_cases(report, DECODE_CASES, backend=args.backend,
                            measure_autotune=not args.smoke)
+        return
+    if args.gemm_quant:
+        bench_gemm_quant_cases(report,
+                               SMOKE_CASES if args.smoke else CASES[:4],
+                               backend=args.backend, measure_autotune=True)
         return
     if args.smoke:
         # measured pool selection even on plan-consuming backends — the

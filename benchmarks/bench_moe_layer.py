@@ -65,7 +65,8 @@ def run(report):
         cap = _capacity(t * cfg.top_k, 1, cfg.capacity_factor)
         routed = 4 * cap * cfg.d_ff_expert
         shared = 4 * t * cfg.d_ff_expert * cfg.num_shared_experts
-        report(f"moe_layer_fused/T{t}_E{cfg.num_experts}", 0.0,
+        # derived-only row (bytes geometry, nothing timed): us=None
+        report(f"moe_layer_fused/T{t}_E{cfg.num_experts}", None,
                f"h_bytes_saved_mb={(routed + shared) / 2**20:.1f};"
                f"routed_mb={routed / 2**20:.1f};"
                f"shared_mb={shared / 2**20:.1f}")

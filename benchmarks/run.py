@@ -22,7 +22,8 @@ import platform
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
-                    help="comma list: fig2a,fig2b,equivalence,moe_layer")
+                    help="comma list: fig2a,fig2b,equivalence,moe_layer,"
+                         "gemm_hotpath")
     ap.add_argument("--pin-config", default=None, metavar="BMxBNxBK",
                     help="pin tile shapes, e.g. 256x128x128 (skips the "
                          "autotuner pool)")
@@ -42,13 +43,15 @@ def main() -> None:
         plan_mod.set_default_config(
             plan_mod.KernelConfig(backend=args.backend))
 
-    from benchmarks import (bench_equivalence, bench_grouped_gemm,
-                            bench_memory, bench_moe_layer)
+    from benchmarks import (bench_equivalence, bench_gemm_hotpath,
+                            bench_grouped_gemm, bench_memory,
+                            bench_moe_layer)
     suites = {
         "fig2a": bench_grouped_gemm.run,
         "fig2b": bench_memory.run,
         "equivalence": bench_equivalence.run,
         "moe_layer": bench_moe_layer.run,
+        "gemm_hotpath": bench_gemm_hotpath.run,
     }
     wanted = (args.only.split(",") if args.only else list(suites))
 
@@ -56,9 +59,16 @@ def main() -> None:
     rows = []
 
     def report(name, us, derived):
-        print(f"{name},{us:.1f},{derived}", flush=True)
-        rows.append({"name": name, "us_per_call": round(us, 1),
-                     "derived": derived})
+        # us=None marks a derived-only row (geometry/bytes math, nothing
+        # timed): the CSV shows an explicit blank and the snapshot omits
+        # the timing key instead of recording a fake 0.0 measurement
+        if us is None:
+            print(f"{name},,{derived}", flush=True)
+            rows.append({"name": name, "derived": derived})
+        else:
+            print(f"{name},{us:.1f},{derived}", flush=True)
+            rows.append({"name": name, "us_per_call": round(us, 1),
+                         "derived": derived})
 
     for key in wanted:
         suites[key](report)

@@ -99,6 +99,57 @@ assert len(calls) == 4 and len(xs_like) == 2, \
 print("quantize-once count OK")
 EOF
 
+# Producer-fusion gate: with KernelConfig(fuse_producer=True) the gate/up
+# projections run as (gemm_quant, fp8) — the GEMM's store phase emits the
+# fp8 payload + 1x128 scales directly, so g and u are NEVER standalone
+# tilewise-quantized, in the forward OR the backward.  This tightens the
+# PR 6 pin above: same 4 total quantizes over fwd+bwd, but the forward is
+# now exactly ONE (the shared xs) with zero (cap, d_ff)-shaped calls, and
+# the fused path must actually route through grouped_gemm_quant.
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
+import jax, jax.numpy as jnp
+from repro.core import moe as moe_mod
+from repro.core import quantization as qz
+from repro.kernels import dispatch
+from repro.kernels.plan import KernelConfig
+
+cfg = moe_mod.MoEConfig(num_experts=4, top_k=2, d_model=128, d_ff_expert=256,
+                        precision="fp8", backend="pallas_interpret",
+                        kernel_config=KernelConfig(wgrad_precision="fp8",
+                                                   fuse_producer=True))
+params = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
+xt = jax.random.normal(jax.random.PRNGKey(1), (32, 128))
+cap = moe_mod._capacity(32 * cfg.top_k, 1, cfg.capacity_factor)
+
+calls, quant_gemms = [], []
+real_q, real_gq = qz.quantize_tilewise, dispatch.grouped_gemm_quant
+qz.quantize_tilewise = lambda a, **kw: calls.append(a.shape) or real_q(a, **kw)
+dispatch.grouped_gemm_quant = lambda *a, **kw: quant_gemms.append(()) or \
+    real_gq(*a, **kw)
+try:
+    moe_mod.moe_apply(params, xt, cfg)
+    ff_like = [s for s in calls if s == (cap, cfg.d_ff_expert)]
+    # forward: ONE standalone quantize (the shared xs), zero of g/u — the
+    # producer GEMM's epilogue emits their fp8 form in the store phase
+    assert calls == [(cap, cfg.d_model)], \
+        f"fused-producer forward must quantize ONCE (xs): {calls}"
+    assert not ff_like, f"standalone quantize of g/u leaked: {calls}"
+    assert len(quant_gemms) == 2, \
+        f"gate+up must route through grouped_gemm_quant: {len(quant_gemms)}"
+    calls.clear(); quant_gemms.clear()
+    jax.grad(lambda p, x: jnp.mean(
+        moe_mod.moe_apply(p, x, cfg)[0].astype(jnp.float32) ** 2),
+        argnums=(0, 1))(params, xt)
+    # fwd+bwd: xs + the down dy (d_model) and the activation cotangents
+    # dg, du (d_ff) — g/u themselves still never re-quantized
+    assert sorted(calls) == [(cap, cfg.d_model), (cap, cfg.d_model),
+                             (cap, cfg.d_ff_expert), (cap, cfg.d_ff_expert)], \
+        f"fused-producer fwd+bwd quantize floor violated: {calls}"
+finally:
+    qz.quantize_tilewise, dispatch.grouped_gemm_quant = real_q, real_gq
+print("producer-fusion quantize floor OK")
+EOF
+
 # Serving decode gate: one Engine resolves ONE decode-specialized
 # (block_m<=16) config at construction, and a full generate (prefill +
 # >=4 decode steps) builds plan metadata exactly once per phase — the
@@ -186,4 +237,11 @@ EOF
 REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_grouped_gemm --decode --smoke \
+        --backend pallas_interpret
+
+# Producer bench path: the fused gemm_quant CLI (autotune pool for the
+# gemm_quant op family + the fused-vs-unfused comparison columns).
+REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.bench_grouped_gemm --gemm-quant --smoke \
         --backend pallas_interpret

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import dispatch
+from repro.kernels import ref as kref
 from repro.kernels.plan import KernelConfig, TilePlan, make_tile_plan, \
     resolve_config
 from repro.core import quantization as q
@@ -260,6 +261,152 @@ _grouped_linear_fp8_fused.defvjp(_fused_fwd, _fused_bwd)
 
 
 # ---------------------------------------------------------------------------
+# fp8 FFN with PRODUCER-side quantizing epilogues (gate/up emit fp8 directly)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(7,))
+def _grouped_linear_ffn_fp8(x, w_gate, w_up, w_down, group_sizes, plan, qa,
+                            ctx):
+    y, _ = _ffn_fwd(x, w_gate, w_up, w_down, group_sizes, plan, qa, ctx)
+    return y
+
+
+def _ffn_fwd(x, w_gate, w_up, w_down, group_sizes, plan, qa, ctx):
+    config, act = ctx
+    # quantize-once: ONE tilewise quant of x feeds the gate AND up GEMMs
+    # (and, under wgrad_precision="fp8", both of their wgrads)
+    if qa is None:
+        a8, sa = q.quantize_tilewise(x.astype(jnp.float32),
+                                     backend=config.backend, config=config)
+    else:
+        a8, sa = qa.q, qa.scale
+    num_groups = w_up.shape[0]
+    if plan is None and dispatch.backend_uses_plan(config.backend):
+        plan = make_tile_plan(group_sizes, x.shape[0],
+                              block_m=config.block_m, num_groups=num_groups)
+    # producer epilogue: the gate/up GEMMs round through the intermediate
+    # dtype in-register and emit fp8 payload + 1x128 scales directly — the
+    # bf16 g/u buffers never reach HBM, and the activation kernel
+    # dequantizes them on load.  ``out_dtype`` here is the *rounding*
+    # dtype, chosen to match what the unfused composition would have
+    # stored (x.dtype), so fused-vs-unfused stays bitwise at this seam.
+    idt = x.dtype
+    bu8, sbu = q.quantize_blockwise_batched(w_up.astype(jnp.float32),
+                                            backend=config.backend)
+    u8, su = dispatch.grouped_gemm_quant(a8, sa, bu8, sbu, group_sizes,
+                                         num_groups=num_groups,
+                                         config=config, out_dtype=idt,
+                                         plan=plan)
+    if w_gate is not None:
+        bg8, sbg = q.quantize_blockwise_batched(w_gate.astype(jnp.float32),
+                                                backend=config.backend)
+        g8, sg = dispatch.grouped_gemm_quant(a8, sa, bg8, sbg, group_sizes,
+                                             num_groups=num_groups,
+                                             config=config, out_dtype=idt,
+                                             plan=plan)
+        qh = q.fused_act_quantize_fp8(g8, sg, u8, su, act=act,
+                                      backend=config.backend, config=config)
+    else:
+        # unary activation (gelu): w_up is the single projection
+        g8 = sg = None
+        qh = q.fused_act_quantize_fp8(u8, su, act=act,
+                                      backend=config.backend, config=config)
+    bd8, sbd = q.quantize_blockwise_batched(w_down.astype(jnp.float32),
+                                            backend=config.backend)
+    y = dispatch.grouped_gemm_fp8(qh.q, qh.scale, bd8, sbd, group_sizes,
+                                  config=config, plan=plan)
+    if config.wgrad_precision == "fp8":
+        # all-fp8 step: the quantized x and h ride along as residuals so
+        # the backward performs zero re-quantizations of either
+        x_raw, x_res = x[:0], (a8, sa)
+        h_res = (qh.q, qh.scale)
+    else:
+        # DeepSeek recipe: raw x kept; h recomputed in f32 for the wgrad
+        x_raw, x_res, h_res = x, None, None
+    qa_marker = () if qa is not None else None     # structure-only flag
+    return y, (x_raw, x_res, g8, sg, u8, su, h_res, w_gate, w_up, w_down,
+               group_sizes, plan, qa_marker)
+
+
+def _ffn_bwd(ctx, res, dy):
+    config, act = ctx
+    (x_raw, x_res, g8, sg, u8, su, h_res, w_gate, w_up, w_down,
+     group_sizes, plan, qa_marker) = res
+    num_groups = w_up.shape[0]
+    f32cfg = config.with_(out_dtype=jnp.float32)
+    # ONE quantize_tilewise(dy) serves the down dgrad AND its fp8 wgrad
+    d8, sd = q.quantize_tilewise(dy.astype(jnp.float32),
+                                 backend=config.backend, config=config)
+    wdt8, sdt = q.quantize_blockwise_batched(
+        jnp.swapaxes(w_down, 1, 2).astype(jnp.float32),
+        backend=config.backend)
+    dh = dispatch.grouped_gemm_fp8(d8, sd, wdt8, sdt, group_sizes,
+                                   config=f32cfg, plan=plan)
+    # recompute the activation from the fp8 producer residuals — the
+    # dequantized payloads ARE the values the fused epilogue ran on, so
+    # this recompute sees exactly the forward's activation inputs.  Tail
+    # rows stay defined zeros: payload 0 / scale 1 dequantizes to 0.
+    u_f32 = kref.dequantize_tilewise_ref(u8, su)
+    if w_gate is not None:
+        g_f32 = kref.dequantize_tilewise_ref(g8, sg)
+        h_f32, act_vjp = _act_recompute(g_f32, u_f32, act)
+        dg, du = act_vjp(dh)
+    else:
+        h_f32, act_vjp = _act_recompute(u_f32, None, act)
+        (du,) = act_vjp(dh)
+        dg = None
+    # quantize dg/du ONCE each: the records serve the gate/up dgrads and,
+    # under wgrad_precision="fp8", the matching wgrads.  Total standalone
+    # quantize_tilewise calls for fwd+bwd: x, dy, dg, du — never h.
+    du8, sdu = q.quantize_tilewise(du, backend=config.backend, config=config)
+    wut8, sut = q.quantize_blockwise_batched(
+        jnp.swapaxes(w_up, 1, 2).astype(jnp.float32), backend=config.backend)
+    dx = dispatch.grouped_gemm_fp8(du8, sdu, wut8, sut, group_sizes,
+                                   config=f32cfg, plan=plan)
+    if w_gate is not None:
+        dg8, sdg = q.quantize_tilewise(dg, backend=config.backend,
+                                       config=config)
+        wgt8, sgt = q.quantize_blockwise_batched(
+            jnp.swapaxes(w_gate, 1, 2).astype(jnp.float32),
+            backend=config.backend)
+        dx = dx + dispatch.grouped_gemm_fp8(dg8, sdg, wgt8, sgt, group_sizes,
+                                            config=f32cfg, plan=plan)
+    if config.wgrad_precision == "fp8":
+        a8, sa = x_res
+        h8, sh = h_res
+        dw_down = dispatch.grouped_gemm_wgrad_fp8(
+            h8, sh, d8, sd, group_sizes, num_groups=num_groups,
+            config=config, out_dtype=jnp.float32, plan=plan)
+        dw_up = dispatch.grouped_gemm_wgrad_fp8(
+            a8, sa, du8, sdu, group_sizes, num_groups=num_groups,
+            config=config, out_dtype=jnp.float32, plan=plan)
+        dw_gate = None if w_gate is None else dispatch.grouped_gemm_wgrad_fp8(
+            a8, sa, dg8, sdg, group_sizes, num_groups=num_groups,
+            config=config, out_dtype=jnp.float32, plan=plan)
+    else:
+        dw_down = _wgrad(h_f32, dy, group_sizes, num_groups, config=config,
+                         plan=plan)
+        dw_up = _wgrad(x_raw, du, group_sizes, num_groups, config=config,
+                       plan=plan)
+        dw_gate = None if w_gate is None else _wgrad(
+            x_raw, dg, group_sizes, num_groups, config=config, plan=plan)
+    dqa = None
+    if qa_marker is not None:
+        m, k = dy.shape[0], w_up.shape[1]
+        kb = (k + q.QUANT_BLOCK - 1) // q.QUANT_BLOCK
+        dqa = q.QuantizedActivation(
+            jnp.zeros((m, k), jnp.float8_e4m3fn),
+            jnp.zeros((m, kb), jnp.float32))
+    return (dx.astype(x_raw.dtype),
+            None if w_gate is None else dw_gate.astype(w_gate.dtype),
+            dw_up.astype(w_up.dtype), dw_down.astype(w_down.dtype),
+            None, None, dqa)
+
+
+_grouped_linear_ffn_fp8.defvjp(_ffn_fwd, _ffn_bwd)
+
+
+# ---------------------------------------------------------------------------
 # Public API
 # ---------------------------------------------------------------------------
 
@@ -427,3 +574,71 @@ def dense_linear_fp8_fused(g: jax.Array, u: jax.Array | None,
     y = grouped_linear_fused(g2, u2, w[None], gs, act=act, backend=backend,
                              out_dtype=out_dtype, config=config, plan=plan)
     return y.reshape(*lead, w.shape[-1])
+
+
+def grouped_linear_ffn(x: jax.Array, w_gate: jax.Array | None,
+                       w_up: jax.Array, w_down: jax.Array,
+                       group_sizes: jax.Array, *, act: str = "silu_mul",
+                       backend: str | None = None,
+                       out_dtype: Any = None,
+                       config: KernelConfig | None = None,
+                       plan: TilePlan | None = None,
+                       quantized: "q.QuantizedActivation | None" = None,
+                       wgrad_precision: str | None = None) -> jax.Array:
+    """Whole fp8 expert FFN with producer-side quantizing epilogues:
+    ``y = act(x @ w_gate, x @ w_up) @ w_down`` per group, where the
+    gate/up GEMMs emit fp8 payload + 1x128 scales DIRECTLY from their
+    store phase (``grouped_gemm_quant``) and the activation kernel
+    dequantizes them on load.  Nothing wider than fp8 crosses HBM between
+    the producer GEMMs and the down GEMM.
+
+    ``w_gate``: [G, K, F] (or ``None`` for the unary ``gelu``, where
+    ``w_up`` is the single projection); ``w_up``: [G, K, F]; ``w_down``:
+    [G, F, N].  ``quantized`` is the quantize-once record of exactly this
+    ``x``; ``plan``/``wgrad_precision`` follow :func:`grouped_linear`.
+
+    Numerics: the kernel-level producer is bitwise identical to the
+    unfused GEMM->quantize composition, but the *FFN* differs from the
+    unfused recipe by one extra e4m3 quantization of g/u before the
+    activation (the price of never materializing them wide) — expect a
+    small tolerance delta vs :func:`grouped_linear_fused` pipelines, not
+    equality.  Standalone quantize count: forward exactly one
+    (``x``, skipped when ``quantized`` is given); forward+backward four
+    (``x``, ``dy``, ``dg``, ``du``) — zero quantizes of g/u/h anywhere.
+    """
+    from repro.kernels.epilogue_kernel import ACTIVATIONS
+    if act not in ACTIVATIONS:
+        raise ValueError(f"unknown activation {act!r}; "
+                         f"expected one of {ACTIVATIONS}")
+    if act == "silu_mul" and w_gate is None:
+        raise ValueError("act='silu_mul' needs both w_gate and w_up")
+    if act != "silu_mul" and w_gate is not None:
+        raise ValueError(f"act={act!r} is unary; pass the single projection "
+                         "as w_up with w_gate=None")
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype,
+                         wgrad_precision=wgrad_precision)
+    if cfg.out_dtype is None:
+        cfg = cfg.with_(out_dtype=x.dtype)
+    return _grouped_linear_ffn_fp8(x, w_gate, w_up, w_down, group_sizes,
+                                   plan, quantized, (cfg, act))
+
+
+def dense_ffn_fp8(x: jax.Array, w_gate: jax.Array | None, w_up: jax.Array,
+                  w_down: jax.Array, *, act: str = "silu_mul",
+                  backend: str | None = None, out_dtype: Any = None,
+                  config: KernelConfig | None = None,
+                  plan: TilePlan | None = None,
+                  quantized: "q.QuantizedActivation | None" = None
+                  ) -> jax.Array:
+    """G=1 producer-fused fp8 FFN for dense layers (the MoE shared expert
+    and the dense MLP).  Accepts arbitrary leading dims on ``x``
+    (flattened to rows like ``models.layers.linear``); ``plan`` is the
+    same G=1 TilePlan the caller built for the token buffer."""
+    lead, k = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, k)
+    gs = jnp.array([x2.shape[0]], jnp.int32)
+    y = grouped_linear_ffn(
+        x2, None if w_gate is None else w_gate[None], w_up[None],
+        w_down[None], gs, act=act, backend=backend, out_dtype=out_dtype,
+        config=config, plan=plan, quantized=quantized)
+    return y.reshape(*lead, w_down.shape[-1])

@@ -29,8 +29,9 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.grouped_gemm import (dense_linear_fp8, dense_linear_fp8_fused,
-                                     grouped_linear, grouped_linear_fused)
+from repro.core.grouped_gemm import (dense_ffn_fp8, dense_linear_fp8,
+                                     dense_linear_fp8_fused, grouped_linear,
+                                     grouped_linear_ffn, grouped_linear_fused)
 from repro.core.quantization import quantize_activation
 from repro.kernels import dispatch
 from repro.kernels.plan import KernelConfig, make_tile_plan, resolve_config
@@ -223,22 +224,36 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
             # passed here instead — the record's values are tile-height
             # independent either way, only wall time moves.
             qx = quantize_activation(xs, backend=kcfg.backend, config=kcfg)
-        glin = functools.partial(grouped_linear, precision=cfg.precision,
-                                 config=kcfg, plan=tile_plan)
-        g = glin(xs, params["w_gate"], gs, quantized=qx)    # [cap, f_loc]
-        u = glin(xs, params["w_up"], gs, quantized=qx)
-        if cfg.precision == "fp8":
-            # fused epilogue: silu(g)*u + 1x128 quantization in one
-            # (act_quant, fp8) pass — the bf16 h intermediate never
-            # touches HBM and the down GEMM consumes the
-            # QuantizedActivation directly (zero standalone quantizes
-            # of h, forward and backward)
-            y = grouped_linear_fused(g, u, params["w_down"], gs,
-                                     act="silu_mul", config=kcfg,
-                                     plan=tile_plan)         # [cap, d]
+        if cfg.precision == "fp8" and kcfg.fuse_producer:
+            # producer-fused FFN: the gate/up GEMMs emit fp8 + 1x128
+            # scales straight from their store phase (grouped_gemm_quant)
+            # and the activation dequantizes them on load — g/u never
+            # exist in bf16 anywhere, and the whole expert FFN performs
+            # exactly ONE standalone quantize (the qx above).  Numerics
+            # differ from the unfused recipe by one extra e4m3 rounding
+            # of g/u (see grouped_linear_ffn's docstring).
+            y = grouped_linear_ffn(xs, params["w_gate"], params["w_up"],
+                                   params["w_down"], gs, act="silu_mul",
+                                   config=kcfg, plan=tile_plan,
+                                   quantized=qx)             # [cap, d]
         else:
-            h = jax.nn.silu(g) * u                          # bf16 act (I5)
-            y = glin(h, params["w_down"], gs)               # [cap, d]
+            glin = functools.partial(grouped_linear,
+                                     precision=cfg.precision,
+                                     config=kcfg, plan=tile_plan)
+            g = glin(xs, params["w_gate"], gs, quantized=qx)  # [cap, f_loc]
+            u = glin(xs, params["w_up"], gs, quantized=qx)
+            if cfg.precision == "fp8":
+                # fused epilogue: silu(g)*u + 1x128 quantization in one
+                # (act_quant, fp8) pass — the bf16 h intermediate never
+                # touches HBM and the down GEMM consumes the
+                # QuantizedActivation directly (zero standalone quantizes
+                # of h, forward and backward)
+                y = grouped_linear_fused(g, u, params["w_down"], gs,
+                                         act="silu_mul", config=kcfg,
+                                         plan=tile_plan)     # [cap, d]
+            else:
+                h = jax.nn.silu(g) * u                      # bf16 act (I5)
+                y = glin(h, params["w_down"], gs)           # [cap, d]
 
     # ---- combine (rows beyond `total` are defined zeros on the kernel
     # path, but hard-masking stays: it is cheap, explicit, and covers the
@@ -265,13 +280,22 @@ def moe_apply(params, x, cfg: MoEConfig, *, ep_rank=0, ep_size: int = 1,
                 splan = make_tile_plan(jnp.array([t], jnp.int32), t,
                                        block_m=kcfg.block_m, num_groups=1)
             qs = quantize_activation(x, backend=kcfg.backend, config=kcfg)
-            sg = dense_linear_fp8(x, params["shared_gate"], config=kcfg,
-                                  plan=splan, quantized=qs)
-            su = dense_linear_fp8(x, params["shared_up"], config=kcfg,
-                                  plan=splan, quantized=qs)
-            out = out + dense_linear_fp8_fused(
-                sg, su, params["shared_down"], act="silu_mul", config=kcfg,
-                out_dtype=jnp.float32, plan=splan)
+            if kcfg.fuse_producer:
+                # producer-fused shared-expert FFN — same seam as the
+                # routed experts: gate/up emit fp8 directly, one
+                # standalone quantize (qs) for the whole FFN
+                out = out + dense_ffn_fp8(
+                    x, params["shared_gate"], params["shared_up"],
+                    params["shared_down"], act="silu_mul", config=kcfg,
+                    out_dtype=jnp.float32, plan=splan, quantized=qs)
+            else:
+                sg = dense_linear_fp8(x, params["shared_gate"], config=kcfg,
+                                      plan=splan, quantized=qs)
+                su = dense_linear_fp8(x, params["shared_up"], config=kcfg,
+                                      plan=splan, quantized=qs)
+                out = out + dense_linear_fp8_fused(
+                    sg, su, params["shared_down"], act="silu_mul",
+                    config=kcfg, out_dtype=jnp.float32, plan=splan)
         else:
             sg = x @ params["shared_gate"]
             su = x @ params["shared_up"]

@@ -89,6 +89,23 @@ def fused_act_quantize(g, u=None, *, act="silu_mul", backend=None,
     return QuantizedActivation(q8, s)
 
 
+def fused_act_quantize_fp8(g8, s_g, u8=None, s_u=None, *, act="silu_mul",
+                           backend=None, config=None) -> QuantizedActivation:
+    """Fused producer epilogue on *fp8* operands.
+
+    The fused-producer GEMM (``grouped_gemm_quant``) emits gate/up as fp8
+    payloads + 1x128 scales; this routes them through the ``(act_quant,
+    fp8)`` operator's dequant-on-load mode, so the bf16 g/u buffers never
+    exist anywhere.  Payloads and scales are already detached (they come
+    out of a non-differentiable producer), so no ``stop_gradient`` is
+    needed; gradients reach the FFN inputs through the fused VJP's
+    activation recompute.
+    """
+    q8, s = kops.act_quantize(g8, u8, act=act, backend=backend,
+                              config=config, s_g=s_g, s_u=s_u)
+    return QuantizedActivation(q8, s)
+
+
 @jax.custom_vjp
 def quantize_dequantize_tilewise(x):
     """fake-quant (quant->dequant) with straight-through gradient; used to

@@ -19,11 +19,18 @@ precision)`` —
   ``wgrad``      ``fp8``      the same contraction on fp8 operands with
                               1x128 tile scales, dequantized per visit
                               (arXiv 2505.20524's all-fp8 step)
+  ``gemm_quant`` ``fp8``      grouped GEMM with a fused quantizing
+                              epilogue: the producer emits the fp8 payload
+                              + 1x128 tile scales directly (the bf16
+                              output never exists; kernel entries fuse,
+                              XLA entries compose GEMM + quantize so the
+                              matrix stays total)
   ``quantize``   ``fp8``      1x128 per-tile fp8 activation quantization
                               (the producer of the gemm family's operands)
   ``act_quant``  ``fp8``      fused activation -> 1x128 fp8 quantization
                               (``silu(g)*u`` / ``gelu(g)`` epilogue; the
-                              bf16 intermediate never touches HBM)
+                              bf16 intermediate never touches HBM; fp8
+                              inputs with scales dequantize on load)
   =============  ===========  ==============================================
 
 Backend *names* are family-neutral and shared across the table: one
@@ -80,7 +87,8 @@ import jax.numpy as jnp
 
 from repro import compat
 from repro.kernels import ref as _ref
-from repro.kernels.grouped_gemm_kernel import QUANT_BLOCK, gmm_pallas
+from repro.kernels.grouped_gemm_kernel import (QUANT_BLOCK, gmm_pallas,
+                                               gmm_pallas_quant)
 from repro.kernels.plan import (KernelConfig, TilePlan,  # noqa: F401
                                 make_tile_plan, resolve_config)
 from repro.kernels.epilogue_kernel import act_quantize_pallas
@@ -97,7 +105,7 @@ _ALIASES = {"xla": "xla_ragged"}
 # not the name, selects the arithmetic
 _FP8_SUFFIX = "_fp8"
 
-FAMILIES = ("gemm", "wgrad", "quantize", "act_quant")
+FAMILIES = ("gemm", "gemm_quant", "wgrad", "quantize", "act_quant")
 PRECISIONS = ("bf16", "fp8")
 
 
@@ -106,7 +114,7 @@ class OpKey:
     """One operator of the registry: an operation family at an operand
     precision.  Hashable; accepted anywhere as a plain ``(family,
     precision)`` tuple."""
-    family: str      # "gemm" | "wgrad" | "quantize" | "act_quant"
+    family: str      # "gemm" | "gemm_quant" | "wgrad" | "quantize" | "act_quant"
     precision: str   # "bf16" | "fp8"
 
     def __post_init__(self):
@@ -465,12 +473,16 @@ def backend_ignores_tiles(backend: Optional[str] = "auto") -> bool:
 
 
 def _plan_tile_frozenset(uses_plan: bool) -> "frozenset[str]":
+    # the tile-free view keeps its historical GEMM/wgrad contents — the
+    # quantize-flavoured families (whose ref entries are trivially
+    # tile-free) stay out of the back-compat frozenset
     names = set()
     for key, table in _OPERATORS.items():
         for name, spec in table.items():
             if (spec.uses_plan if uses_plan
                     else (not spec.uses_tiles
-                          and key.family not in ("quantize", "act_quant"))):
+                          and key.family not in ("gemm_quant", "quantize",
+                                                 "act_quant"))):
                 names.add(_display(key, name))
     return frozenset(names)
 
@@ -683,6 +695,78 @@ register_operator(
     run=_run_bf16_ragged)
 
 
+# ---- (gemm_quant, fp8): the quantizing-epilogue producer ------------------
+
+def _run_gemm_quant_pallas(a8, sa, b8, sb, gs, *, num_groups, config, plan,
+                           interpret):
+    return gmm_pallas_quant(a8, sa, b8, sb, gs, num_groups=num_groups,
+                            block_m=config.block_m, block_n=config.block_n,
+                            block_k=config.block_k,
+                            out_dtype=config.out_dtype,
+                            interpret=interpret, plan=plan)
+
+
+def _compose_gemm_quant(gemm_name):
+    """Unfused composition: run the same-named ``(gemm, fp8)`` entry, then
+    the reference tilewise quantizer on its f32 upcast.  Keeps the
+    backend matrix total — every backend that can GEMM can gemm_quant —
+    and defines the rounding point the fused kernel matches bitwise."""
+    def run(a8, sa, b8, sb, gs, *, num_groups=None, config=None, plan=None,
+            **_):
+        y = _OPERATORS[OpKey("gemm", "fp8")][gemm_name].run(
+            a8, sa, b8, sb, gs, num_groups=num_groups, config=config,
+            plan=plan)
+        return _ref.quantize_tilewise_ref(y.astype(jnp.float32))
+    return run
+
+
+def _run_gemm_quant_ref(a8, sa, b8, sb, gs, *, config, **_):
+    y = gmm_xla(a8, sa, b8, sb, gs, out_dtype=config.out_dtype)
+    return _ref.quantize_tilewise_ref(y.astype(jnp.float32))
+
+
+register_operator(
+    ("gemm_quant", "fp8"), "pallas",
+    description="compiled Pallas TPU kernel: grouped GEMM + fused 1x128 "
+                "quantizing epilogue (fp8 payload + scales emitted "
+                "directly; no bf16 output write)",
+    available=_avail_tpu,
+    run=lambda *a, **kw: _run_gemm_quant_pallas(*a, interpret=False, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("gemm_quant", "fp8"), "pallas_interpret",
+    description="quantizing-epilogue kernel in interpret mode — "
+                "CPU-verifiable, bit-identical to 'pallas'",
+    available=_avail_always,
+    run=lambda *a, **kw: _run_gemm_quant_pallas(*a, interpret=True, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("gemm_quant", "fp8"), "xla_ragged",
+    description="unfused composition: xla_ragged GEMM then reference "
+                "tilewise quantize",
+    available=_avail_ragged_dot,
+    run=_compose_gemm_quant("xla_ragged"))
+register_operator(
+    ("gemm_quant", "fp8"), "xla_exact",
+    description="unfused composition: xla_exact GEMM then reference "
+                "tilewise quantize",
+    available=_avail_ragged_dot,
+    run=_compose_gemm_quant("xla_exact"))
+register_operator(
+    ("gemm_quant", "fp8"), "padded_baseline",
+    description="unfused composition: padded-baseline GEMM then reference "
+                "tilewise quantize (the baseline fuses nothing)",
+    available=_avail_always,
+    run=_compose_gemm_quant("padded_baseline"),
+    uses_tiles=True)       # block_m drives the inner padding
+register_operator(
+    ("gemm_quant", "fp8"), "ref",
+    description="unfused dequantize-GEMM + reference quantize — always "
+                "available",
+    available=_avail_always,
+    run=_run_gemm_quant_ref)
+
+
 # ---- (wgrad, bf16): the ragged-contraction orientation --------------------
 
 def _run_pallas_wgrad(x, dy, gs, *, num_groups, config, plan, interpret):
@@ -833,13 +917,15 @@ register_operator(
 
 # ---- (act_quant, fp8): the fused activation epilogue ----------------------
 
-def _run_act_quant_pallas(g, u=None, *, act, config, interpret, **_):
+def _run_act_quant_pallas(g, u=None, *, act, config, interpret,
+                          s_g=None, s_u=None, **_):
     kw = {} if config is None else {"block_m": config.block_m}
-    return act_quantize_pallas(g, u, act=act, interpret=interpret, **kw)
+    return act_quantize_pallas(g, u, s_g=s_g, s_u=s_u, act=act,
+                               interpret=interpret, **kw)
 
 
-def _run_act_quant_ref(g, u=None, *, act, **_):
-    return _ref.act_quantize_ref(g, u, act)
+def _run_act_quant_ref(g, u=None, *, act, s_g=None, s_u=None, **_):
+    return _ref.act_quantize_ref(g, u, act, s_g=s_g, s_u=s_u)
 
 
 register_operator(
@@ -913,6 +999,42 @@ def grouped_gemm_fp8(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
         cfg = cfg.with_(out_dtype=jnp.bfloat16)
     key = OpKey("gemm", "fp8")
     name = resolve(key, cfg.backend)
+    return _OPERATORS[key][name].run(
+        a_fp8, s_a, b_fp8, s_b, group_sizes, num_groups=num_groups,
+        config=cfg, plan=plan)
+
+
+def grouped_gemm_quant(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
+                       backend: Optional[str] = None,
+                       num_groups: Optional[int] = None,
+                       config: Optional[KernelConfig] = None,
+                       out_dtype=None,
+                       plan: Optional[TilePlan] = None):
+    """Grouped GEMM with a fused 1x128 quantizing epilogue through the
+    ``(gemm_quant, fp8)`` operator: returns ``(q[M, N] fp8e4m3,
+    s[M, N/128] f32)`` instead of the materialized product — the
+    producer's output is already the next GEMM's operand.
+
+    ``out_dtype`` (default bf16) is the *intermediate rounding* dtype:
+    the accumulator is rounded through it before the amax/scale step, so
+    the result is bitwise what ``quantize_tilewise(grouped_gemm_fp8(...)
+    .astype(f32))`` produces — fusion changes traffic, not values.  Tail
+    rows beyond ``sum(group_sizes)`` come back as payload 0 / scale 1
+    (the quantized image of the zero-fill contract).
+
+    Same tile-fallback semantics as :func:`grouped_gemm_fp8`'s plan
+    consumers: an auto-resolved kernel whose tile shapes don't divide
+    (K, N) falls back to the unfused composition entries; an explicit
+    request raises.
+    """
+    cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
+    if cfg.out_dtype is None:
+        cfg = cfg.with_(out_dtype=jnp.bfloat16)
+    num_groups = num_groups if num_groups is not None else b_fp8.shape[0]
+    key = OpKey("gemm_quant", "fp8")
+    name = resolve(key, cfg.backend,
+                   tile=(cfg, a_fp8.shape[0], a_fp8.shape[1],
+                         b_fp8.shape[2]))
     return _OPERATORS[key][name].run(
         a_fp8, s_a, b_fp8, s_b, group_sizes, num_groups=num_groups,
         config=cfg, plan=plan)
@@ -1056,7 +1178,8 @@ def quantize_tilewise(x, *, backend: Optional[str] = None,
 
 def act_quantize(g, u=None, *, act: str = "silu_mul",
                  backend: Optional[str] = None,
-                 config: Optional[KernelConfig] = None):
+                 config: Optional[KernelConfig] = None,
+                 s_g=None, s_u=None):
     """Fused activation -> 1x128 fp8 quantization through the
     ``(act_quant, fp8)`` operator.
 
@@ -1065,6 +1188,12 @@ def act_quantize(g, u=None, *, act: str = "silu_mul",
     None).  Returns ``(q[M, K] fp8e4m3, s[M, K/128] f32)`` — the exact
     :func:`quantize_tilewise` output contract applied to the activation,
     so every existing GEMM consumer accepts it unchanged.
+
+    With ``s_g`` (and ``s_u``) the operands are fp8 payloads + 1x128
+    scales from the quantizing-epilogue producer
+    (:func:`grouped_gemm_quant`): they dequantize on load inside the
+    kernel, closing the fp8 hot path with no bf16 intermediate on either
+    side of the activation.
 
     ``config`` routes an autotuned tile height (``op="act_quant"``) into
     the kernel's ``block_m``; the output is tile-height-independent.
@@ -1080,8 +1209,9 @@ def act_quantize(g, u=None, *, act: str = "silu_mul",
     except BackendUnavailableError:
         if explicit:
             raise
-        return _ref.act_quantize_ref(g, u, act)
-    return _OPERATORS[key][name].run(g, u, act=act, config=config)
+        return _ref.act_quantize_ref(g, u, act, s_g=s_g, s_u=s_u)
+    return _OPERATORS[key][name].run(g, u, act=act, config=config,
+                                     s_g=s_g, s_u=s_u)
 
 
 def quantize_blockwise(w, *, backend: Optional[str] = None):

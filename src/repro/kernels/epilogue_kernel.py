@@ -40,8 +40,27 @@ def _act_f32(g, u, act):
     raise ValueError(f"unknown activation {act!r}; expected {ACTIVATIONS}")
 
 
-def _epilogue_kernel(*refs, kb, act):
-    if act == "silu_mul":
+def _dequant_rows(x, s):
+    """In-kernel 1x128 tilewise dequant: x [bm, k] fp8, s [bm, k/128] f32."""
+    bm, k = x.shape
+    kb = k // QUANT_BLOCK
+    tiles = x.astype(jnp.float32).reshape(bm, kb, QUANT_BLOCK)
+    return (tiles * s[..., None]).reshape(bm, k)
+
+
+def _epilogue_kernel(*refs, kb, act, dequant):
+    if dequant:
+        # fused-producer inputs: the gate/up GEMMs emitted fp8 + 1x128
+        # scales directly, so the operands dequantize on load — the bf16
+        # g/u never existed anywhere
+        if act == "silu_mul":
+            g_ref, sg_ref, u_ref, su_ref, q_ref, s_ref = refs
+            h = _act_f32(_dequant_rows(g_ref[...], sg_ref[...]),
+                         _dequant_rows(u_ref[...], su_ref[...]), act)
+        else:
+            g_ref, sg_ref, q_ref, s_ref = refs
+            h = _act_f32(_dequant_rows(g_ref[...], sg_ref[...]), None, act)
+    elif act == "silu_mul":
         g_ref, u_ref, q_ref, s_ref = refs
         h = _act_f32(g_ref[...], u_ref[...], act)
     else:
@@ -59,9 +78,18 @@ def _epilogue_kernel(*refs, kb, act):
 @functools.partial(jax.jit,
                    static_argnames=("act", "block_m", "interpret"))
 def act_quantize_pallas(g: jax.Array, u: jax.Array | None = None, *,
+                        s_g: jax.Array | None = None,
+                        s_u: jax.Array | None = None,
                         act: str = "silu_mul", block_m: int = 256,
                         interpret: bool = False):
-    """g (and u for silu_mul): [M, K] f32/bf16, K % 128 == 0.
+    """g (and u for silu_mul): [M, K], K % 128 == 0.
+
+    Two input modes:
+      * bf16/f32 operands (``s_g``/``s_u`` absent) — the PR 6 contract.
+      * fp8 operands with 1x128 scales (``s_g`` and, for silu_mul, ``s_u``
+        each ``[M, K/128]`` f32) — the fused-producer hot path: operands
+        dequantize on load inside the kernel, so the activation runs on
+        exactly the values the producer GEMM's quantizing epilogue kept.
 
     Returns ``(q[M, K] fp8e4m3, s[M, K/128] f32)`` — the same contract as
     ``quantize_tilewise_pallas`` applied to the activation output.
@@ -75,18 +103,38 @@ def act_quantize_pallas(g: jax.Array, u: jax.Array | None = None, *,
             raise ValueError(f"g {g.shape} and u {u.shape} must match")
     elif u is not None:
         raise ValueError(f"act={act!r} is unary; got a second operand")
+    dequant = s_g is not None
+    if dequant and u is not None and s_u is None:
+        raise ValueError("fp8 inputs need scales for both operands "
+                         "(got s_g but not s_u)")
+    if not dequant and s_u is not None:
+        raise ValueError("got s_u without s_g")
     m, k = g.shape
     if k % QUANT_BLOCK != 0:
         raise ValueError(f"K={k} must be a multiple of {QUANT_BLOCK}")
     kb = k // QUANT_BLOCK
+    if dequant:
+        for nm, sc in (("s_g", s_g), ("s_u", s_u)):
+            if sc is not None and sc.shape != (m, kb):
+                raise ValueError(
+                    f"{nm} has shape {sc.shape}; fp8 operands of shape "
+                    f"{(m, k)} need 1x128 scales of shape {(m, kb)}")
     block_m = min(block_m, max(8, m))
     grid = ((m + block_m - 1) // block_m,)
-    operands = (g,) if u is None else (g, u)
+    if dequant:
+        operands = (g, s_g) if u is None else (g, s_g, u, s_u)
+        in_specs = []
+        for op in operands:
+            cols = k if op.shape[1] == k else kb
+            in_specs.append(pl.BlockSpec((block_m, cols), lambda i: (i, 0)))
+    else:
+        operands = (g,) if u is None else (g, u)
+        in_specs = [pl.BlockSpec((block_m, k), lambda i: (i, 0))
+                    for _ in operands]
     return pl.pallas_call(
-        functools.partial(_epilogue_kernel, kb=kb, act=act),
+        functools.partial(_epilogue_kernel, kb=kb, act=act, dequant=dequant),
         grid=grid,
-        in_specs=[pl.BlockSpec((block_m, k), lambda i: (i, 0))
-                  for _ in operands],
+        in_specs=in_specs,
         out_specs=[
             pl.BlockSpec((block_m, k), lambda i: (i, 0)),
             pl.BlockSpec((block_m, kb), lambda i: (i, 0)),

@@ -49,6 +49,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro import compat
+from repro.kernels.quant_kernel import FP8_MAX
 from repro.kernels.plan import (  # noqa: F401  (metadata lives in plan.py;
     QUANT_BLOCK,                   # re-exported here for pre-plan callers)
     KernelConfig,
@@ -70,23 +71,12 @@ def validate_kernel_config(m, k, n, block_m, block_n, block_k):
                  block_k=block_k).validate(m, k, n)
 
 
-def _gmm_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,  # prefetch
-                a_ref, sa_ref, b_ref, sb_ref,                      # VMEM in
-                out_ref,                                           # VMEM out
-                acc_ref,                                           # scratch
-                *, block_m, block_n, block_k, k_steps, num_groups,
-                out_dtype):
-    n_i = pl.program_id(0)
-    t = pl.program_id(1)
-    k_i = pl.program_id(2)
-
-    g = group_ids_ref[t]
-    m_tile = m_tile_ids_ref[t]
-
-    @pl.when(k_i == 0)
-    def _zero_acc():
-        acc_ref[...] = jnp.zeros_like(acc_ref)
-
+def _accumulate_visit(a_ref, sa_ref, b_ref, sb_ref, acc_ref, *,
+                      n_i, k_i, block_m, block_n, block_k):
+    """One visit's MXU work: the fine-grained-rescaled partial products of
+    this (m_tile, n_i, k_i) step accumulated into the f32 scratch.  Shared
+    by the plain and the quantizing-epilogue kernels — the visit machinery
+    is identical, only the store phase differs."""
     # MXU work on the full, always-aligned tile (rows of a neighbouring
     # group compute garbage that the masked store below discards — the
     # cost-equivalent of the paper's redundant overlapping TMA write).
@@ -106,6 +96,28 @@ def _gmm_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,  # prefetch
         pj = jax.lax.dot(aj, bj, preferred_element_type=jnp.float32)
         col_scale = jnp.repeat(sb[j], QUANT_BLOCK, axis=0)     # (bn,)
         acc_ref[...] += pj * sa[:, j][:, None] * col_scale[None, :]
+
+
+def _gmm_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,  # prefetch
+                a_ref, sa_ref, b_ref, sb_ref,                      # VMEM in
+                out_ref,                                           # VMEM out
+                acc_ref,                                           # scratch
+                *, block_m, block_n, block_k, k_steps, num_groups,
+                out_dtype):
+    n_i = pl.program_id(0)
+    t = pl.program_id(1)
+    k_i = pl.program_id(2)
+
+    g = group_ids_ref[t]
+    m_tile = m_tile_ids_ref[t]
+
+    @pl.when(k_i == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate_visit(a_ref, sa_ref, b_ref, sb_ref, acc_ref,
+                      n_i=n_i, k_i=k_i, block_m=block_m, block_n=block_n,
+                      block_k=block_k)
 
     @pl.when(k_i == k_steps - 1)
     def _store():
@@ -235,4 +247,177 @@ def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
         plan.total_rows() > 0,
         lambda go, gi, mi: _run_kernel(go, gi, mi),
         lambda go, gi, mi: jnp.zeros((m, n), out_dtype),
+        plan.group_offsets, plan.group_ids, plan.m_tile_ids)
+
+
+def _gmm_quant_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
+                      a_ref, sa_ref, b_ref, sb_ref,                # VMEM in
+                      q_ref, s_ref,                                # VMEM out
+                      acc_ref,                                     # scratch
+                      *, block_m, block_n, block_k, k_steps, num_groups,
+                      out_dtype):
+    """Quantizing-epilogue twin of :func:`_gmm_kernel`.
+
+    Identical visit machinery; the store phase rounds the accumulator
+    through ``out_dtype`` (so the payload is bitwise what the unfused
+    GEMM -> quantize_tilewise composition produces), computes the per-row
+    amax over each 128-wide N quant tile, and emits the fp8 payload plus
+    the 1x128 scales directly — the bf16 output never exists.  The masked
+    RMW extends to both outputs: unowned tail rows get payload 0 and
+    scale 1, exactly what quantizing a zero-filled row yields, so the
+    zero-fill contract survives fusion.
+    """
+    n_i = pl.program_id(0)
+    t = pl.program_id(1)
+    k_i = pl.program_id(2)
+
+    g = group_ids_ref[t]
+    m_tile = m_tile_ids_ref[t]
+
+    @pl.when(k_i == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    _accumulate_visit(a_ref, sa_ref, b_ref, sb_ref, acc_ref,
+                      n_i=n_i, k_i=k_i, block_m=block_m, block_n=block_n,
+                      block_k=block_k)
+
+    @pl.when(k_i == k_steps - 1)
+    def _store():
+        start = group_offsets_ref[g]
+        end = group_offsets_ref[g + 1]
+        total = group_offsets_ref[num_groups]
+        # per-ROW masks (bm, 1): the amax reduction is along N, so row
+        # ownership decides both the payload columns and the scale columns
+        rows = m_tile * block_m + jax.lax.broadcasted_iota(
+            jnp.int32, (block_m, 1), 0)
+        owned = (rows >= start) & (rows < end)
+        unowned = rows >= total
+        # round through out_dtype first: the unfused composition stores the
+        # GEMM output in out_dtype and quantizes its f32 upcast — matching
+        # that rounding point is what makes fused-vs-unfused bitwise
+        h = acc_ref[...].astype(out_dtype).astype(jnp.float32)
+        nq = block_n // QUANT_BLOCK
+        tiles = h.reshape(block_m, nq, QUANT_BLOCK)
+        amax = jnp.max(jnp.abs(tiles), axis=-1)                  # (bm, nq)
+        scale = jnp.where(amax > 0, amax / FP8_MAX, 1.0)
+        qv = (tiles / scale[..., None]).reshape(block_m, block_n)
+        # payload select in f32, then one cast: fp8->f32->fp8 on the
+        # preserved columns is lossless, and the owned columns round
+        # exactly once (same as the standalone quantize kernel)
+        prev_q = q_ref[...].astype(jnp.float32)
+        q_ref[...] = jnp.where(
+            owned, qv,
+            jnp.where(unowned, jnp.zeros_like(qv), prev_q)).astype(q_ref.dtype)
+        prev_s = s_ref[...]
+        s_ref[...] = jnp.where(
+            owned, scale, jnp.where(unowned, jnp.ones_like(scale), prev_s))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype",
+                     "interpret", "num_groups"))
+def gmm_pallas_quant(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
+                     s_b: jax.Array, group_sizes: jax.Array, *,
+                     num_groups: int | None = None,
+                     block_m: int = 128, block_n: int = 128,
+                     block_k: int = 128,
+                     out_dtype: Any = jnp.bfloat16, interpret: bool = False,
+                     plan: TilePlan | None = None):
+    """Padding-free fp8 grouped GEMM with a fused 1x128 quantizing epilogue.
+
+    Same contract as :func:`gmm_pallas`, but instead of materializing the
+    ``[M, N] out_dtype`` product it emits the DeepSeek-recipe quantized
+    form directly from the epilogue:
+
+    returns ``(q, s)``:
+      q: [M, N]      fp8 e4m3 — ``out_dtype``-rounded product / scale
+      s: [M, N/128]  f32      — per-row 1x128 tile scales
+
+    ``out_dtype`` is the *intermediate rounding* dtype: the accumulator is
+    rounded through it before the amax/scale computation, so the result is
+    bitwise identical to ``quantize_tilewise(gmm_pallas(...).astype(f32))``.
+    Tail rows in ``[sum(group_sizes), M)`` come back as payload 0 /
+    scale 1 — what quantizing the unfused path's zero-filled tail yields —
+    preserving the zero-fill contract for downstream consumers.
+    """
+    m, k = a_fp8.shape
+    g, k2, n = b_fp8.shape
+    if k != k2:
+        raise ValueError(
+            f"A and B disagree on K: a_fp8 is [M={m}, K={k}] but b_fp8 is "
+            f"[G={g}, K={k2}, N={n}]")
+    num_groups = num_groups or g
+    validate_kernel_config(m, k, n, block_m, block_n, block_k)
+    kb = s_a.shape[1]
+    expected_kb = (k + QUANT_BLOCK - 1) // QUANT_BLOCK
+    if kb != expected_kb:
+        raise ValueError(
+            f"s_a has {kb} scale columns but K={k} needs "
+            f"ceil(K/{QUANT_BLOCK}) = {expected_kb} (s_a shape "
+            f"{s_a.shape}, a_fp8 shape {a_fp8.shape})")
+    nb = n // QUANT_BLOCK
+    q_dtype = a_fp8.dtype
+
+    if m == 0:
+        return (jnp.zeros((0, n), q_dtype), jnp.ones((0, nb), jnp.float32))
+
+    if plan is None:
+        plan = make_tile_plan(group_sizes, m, block_m=block_m,
+                              num_groups=num_groups)
+    else:
+        plan.check_against(m, block_m, num_groups)
+    k_steps = k // block_k
+    nq = block_n // QUANT_BLOCK
+
+    grid = (n // block_n, plan.max_visits, k_steps)
+
+    kernel = functools.partial(
+        _gmm_quant_kernel, block_m=block_m, block_n=block_n, block_k=block_k,
+        k_steps=k_steps, num_groups=num_groups, out_dtype=out_dtype)
+
+    def _run_kernel(group_offsets, group_ids, m_tile_ids):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=3,
+                grid=grid,
+                in_specs=[
+                    pl.BlockSpec((block_m, block_k),
+                                 lambda n_i, t, k_i, go, gi, mi: (mi[t], k_i)),
+                    pl.BlockSpec((block_m, kb),
+                                 lambda n_i, t, k_i, go, gi, mi: (mi[t], 0)),
+                    pl.BlockSpec((1, block_k, block_n),
+                                 lambda n_i, t, k_i, go, gi, mi: (gi[t], k_i, n_i)),
+                    pl.BlockSpec((1, kb, s_b.shape[2]),
+                                 lambda n_i, t, k_i, go, gi, mi: (gi[t], 0, 0)),
+                ],
+                out_specs=[
+                    # fp8 payload tile — same walk as the plain kernel's out
+                    pl.BlockSpec((block_m, block_n),
+                                 lambda n_i, t, k_i, go, gi, mi: (mi[t], n_i)),
+                    # 1x128 scales: nq columns per N step, same M-tile walk
+                    pl.BlockSpec((block_m, nq),
+                                 lambda n_i, t, k_i, go, gi, mi: (mi[t], n_i)),
+                ],
+                scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+            ),
+            out_shape=[
+                jax.ShapeDtypeStruct((m, n), q_dtype),
+                jax.ShapeDtypeStruct((m, nb), jnp.float32),
+            ],
+            compiler_params=compat.tpu_compiler_params(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(group_offsets, group_ids, m_tile_ids, a_fp8, s_a, b_fp8, s_b)
+
+    # all-empty schedule: payload 0 / scale 1 everywhere — bitwise what
+    # quantizing the unfused path's all-zero output produces
+    return jax.lax.cond(
+        plan.total_rows() > 0,
+        lambda go, gi, mi: _run_kernel(go, gi, mi),
+        lambda go, gi, mi: (jnp.zeros((m, n), q_dtype),
+                            jnp.ones((m, nb), jnp.float32)),
         plan.group_offsets, plan.group_ids, plan.m_tile_ids)

@@ -26,6 +26,7 @@ from repro.kernels.dispatch import (        # noqa: F401  (re-exports)
     grouped_gemm,
     grouped_gemm_bf16,
     grouped_gemm_fp8,
+    grouped_gemm_quant,
     grouped_gemm_wgrad,
     grouped_gemm_wgrad_fp8,
     make_tile_plan,

@@ -68,6 +68,13 @@ class KernelConfig:
     # "fp8" (arXiv 2505.20524's all-fp8 step: x and dy arrive as fp8 with
     # their 1x128 tile scales, dequantized per visit inside the kernel)
     wgrad_precision: str = "bf16"
+    # route the fp8 FFN's gate/up GEMMs through the quantizing-epilogue
+    # producer (``op="gemm_quant"``): the GEMMs emit fp8 + 1x128 scales
+    # directly and the activation epilogue dequantizes on load, so the
+    # bf16 g/u intermediates never exist.  Off by default — the fused
+    # recipe quantizes g/u once more than the bf16-residual recipe, an
+    # e4m3-relative-error tolerance delta (see core.grouped_gemm)
+    fuse_producer: bool = False
 
     def __post_init__(self):
         # normalize out_dtype so configs built from jnp scalar types and
@@ -113,7 +120,8 @@ class KernelConfig:
                 "block_k": self.block_k, "backend": self.backend,
                 "out_dtype": (None if self.out_dtype is None
                               else jnp.dtype(self.out_dtype).name),
-                "wgrad_precision": self.wgrad_precision}
+                "wgrad_precision": self.wgrad_precision,
+                "fuse_producer": self.fuse_producer}
 
     @classmethod
     def from_dict(cls, d: dict) -> "KernelConfig":
@@ -121,7 +129,8 @@ class KernelConfig:
         return cls(block_m=int(d["block_m"]), block_n=int(d["block_n"]),
                    block_k=int(d["block_k"]), backend=d.get("backend"),
                    out_dtype=None if name is None else jnp.dtype(name),
-                   wgrad_precision=d.get("wgrad_precision", "bf16"))
+                   wgrad_precision=d.get("wgrad_precision", "bf16"),
+                   fuse_producer=bool(d.get("fuse_producer", False)))
 
     @classmethod
     def default(cls, device_kind: Optional[str] = None) -> "KernelConfig":
@@ -433,6 +442,11 @@ def shared_plan(group_sizes: jax.Array, m: int, *,
 
 # block_m sweeps the paper's log2 descriptor axis; the (block_n, block_k)
 # cross stays small — one 128-lane output tile or a double-wide variant.
+# ONE pool serves every autotune op family (the keys of ``_AUTOTUNE_OPS``
+# below — gemm/decode/wgrad/wgrad_fp8/quantize/act_quant/gemm_quant, i.e.
+# the registry-derived family list, not a hardcoded enumeration): each op
+# ranks the same candidates by its own roofline terms and caches the
+# winner under its own key.
 #
 # The decode-specialized entries (block_m=8/16) extend the descriptor axis
 # down to serving's tiny-M regime: a decode step's grouped GEMM has
@@ -521,23 +535,33 @@ def _eff_rows(block_m: int) -> int:
 
 
 def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
-                    spec: Optional[DeviceSpec] = None) -> float:
+                    spec: Optional[DeviceSpec] = None,
+                    quant_output: bool = False) -> float:
     """Roofline estimate of one grouped GEMM under ``config``: max of the
     compute and memory terms, with the visit-inflation the plan implies
     (worst case: every group boundary splits a tile, +G-1 visits).
     Compute charges MXU occupancy (``_eff_rows``): a sub-128-row tile
-    takes a full MXU pass; memory charges the bytes actually moved."""
+    takes a full MXU pass; memory charges the bytes actually moved.
+
+    ``quant_output`` models the quantizing-epilogue variant
+    (``op="gemm_quant"``): the bf16 C flush is replaced by the fp8
+    payload + f32 1x128 scale rows — half the output bytes, same
+    compute."""
     spec = spec or device_spec()
     bm, bn = config.block_m, config.block_n
     num_tiles = -(-m // bm)
     visits = num_tiles + max(g - 1, 0)
     n_steps = -(-n // bn)
     kb = -(-k // QUANT_BLOCK)
+    nb = -(-n // QUANT_BLOCK)
     # every visit computes a full (bm, k) x (k, n) tile row
     flops = 2.0 * visits * _eff_rows(bm) * k * n
     a_bytes = visits * n_steps * bm * (k + 4 * kb)     # fp8 A + f32 S_A
     b_bytes = visits * k * n                           # fp8 B per visit
-    c_bytes = num_tiles * bm * n * 2                   # bf16 C flush
+    if quant_output:
+        c_bytes = num_tiles * bm * (n + 4 * nb)        # fp8 C + f32 scales
+    else:
+        c_bytes = num_tiles * bm * n * 2               # bf16 C flush
     return max(flops / spec.peak_flops,
                (a_bytes + b_bytes + c_bytes) / spec.hbm_bw)
 
@@ -631,8 +655,15 @@ def _m_bucket(m: int) -> int:
 
 def cache_key(device_kind: str, backend: str, m: int, k: int, n: int,
               g: int, op: str = "gemm") -> str:
-    # the forward orientation keeps the historical key format so existing
-    # caches stay valid; other op families (wgrad) get a suffix
+    """Cache key for one (device, backend, shape-class, op) selection.
+
+    ``op`` is any key of :data:`_AUTOTUNE_OPS` — the registry-derived
+    family list (currently gemm, decode, wgrad, wgrad_fp8, quantize,
+    act_quant, gemm_quant; new dispatch families join by adding an entry
+    there, never by editing this function).  The forward-GEMM orientation
+    keeps the historical suffix-free key format so existing caches stay
+    valid; every other op appends ``|<op>``.
+    """
     suffix = "" if op == "gemm" else f"|{op}"
     return f"{device_kind}|{backend}|M{_m_bucket(m)}|K{k}|N{n}|G{g}{suffix}"
 
@@ -680,10 +711,14 @@ def clear_cache_memo() -> None:
 # Autotuner: measured pool selection on the live backend
 # ---------------------------------------------------------------------------
 
-# autotune op family -> (dispatch OpKey, display suffix for cache keys)
+# autotune op family -> dispatch OpKey.  THE authoritative family list:
+# cache_key suffixes, candidate legality, and the cost-model switch in
+# autotune() all derive from these keys — a new dispatch family plugs in
+# by adding one entry (+ a _measure_candidate branch), nothing else.
 _AUTOTUNE_OPS = {
     "gemm": ("gemm", "fp8"),
     "decode": ("gemm", "fp8"),       # tiny-M serving shapes, decode pool
+    "gemm_quant": ("gemm_quant", "fp8"),  # fused quantizing epilogue
     "wgrad": ("wgrad", "bf16"),
     "wgrad_fp8": ("wgrad", "fp8"),
     "quantize": ("quantize", "fp8"),
@@ -696,7 +731,8 @@ def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
                        seed: int = 0, op: str = "gemm") -> float:
     """Median wall seconds of one operator application under ``config`` on
     random operands (the live-backend measurement behind pool selection):
-    grouped GEMM (``"gemm"``/``"decode"``), ragged wgrad contraction
+    grouped GEMM (``"gemm"``/``"decode"``), its quantizing-epilogue twin
+    (``"gemm_quant"``), ragged wgrad contraction
     (``"wgrad"``/``"wgrad_fp8"``), tilewise quantization (``"quantize"``),
     or the fused activation->quantize epilogue (``"act_quant"``)."""
     import numpy as np
@@ -738,6 +774,15 @@ def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
         def run():
             return dispatch.act_quantize(ga, ua, backend=config.backend,
                                          config=config)
+    elif op == "gemm_quant":
+        a8, sa = ref.quantize_tilewise_ref(
+            jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
+        b8, sb = jax.vmap(ref.quantize_blockwise_ref)(
+            jnp.asarray(rng.standard_normal((g, k, n)), jnp.float32))
+
+        def run():
+            return dispatch.grouped_gemm_quant(a8, sa, b8, sb, gs,
+                                               config=config)
     else:
         a8, sa = ref.quantize_tilewise_ref(
             jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
@@ -770,11 +815,14 @@ def autotune(m: int, k: int, n: int, g: int, *,
              op: str = "gemm") -> KernelConfig:
     """Select a ``KernelConfig`` for the shape class of (M, K, N, G).
 
-    ``op`` picks the operator (a first-class ``OpKey`` of the unified
-    dispatch registry): ``"gemm"`` is the forward/dgrad orientation
-    (ragged M output rows), ``"decode"`` the same orientation restricted
-    to the decode-specialized pool (tiny constant M per serving step;
-    block_m<=16), ``"wgrad"`` the ragged-contraction orientation
+    ``op`` is any key of :data:`_AUTOTUNE_OPS` — the registry-derived
+    family list (a new dispatch family joins by adding an entry there):
+    ``"gemm"`` is the forward/dgrad orientation (ragged M output rows),
+    ``"decode"`` the same orientation restricted to the
+    decode-specialized pool (tiny constant M per serving step;
+    block_m<=16), ``"gemm_quant"`` the quantizing-epilogue producer
+    (same orientation, fp8 + 1x128-scale output — its roofline drops the
+    bf16 output write), ``"wgrad"`` the ragged-contraction orientation
     (``dw[g] = x_g^T @ dy_g``), ``"wgrad_fp8"`` that contraction on fp8
     operands + 1x128 tile scales, ``"quantize"`` the tilewise quantizer's
     tile height, and ``"act_quant"`` the fused activation->quantize
@@ -818,8 +866,11 @@ def autotune(m: int, k: int, n: int, g: int, *,
     # wgrad's output is never transposed — forward/dgrad legality demands
     # both orientations, wgrad only its own; the quantizer has no (K, N)
     # output tile at all (its block_m is pure scheduling)
-    cands = candidate_pool(k, n, pool,
-                           require_transposable=(op in ("gemm", "decode")))
+    # gemm_quant feeds the same FFN whose dgrads run the transposed
+    # orientation under the same config, so it shares gemm's legality
+    cands = candidate_pool(
+        k, n, pool,
+        require_transposable=(op in ("gemm", "decode", "gemm_quant")))
     if op in ("quantize", "act_quant"):
         # entries differing only in (block_n, block_k) are duplicates for
         # the quantizer/epilogue — keep one per tile height
@@ -834,6 +885,9 @@ def autotune(m: int, k: int, n: int, g: int, *,
     spec = device_spec(kind)
     if op in ("gemm", "decode"):
         cost = estimate_cost_s
+    elif op == "gemm_quant":
+        cost = lambda m_, k_, n_, g_, c, s: \
+            estimate_cost_s(m_, k_, n_, g_, c, s, quant_output=True)  # noqa: E731
     elif op == "quantize":
         cost = lambda m_, k_, n_, g_, c, s: \
             estimate_cost_s_quantize(m_, k_, c, s)                # noqa: E731

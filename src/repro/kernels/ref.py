@@ -41,15 +41,25 @@ def quantize_tilewise_ref(a: jax.Array, block: int = QUANT_BLOCK):
 
 
 def act_quantize_ref(g: jax.Array, u: jax.Array | None = None,
-                     act: str = "silu_mul", block: int = QUANT_BLOCK):
+                     act: str = "silu_mul", block: int = QUANT_BLOCK, *,
+                     s_g: jax.Array | None = None,
+                     s_u: jax.Array | None = None):
     """Unfused oracle for the fused activation->quantize epilogue.
 
     Computes the activation in f32 (``silu(g) * u`` or unary ``gelu(g)``)
     and feeds it through :func:`quantize_tilewise_ref`.  The fused Pallas
     kernel performs the identical elementwise f32 ops, so interpret-mode
     comparisons against this oracle can demand bitwise equality.
+
+    With ``s_g`` (and ``s_u``) present the operands are fp8 payloads from
+    the fused-producer GEMM; they dequantize tilewise first, mirroring the
+    kernel's in-register dequant-on-load.
     """
     from repro.kernels.epilogue_kernel import _act_f32
+    if s_g is not None:
+        g = dequantize_tilewise_ref(g, s_g, block)
+    if s_u is not None:
+        u = dequantize_tilewise_ref(u, s_u, block)
     return quantize_tilewise_ref(_act_f32(g, u, act), block)
 
 

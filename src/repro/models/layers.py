@@ -11,7 +11,8 @@ from typing import Any, Optional
 import jax
 import jax.numpy as jnp
 
-from repro.core.grouped_gemm import dense_linear_fp8, dense_linear_fp8_fused
+from repro.core.grouped_gemm import (dense_ffn_fp8, dense_linear_fp8,
+                                     dense_linear_fp8_fused)
 from repro.distributed.context import constrain
 
 
@@ -81,9 +82,21 @@ def mlp(p, x, act: str = "swiglu", *, precision="bf16", backend=None,
         config=None):
     # §Perf I5: activation nonlinearities run in the compute dtype (bf16)
     # — MaxText practice; the f32 upcast doubled MLP elementwise traffic
+    f, d_out = p["w_down"].shape
+    if (precision == "fp8" and config is not None and config.fuse_producer
+            and x.shape[-1] % 128 == 0 and f % 128 == 0 and d_out % 128 == 0):
+        # producer-fused FFN: the gate/up GEMMs quantize in their store
+        # phase, so the whole MLP runs one quantize of x and nothing
+        # wider than fp8 between its three GEMMs
+        if act == "swiglu":
+            y = dense_ffn_fp8(x, p["w_gate"], p["w_up"], p["w_down"],
+                              act="silu_mul", backend=backend, config=config)
+        else:  # gelu
+            y = dense_ffn_fp8(x, None, p["w_up"], p["w_down"], act="gelu",
+                              backend=backend, config=config)
+        return y.astype(x.dtype)
     up = linear(x, p["w_up"], precision=precision, backend=backend,
                 config=config)
-    f, d_out = p["w_down"].shape
     fused = (precision == "fp8" and f % 128 == 0 and d_out % 128 == 0)
     if act == "swiglu":
         gate = linear(x, p["w_gate"], precision=precision, backend=backend,
