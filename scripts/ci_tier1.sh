@@ -66,134 +66,19 @@ rel = (np.abs(np.asarray(gw8) - np.asarray(gw_fp8)).max()
        / max(np.abs(np.asarray(gw_fp8)).max(), 1e-6))
 assert rel < 0.1, f"fp8 wgrad deviates {rel:.3f} from bf16 wgrad"
 print("grad smoke [fp8 wgrad_precision=fp8] OK")
-
-# Quantize-once gate: ONE tilewise quantization of the shared activation
-# buffer serves the MoE gate+up forward, the down projection's silu·mul+
-# quantize runs as a fused (act_quant, fp8) pass (zero standalone
-# quantizes of h), and the backward's fp8 wgrad reuses the residuals
-# instead of re-quantizing.
-from repro.core import moe as moe_mod
-from repro.core import quantization as qz
-from repro.kernels.plan import KernelConfig
-cfg = moe_mod.MoEConfig(num_experts=4, top_k=2, d_model=128, d_ff_expert=256,
-                        precision="fp8", backend="pallas_interpret",
-                        kernel_config=KernelConfig(wgrad_precision="fp8"))
-params = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
-xt = jax.random.normal(jax.random.PRNGKey(1), (32, 128))
-cap = moe_mod._capacity(32 * cfg.top_k, 1, cfg.capacity_factor)
-calls, real = [], qz.quantize_tilewise
-qz.quantize_tilewise = lambda a, **kw: calls.append(a.shape) or real(a, **kw)
-try:
-    jax.grad(lambda p, x: jnp.mean(
-        moe_mod.moe_apply(p, x, cfg)[0].astype(jnp.float32) ** 2),
-        argnums=(0, 1))(params, xt)
-finally:
-    qz.quantize_tilewise = real
-xs_like = [s for s in calls if s == (cap, cfg.d_model)]
-# 4 = the shared xs once (forward) + one dy per GEMM backward (gate, up,
-# down).  The silu·mul activation h is NEVER tilewise-quantized standalone
-# — the fused epilogue emits q+scales in one pass and the fp8 wgrad reuses
-# them as its residual.  (cap, d_model): the xs once + the down dy once.
-assert len(calls) == 4 and len(xs_like) == 2, \
-    f"quantize-once violated: {calls}"
-print("quantize-once count OK")
 EOF
 
-# Producer-fusion gate: with KernelConfig(fuse_producer=True) the gate/up
-# projections run as (gemm_quant, fp8) — the GEMM's store phase emits the
-# fp8 payload + 1x128 scales directly, so g and u are NEVER standalone
-# tilewise-quantized, in the forward OR the backward.  This tightens the
-# PR 6 pin above: same 4 total quantizes over fwd+bwd, but the forward is
-# now exactly ONE (the shared xs) with zero (cap, d_ff)-shaped calls, and
-# the fused path must actually route through grouped_gemm_quant.
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
-import jax, jax.numpy as jnp
-from repro.core import moe as moe_mod
-from repro.core import quantization as qz
-from repro.kernels import dispatch
-from repro.kernels.plan import KernelConfig
-
-cfg = moe_mod.MoEConfig(num_experts=4, top_k=2, d_model=128, d_ff_expert=256,
-                        precision="fp8", backend="pallas_interpret",
-                        kernel_config=KernelConfig(wgrad_precision="fp8",
-                                                   fuse_producer=True))
-params = moe_mod.init_moe_params(jax.random.PRNGKey(0), cfg)
-xt = jax.random.normal(jax.random.PRNGKey(1), (32, 128))
-cap = moe_mod._capacity(32 * cfg.top_k, 1, cfg.capacity_factor)
-
-calls, quant_gemms = [], []
-real_q, real_gq = qz.quantize_tilewise, dispatch.grouped_gemm_quant
-qz.quantize_tilewise = lambda a, **kw: calls.append(a.shape) or real_q(a, **kw)
-dispatch.grouped_gemm_quant = lambda *a, **kw: quant_gemms.append(()) or \
-    real_gq(*a, **kw)
-try:
-    moe_mod.moe_apply(params, xt, cfg)
-    ff_like = [s for s in calls if s == (cap, cfg.d_ff_expert)]
-    # forward: ONE standalone quantize (the shared xs), zero of g/u — the
-    # producer GEMM's epilogue emits their fp8 form in the store phase
-    assert calls == [(cap, cfg.d_model)], \
-        f"fused-producer forward must quantize ONCE (xs): {calls}"
-    assert not ff_like, f"standalone quantize of g/u leaked: {calls}"
-    assert len(quant_gemms) == 2, \
-        f"gate+up must route through grouped_gemm_quant: {len(quant_gemms)}"
-    calls.clear(); quant_gemms.clear()
-    jax.grad(lambda p, x: jnp.mean(
-        moe_mod.moe_apply(p, x, cfg)[0].astype(jnp.float32) ** 2),
-        argnums=(0, 1))(params, xt)
-    # fwd+bwd: xs + the down dy (d_model) and the activation cotangents
-    # dg, du (d_ff) — g/u themselves still never re-quantized
-    assert sorted(calls) == [(cap, cfg.d_model), (cap, cfg.d_model),
-                             (cap, cfg.d_ff_expert), (cap, cfg.d_ff_expert)], \
-        f"fused-producer fwd+bwd quantize floor violated: {calls}"
-finally:
-    qz.quantize_tilewise, dispatch.grouped_gemm_quant = real_q, real_gq
-print("producer-fusion quantize floor OK")
-EOF
-
-# Serving decode gate: one Engine resolves ONE decode-specialized
-# (block_m<=16) config at construction, and a full generate (prefill +
-# >=4 decode steps) builds plan metadata exactly once per phase — the
-# decode loop replays its traced plan every step instead of re-planning.
+# Contract gate: the static-analysis subsystem replaces the historical
+# monkeypatch-count gates (quantize-once, producer-fusion, decode plan
+# discipline) with declarative contracts + registry/AST lint:
+#   layer 1 — jaxpr contracts over grouped_linear{,_fused,_ffn}, moe_apply
+#             and one real Engine generate (REPRO-C01..C06)
+#   layer 2 — operator-registry + tile-pool alignment lint (REPRO-R01..R07)
+#   layer 3 — AST lint over src/repro (REPRO-A01..A03)
+# Fails on any finding not in the checked-in (empty) baseline.
 REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python - <<'EOF'
-import dataclasses
-import jax
-from repro.configs import smoke_config
-from repro.kernels import plan as plan_mod
-from repro.models.model_zoo import make_model, synthetic_batch
-from repro.serve.engine import Engine
-
-cfg = dataclasses.replace(smoke_config("qwen2-moe-a2.7b"),
-                          precision="fp8", gemm_backend="pallas_interpret")
-model = make_model(cfg)
-params = model.init_params(jax.random.PRNGKey(0))
-
-selections, builds = [], []
-real_select, real_meta = plan_mod.decode_config, plan_mod.make_group_metadata
-plan_mod.decode_config = lambda *a, **kw: selections.append(a) or \
-    real_select(*a, **kw)
-plan_mod.make_group_metadata = lambda *a, **kw: builds.append(a) or \
-    real_meta(*a, **kw)
-try:
-    engine = Engine(model, params, max_new_tokens=6, decode_batch_size=2)
-    assert len(selections) == 1, "decode config must resolve ONCE per engine"
-    assert engine.decode_config is not None \
-        and engine.decode_config.block_m <= 16, engine.decode_config
-    batch = synthetic_batch(jax.random.PRNGKey(1), cfg, 16, 2)
-    res = engine.generate(batch, key=jax.random.PRNGKey(42))
-    assert res.tokens.shape == (2, 6)
-    # two builds per phase: the routed experts' plan + the shared-expert
-    # FFN's G=1 plan (the shared FFN runs fp8 since the precision bugfix)
-    assert len(builds) == 4, \
-        f"expected two plan builds per phase (routed+shared), saw {builds}"
-    decode_build = builds[2]
-    assert int(decode_build[2]) == engine.decode_config.block_m, decode_build
-finally:
-    plan_mod.decode_config, plan_mod.make_group_metadata = \
-        real_select, real_meta
-print(f"decode smoke OK: decode_config=bm{engine.decode_config.block_m}, "
-      f"plan builds={len(builds)} (routed+shared per phase)")
-EOF
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m repro.analysis --all --baseline scripts/analysis_baseline.json
 
 # Fused-epilogue gate: the (act_quant, fp8) pass must stay bitwise
 # identical to the jitted unfused composition (activation, then the

@@ -1,0 +1,47 @@
+"""Kernel contract checker: static analysis for the padding-free /
+quantize-once / alignment invariants.
+
+Three layers (``python -m repro.analysis --all`` runs them all):
+
+1. **jaxpr contracts** (:mod:`repro.analysis.contracts`, REPRO-C*) —
+   trace the public fp8 entry points and verify declarative contracts:
+   exact standalone-quantize counts, one TilePlan build per routing
+   decision, zero padding primitives, zero wide fused intermediates.
+2. **registry/alignment lint** (:mod:`repro.analysis.registry_lint`,
+   REPRO-R*) — validate the ``_OPERATORS`` table and the
+   ``CONFIG_POOL``/``DECODE_POOL``/``KernelConfig`` constants.
+3. **AST lint** (:mod:`repro.analysis.ast_lint`, REPRO-A*) — repo rules:
+   no direct kernel calls outside kernels/, no bare asserts in kernel
+   files, no block-shape literals outside kernels/.
+
+This ``__init__`` is import-cheap on purpose: hot-path product modules
+import :mod:`repro.analysis.events` through the package, so nothing here
+may pull in jax or the product modules at import time.
+"""
+from __future__ import annotations
+
+_LAZY = {
+    "events": ("repro.analysis.events", None),
+    "Finding": ("repro.analysis.findings", "Finding"),
+    "RULES": ("repro.analysis.findings", "RULES"),
+    "Contract": ("repro.analysis.contracts", "Contract"),
+    "check_contract": ("repro.analysis.contracts", "check_contract"),
+    "register_contract": ("repro.analysis.contracts", "register_contract"),
+    "run_registered": ("repro.analysis.contracts", "run_registered"),
+    "load_registered": ("repro.analysis.contracts", "load_registered"),
+    "run_registry_lint": ("repro.analysis.registry_lint", "run"),
+    "run_ast_lint": ("repro.analysis.ast_lint", "scan_paths"),
+}
+
+__all__ = sorted(_LAZY)
+
+
+def __getattr__(name):
+    import importlib
+    try:
+        modname, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(f"module 'repro.analysis' has no attribute "
+                             f"{name!r}") from None
+    mod = importlib.import_module(modname)
+    return mod if attr is None else getattr(mod, attr)

@@ -1,0 +1,86 @@
+"""CLI for the kernel contract checker.
+
+    python -m repro.analysis [--contracts] [--registry] [--ast] [--all]
+                             [--paths P ...] [--baseline FILE] [--json]
+                             [--list-rules] [--no-run-contracts]
+
+Exit status 0 iff no findings outside the baseline.  Layers:
+
+* ``--contracts``  — layer 1: jaxpr contracts over the fp8 entry points
+  (includes one real Engine generate unless ``--no-run-contracts``)
+* ``--registry``   — layer 2: operator-registry + tile-pool alignment lint
+* ``--ast``        — layer 3: AST lint over ``--paths`` (default src/repro)
+* ``--all``        — everything (the CI invocation); also the default
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+from repro.analysis import findings as fmod
+
+
+def main(argv=None) -> int:
+    p = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="kernel contract checker (padding-free / "
+                    "quantize-once / alignment invariants)")
+    p.add_argument("--contracts", action="store_true",
+                   help="run layer 1 jaxpr contracts")
+    p.add_argument("--registry", action="store_true",
+                   help="run layer 2 registry/alignment lint")
+    p.add_argument("--ast", action="store_true",
+                   help="run layer 3 AST lint")
+    p.add_argument("--all", action="store_true",
+                   help="run every layer (default when no layer given)")
+    p.add_argument("--paths", nargs="*", default=None,
+                   help="files/dirs for the AST layer (default: src/repro)")
+    p.add_argument("--baseline", default=None,
+                   help="JSON baseline of accepted finding keys")
+    p.add_argument("--json", action="store_true", dest="as_json",
+                   help="emit findings as JSON")
+    p.add_argument("--list-rules", action="store_true",
+                   help="print every rule ID with its rationale and exit")
+    p.add_argument("--no-run-contracts", action="store_true",
+                   help="skip mode='run' contracts (the Engine generate)")
+    args = p.parse_args(argv)
+
+    if args.list_rules:
+        print(fmod.describe_rules())
+        return 0
+
+    if not (args.contracts or args.registry or args.ast):
+        args.all = True
+    if args.all:
+        args.contracts = args.registry = args.ast = True
+
+    findings: "list[fmod.Finding]" = []
+    if args.ast:
+        from repro.analysis import ast_lint
+        findings.extend(ast_lint.scan_paths(args.paths))
+    if args.registry:
+        from repro.analysis import registry_lint
+        findings.extend(registry_lint.run())
+    if args.contracts:
+        from repro.analysis import contracts
+        findings.extend(contracts.run_registered(
+            include_run_mode=not args.no_run_contracts))
+
+    baseline = fmod.load_baseline(args.baseline)
+    live = fmod.filter_baselined(findings, baseline)
+    suppressed = len(findings) - len(live)
+
+    if args.as_json:
+        print(json.dumps({"findings": [f.to_dict() for f in live],
+                          "suppressed": suppressed}, indent=2))
+    else:
+        for f in live:
+            print(f.format())
+        tail = f" ({suppressed} baselined)" if suppressed else ""
+        print(f"repro.analysis: {len(live)} finding(s){tail}")
+    return 1 if live else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,315 @@
+"""Layer 1: jaxpr contracts over the public fp8 entry points.
+
+A :class:`Contract` declares, for one traced path (``grouped_linear``
+forward, ``moe_apply`` fwd+bwd, an Engine generate, ...), the structural
+invariants the paper's recipe promises:
+
+* exact standalone-quantize counts (REPRO-C01) and shape multisets,
+* one TilePlan build per routing decision (REPRO-C02),
+* zero padding primitives on the padding-free path (REPRO-C03),
+* zero wide (non-fp8) materialization of fused intermediates (REPRO-C04),
+* producer-GEMM dispatch counts (REPRO-C05),
+* decode plan discipline (REPRO-C06).
+
+Counts come from the :mod:`repro.analysis.events` bus (product modules
+emit one event per plan build / standalone quantize / producer dispatch /
+decode selection); the padding and wide-intermediate rules walk the
+traced jaxpr.  ``mode="jaxpr"`` contracts trace abstractly with
+``jax.make_jaxpr`` (never cached, no kernel execution — fast enough for
+CI on CPU); ``mode="run"`` contracts execute for real (the Engine path:
+jit with concrete args compiles and runs, exactly like the serving smoke
+it replaced).
+
+Product modules register their contracts at import time
+(:func:`register_contract` at the bottom of ``core/grouped_gemm.py``,
+``core/moe.py``, ``serve/engine.py``); :func:`load_registered` imports
+them.  :func:`check_contract` is the reusable API that replaced the
+monkeypatch-count tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import importlib
+import sys
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+from repro.analysis import events as ev
+from repro.analysis.findings import Finding, relpath
+
+# primitives whose (rank>=2, inexact-dtype) output constitutes padding /
+# copy-for-alignment on the hot path.  rank-1 / integer pads (e.g. the MoE
+# slot-order edge-pad) are bookkeeping, not the paper's padding.
+PADDING_PRIMS = ("pad", "dynamic_update_slice")
+
+# primitives that merely re-label an existing wide value (no new
+# materialization): a stop_gradient/astype of an *input* is not the fused
+# path recomputing the activation wide
+TRANSPARENT_PRIMS = frozenset({"stop_gradient", "convert_element_type",
+                               "copy", "broadcast_in_dim", "reshape",
+                               "squeeze", "transpose"})
+
+# modules whose import registers the repo's contracts
+CONTRACT_MODULES = ("repro.core.grouped_gemm", "repro.core.moe",
+                    "repro.serve.engine")
+
+
+@dataclasses.dataclass(frozen=True)
+class Contract:
+    """Declarative invariants for one traced path.  ``None`` expectation
+    fields are unchecked — removing an expectation demonstrably lets the
+    matching violation through (the coverage property CI pins)."""
+    name: str
+    description: str = ""
+    # () -> (fn, args); deferred so registration stays import-cheap.
+    # None when the contract is only used via check_contract(fn, c, *args).
+    build: "Optional[Callable[[], Tuple[Callable, tuple]]]" = None
+    mode: str = "jaxpr"                 # "jaxpr" | "run"
+    quantize_count: Optional[int] = None        # REPRO-C01
+    quantize_shapes: "Optional[tuple]" = None   # sorted multiset, C01
+    plan_builds: Optional[int] = None           # REPRO-C02
+    forbid_padding: bool = False                # REPRO-C03
+    padding_prims: "tuple" = PADDING_PRIMS
+    forbid_wide_shapes: "tuple" = ()            # REPRO-C04
+    gemm_quant_calls: Optional[int] = None      # REPRO-C05
+    decode_selects: Optional[int] = None        # REPRO-C06
+    # (result, events) -> [messages]; reported under REPRO-C06
+    extra: "Optional[Callable[[Any, list], List[str]]]" = None
+    path: str = ""                      # registration site, for findings
+    line: int = 1
+
+
+CONTRACTS: "dict[str, Contract]" = {}
+_loaded = False
+
+
+def register_contract(name: str, **kw) -> Contract:
+    """Register a named contract (product modules call this at import).
+    The registration site becomes the finding location."""
+    frame = sys._getframe(1)
+    kw.setdefault("path", relpath(frame.f_code.co_filename))
+    kw.setdefault("line", frame.f_lineno)
+    c = Contract(name=name, **kw)
+    CONTRACTS[name] = c
+    return c
+
+
+def load_registered() -> "dict[str, Contract]":
+    """Import the contract-carrying product modules, then return the
+    registry."""
+    global _loaded
+    if not _loaded:
+        for mod in CONTRACT_MODULES:
+            importlib.import_module(mod)
+        _loaded = True
+    return CONTRACTS
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def _sub_jaxprs(eqn):
+    out = []
+    for v in eqn.params.values():
+        vs = v if isinstance(v, (list, tuple)) else (v,)
+        for item in vs:
+            # ClosedJaxpr has .jaxpr; open Jaxpr has .eqns directly
+            if hasattr(item, "jaxpr") and hasattr(item.jaxpr, "eqns"):
+                out.append(item.jaxpr)
+            elif hasattr(item, "eqns") and hasattr(item, "outvars"):
+                out.append(item)
+    return out
+
+
+def iter_eqns(jaxpr):
+    """Every equation of ``jaxpr`` and its sub-jaxprs, EXCEPT the bodies
+    of ``pallas_call`` equations: a kernel body runs on block-shaped refs
+    whose pads/copies are tile-local staging, not hot-path HBM padding."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        if "pallas_call" in eqn.primitive.name:
+            continue
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
+def _is_call_eqn(eqn) -> bool:
+    return bool(_sub_jaxprs(eqn))
+
+
+def _inexact(dtype) -> bool:
+    import jax.numpy as jnp
+    return jnp.issubdtype(dtype, jnp.inexact)
+
+
+def _padding_findings(closed_jaxpr, c: Contract) -> "List[Finding]":
+    findings = []
+    for eqn in iter_eqns(closed_jaxpr.jaxpr):
+        if eqn.primitive.name not in c.padding_prims:
+            continue
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is None or not hasattr(aval, "shape"):
+                continue
+            if eqn.primitive.name == "pad":
+                # a zero-width pad (jnp.pad with all-zero widths, e.g.
+                # the blockwise quantizer's already-aligned case) adds no
+                # elements — XLA elides it; it is not hot-path padding
+                in_aval = getattr(eqn.invars[0], "aval", None)
+                if in_aval is not None \
+                        and tuple(in_aval.shape) == tuple(aval.shape):
+                    continue
+            if len(aval.shape) >= 2 and _inexact(aval.dtype):
+                findings.append(Finding(
+                    "REPRO-C03", c.path, c.line,
+                    f"[{c.name}] padding primitive "
+                    f"'{eqn.primitive.name}' materializes "
+                    f"{aval.dtype.name}{list(aval.shape)} on the "
+                    f"padding-free path",
+                    "the ragged grouped GEMM must consume the unpadded "
+                    "buffer; use the TilePlan schedule, not an aligned "
+                    "copy"))
+    return findings
+
+
+def _wide_findings(closed_jaxpr, c: Contract) -> "List[Finding]":
+    shapes = {tuple(s) for s in c.forbid_wide_shapes}
+    findings = []
+    for eqn in iter_eqns(closed_jaxpr.jaxpr):
+        if _is_call_eqn(eqn) or eqn.primitive.name in TRANSPARENT_PRIMS:
+            continue
+        for v in eqn.outvars:
+            aval = getattr(v, "aval", None)
+            if aval is None or not hasattr(aval, "shape"):
+                continue
+            if (tuple(aval.shape) in shapes and _inexact(aval.dtype)
+                    and aval.dtype.itemsize > 1):
+                findings.append(Finding(
+                    "REPRO-C04", c.path, c.line,
+                    f"[{c.name}] '{eqn.primitive.name}' materializes a "
+                    f"wide {aval.dtype.name}{list(aval.shape)} "
+                    f"intermediate on a fused path",
+                    "the fused epilogue must emit fp8 payload + 1x128 "
+                    "scales directly (act_quantize / grouped_gemm_quant)"
+                ))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# Checking
+# ---------------------------------------------------------------------------
+
+def _count_findings(captured, c: Contract) -> "List[Finding]":
+    findings = []
+    quants = ev.of_kind(captured, "quantize_tilewise")
+    if c.quantize_count is not None and len(quants) != c.quantize_count:
+        shapes = [e.data.get("shape") for e in quants]
+        findings.append(Finding(
+            "REPRO-C01", c.path, c.line,
+            f"[{c.name}] expected exactly {c.quantize_count} standalone "
+            f"quantize_tilewise call(s), traced {len(quants)} "
+            f"(shapes: {shapes})",
+            "share one QuantizedActivation per buffer (quantize-once) "
+            "and let the fused epilogues own g/u/h"))
+    if c.quantize_shapes is not None:
+        got = sorted(tuple(e.data.get("shape", ())) for e in quants)
+        want = sorted(tuple(s) for s in c.quantize_shapes)
+        if got != want:
+            findings.append(Finding(
+                "REPRO-C01", c.path, c.line,
+                f"[{c.name}] standalone-quantize shape multiset "
+                f"{got} != expected {want}",
+                "a shape drift here usually means an activation "
+                "intermediate (g/u/h) is being re-quantized"))
+    builds = ev.count(captured, "plan_build")
+    if c.plan_builds is not None and builds != c.plan_builds:
+        findings.append(Finding(
+            "REPRO-C02", c.path, c.line,
+            f"[{c.name}] expected {c.plan_builds} TilePlan build(s) per "
+            f"routing decision, traced {builds}",
+            "build the plan once (make_tile_plan) and pass it to every "
+            "GEMM sharing the routing's group_sizes"))
+    gq = ev.count(captured, "gemm_quant")
+    if c.gemm_quant_calls is not None and gq != c.gemm_quant_calls:
+        findings.append(Finding(
+            "REPRO-C05", c.path, c.line,
+            f"[{c.name}] expected {c.gemm_quant_calls} grouped_gemm_quant "
+            f"dispatch(es), traced {gq}",
+            "the producer-fused path's gate/up GEMMs must route through "
+            "the (gemm_quant, fp8) operator"))
+    sel = ev.count(captured, "decode_select")
+    if c.decode_selects is not None and sel != c.decode_selects:
+        findings.append(Finding(
+            "REPRO-C06", c.path, c.line,
+            f"[{c.name}] expected {c.decode_selects} decode-config "
+            f"selection(s), observed {sel}",
+            "the Engine resolves its decode pool entry exactly once at "
+            "construction"))
+    return findings
+
+
+def check_contract(fn: Callable, contract: Contract, *args) -> "List[Finding]":
+    """Check ``fn(*args)`` against ``contract`` — the reusable API that
+    replaced the monkeypatch-count CI gates.
+
+    ``mode="jaxpr"``: traces abstractly (``jax.make_jaxpr``; never
+    cached, so the event counts are exact) and walks the jaxpr for the
+    padding / wide-intermediate rules.  ``mode="run"``: executes for
+    real (events only; no jaxpr walk) and passes the result to the
+    contract's ``extra`` checker.
+    """
+    import jax
+    c = contract
+    findings: "List[Finding]" = []
+    with ev.capture() as captured:
+        if c.mode == "run":
+            result = fn(*args)
+            closed = None
+        else:
+            closed = jax.make_jaxpr(fn)(*args)
+            result = None
+    findings.extend(_count_findings(captured, c))
+    if closed is not None:
+        jaxpr_findings = []
+        if c.forbid_padding:
+            jaxpr_findings.extend(_padding_findings(closed, c))
+        if c.forbid_wide_shapes:
+            jaxpr_findings.extend(_wide_findings(closed, c))
+        # a violating primitive typically recurs once per weight/GEMM of
+        # the same path — one finding per distinct message is the signal
+        seen = set()
+        for f in jaxpr_findings:
+            if f.message not in seen:
+                seen.add(f.message)
+                findings.append(f)
+    if c.extra is not None:
+        for msg in c.extra(result, captured):
+            findings.append(Finding("REPRO-C06", c.path, c.line,
+                                    f"[{c.name}] {msg}",
+                                    "see the contract's description"))
+    return findings
+
+
+def run_contract(contract: Contract) -> "List[Finding]":
+    if contract.build is None:
+        raise ValueError(f"contract {contract.name!r} has no build(); use "
+                         "check_contract(fn, contract, *args) directly")
+    fn, args = contract.build()
+    return check_contract(fn, contract, *args)
+
+
+def run_registered(names: "Optional[Sequence[str]]" = None,
+                   include_run_mode: bool = True) -> "List[Finding]":
+    """Run every registered contract (or the named subset).  Set
+    ``include_run_mode=False`` to skip the executing contracts (the
+    Engine generate) when only the fast abstract traces are wanted."""
+    registry = load_registered()
+    if names is None:
+        names = sorted(registry)
+    findings: "List[Finding]" = []
+    for name in names:
+        c = registry[name]
+        if not include_run_mode and c.mode == "run":
+            continue
+        findings.extend(run_contract(c))
+    return findings

@@ -1,0 +1,168 @@
+"""Findings, rule registry, and the checked-in baseline.
+
+Every checker layer (contracts / registry lint / AST lint) reports
+:class:`Finding` records carrying a rule ID, ``file:line``, a message,
+and a fix hint.  CI fails on any finding whose :meth:`Finding.key` is not
+in the checked-in baseline (``scripts/analysis_baseline.json`` — empty on
+a clean tree; the baseline exists so a rule can be tightened before every
+historical violation is fixed, without turning the checker off).
+
+Stdlib-only: imported by the AST linter and the CLI before jax loads.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+from typing import Iterable, List, Optional
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    rule_id: str
+    path: str        # repo-relative where possible
+    line: int        # 1-based; 1 when the rule is module/table-level
+    message: str
+    hint: str = ""
+
+    def key(self) -> str:
+        """Baseline identity: line numbers drift under unrelated edits, so
+        the key is (rule, file, message) — stable across reformatting."""
+        return f"{self.rule_id}|{self.path}|{self.message}"
+
+    def format(self) -> str:
+        s = f"{self.rule_id} {self.path}:{self.line} {self.message}"
+        if self.hint:
+            s += f"\n    hint: {self.hint}"
+        return s
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+# rule ID -> (title, rationale).  The README's "Static analysis & kernel
+# contracts" section mirrors this table; ``--list-rules`` prints it.
+RULES: "dict[str, tuple[str, str]]" = {
+    # ---- layer 1: jaxpr contracts (REPRO-C*) ---------------------------
+    "REPRO-C01": (
+        "standalone-quantize count",
+        "each fp8 path performs an exact number of standalone "
+        "quantize_tilewise calls (quantize-once: fwd=1 for x, fwd+bwd="
+        "{x, dy, dg, du}; never g/u/h — the fused epilogues own those)"),
+    "REPRO-C02": (
+        "one TilePlan build per routing decision",
+        "plan-once/run-many: one make_group_metadata schedule build "
+        "serves every GEMM sharing one routing's group_sizes, forward "
+        "and backward (the paper's configure-once descriptor pool)"),
+    "REPRO-C03": (
+        "padding primitive on the padding-free path",
+        "no pad / dynamic_update_slice of a rank>=2 floating buffer may "
+        "appear in the traced fp8 hot path — eliminating that padding "
+        "is the paper's core claim"),
+    "REPRO-C04": (
+        "wide intermediate on a fused path",
+        "fused forwards must never materialize the activation "
+        "intermediates (h, and for the producer-fused FFN g/u) wider "
+        "than fp8 — the fused epilogue emits payload+scales directly"),
+    "REPRO-C05": (
+        "producer-GEMM routing",
+        "a producer-fused path must dispatch its gate/up GEMMs through "
+        "grouped_gemm_quant exactly as many times as it has producers"),
+    "REPRO-C06": (
+        "decode plan discipline",
+        "an Engine resolves its decode config exactly once, the decode "
+        "pool entry stays block_m<=16, and a full generate builds plan "
+        "metadata once per phase per expert group"),
+    # ---- layer 2: registry / alignment lint (REPRO-R*) ----------------
+    "REPRO-R01": (
+        "fp8 operator without an interpret entry",
+        "every fp8 (family, precision) operator with a compiled Pallas "
+        "entry needs the bit-identical pallas_interpret twin — CPU CI "
+        "proves kernel numerics through it"),
+    "REPRO-R02": (
+        "operator without an always-available entry",
+        "resolve()'s auto-fallback contract requires at least one entry "
+        "whose availability probe passes on any host"),
+    "REPRO-R03": (
+        "wgrad precision-twin gap",
+        "the wgrad family's bf16/fp8 tables must expose the same backend "
+        "names and the historical <name>_fp8 spellings must normalize "
+        "onto the fp8 table"),
+    "REPRO-R04": (
+        "uses_plan/uses_tiles flag inconsistency",
+        "a plan-walking backend necessarily honours tile shapes; Pallas "
+        "GEMM-family entries must consume TilePlans; quantize/act_quant "
+        "entries never do"),
+    "REPRO-R05": (
+        "tile pool misalignment",
+        "every CONFIG_POOL/DECODE_POOL/_DEVICE_DEFAULTS entry follows "
+        "the paper's alignment rules: block_m%8, block_n%128, "
+        "block_k%128 (=> fp8 payload rows are 16-byte aligned), decode "
+        "entries block_m<=16"),
+    "REPRO-R06": (
+        "scale-layout constant drift",
+        "the 1x128 / 128x128 quantization granularity (QUANT_BLOCK=128) "
+        "must agree across plan, ref, and quantization modules — a "
+        "drifted copy silently mis-shapes every scale buffer"),
+    "REPRO-R07": (
+        "operator without contract facts",
+        "every registered OpKey declares its contract facts "
+        "(entry point, padding-free claim, standalone-quantize budget) "
+        "via register_operator_contract, so layer 1 can trace it"),
+    # ---- layer 3: AST lint (REPRO-A*) ----------------------------------
+    "REPRO-A01": (
+        "direct kernel call outside kernels/",
+        "gmm_pallas* / act_quantize_pallas / quantize_tilewise_pallas "
+        "are kernel-internal; all other code must go through the "
+        "dispatch registry so fallback/availability/tile policy applies"),
+    "REPRO-A02": (
+        "bare assert in a kernel file",
+        "python -O strips asserts; kernel-entry shape checks must raise "
+        "ValueError with a shape message"),
+    "REPRO-A03": (
+        "hardcoded block-shape literal outside kernels/",
+        "tile geometry lives in kernels/plan.py (pool + KernelConfig "
+        "defaults) and kernel signatures only; literals elsewhere dodge "
+        "the alignment validation and the autotuner"),
+}
+
+
+def describe_rules() -> str:
+    lines = []
+    for rid, (title, rationale) in RULES.items():
+        lines.append(f"{rid}  {title}\n    {rationale}")
+    return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Baseline
+# ---------------------------------------------------------------------------
+
+def load_baseline(path: Optional[str]) -> "set[str]":
+    if path is None or not os.path.exists(path):
+        return set()
+    with open(path) as f:
+        data = json.load(f)
+    return set(data.get("findings", []))
+
+
+def filter_baselined(findings: Iterable[Finding],
+                     baseline: "set[str]") -> "List[Finding]":
+    return [f for f in findings if f.key() not in baseline]
+
+
+def relpath(path: str, root: Optional[str] = None) -> str:
+    """Repo-relative spelling when the path is under the repo root."""
+    if root is None:
+        root = repo_root()
+    try:
+        rel = os.path.relpath(os.path.abspath(path), root)
+    except ValueError:          # different drive (windows)
+        return path
+    return path if rel.startswith("..") else rel
+
+
+def repo_root() -> str:
+    """The directory holding src/ — derived from this file's location."""
+    here = os.path.abspath(os.path.dirname(__file__))
+    return os.path.dirname(os.path.dirname(os.path.dirname(here)))

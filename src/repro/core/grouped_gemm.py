@@ -642,3 +642,141 @@ def dense_ffn_fp8(x: jax.Array, w_gate: jax.Array | None, w_up: jax.Array,
         w_down[None], gs, act=act, backend=backend, out_dtype=out_dtype,
         config=config, plan=plan, quantized=quantized)
     return y.reshape(*lead, w_down.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (repro.analysis layer 1)
+# ---------------------------------------------------------------------------
+# Declarative invariants for every public fp8 path in this module, checked
+# by ``python -m repro.analysis --contracts`` (and tests/test_analysis.py)
+# via abstract tracing — the replacement for the monkeypatch-count CI
+# gates.  Builders are deferred: registration costs nothing at import.
+
+from repro.analysis.contracts import register_contract as _register_contract
+
+
+def _contract_operands():
+    """Shared example problem: G=3 with an empty group and a ragged tail
+    (sum(gs)=190 < M=256) — the shapes every padding-free claim is about."""
+    import numpy as _np
+    rng = _np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((256, 128)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((3, 128, 128)), jnp.float32)
+    gu = jnp.asarray(rng.standard_normal((2, 256, 256)), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((3, 256, 128)), jnp.float32)
+    gs = jnp.asarray([60, 0, 130], jnp.int32)
+    return x, w, gu, wd, gs
+
+
+def _build_linear_fwd():
+    x, w, _, _, gs = _contract_operands()
+    cfg = KernelConfig(backend="pallas_interpret")
+    return (lambda x, w: grouped_linear(x, w, gs, precision="fp8",
+                                        config=cfg)), (x, w)
+
+
+def _build_linear_grad():
+    x, w, _, _, gs = _contract_operands()
+    cfg = KernelConfig(backend="pallas_interpret")
+
+    def loss(x, w):
+        y = grouped_linear(x, w, gs, precision="fp8", config=cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+    return jax.grad(loss, argnums=(0, 1)), (x, w)
+
+
+def _build_fused_fwd():
+    _, _, gu, wd, gs = _contract_operands()
+    cfg = KernelConfig(backend="pallas_interpret")
+    return (lambda g, u: grouped_linear_fused(g, u, wd, gs, act="silu_mul",
+                                              config=cfg)), (gu[0], gu[1])
+
+
+def _build_fused_grad():
+    _, _, gu, wd, gs = _contract_operands()
+    cfg = KernelConfig(backend="pallas_interpret")
+
+    def loss(g, u, w):
+        y = grouped_linear_fused(g, u, w, gs, act="silu_mul", config=cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+    return jax.grad(loss, argnums=(0, 1, 2)), (gu[0], gu[1], wd)
+
+
+def _build_ffn_fwd():
+    x, _, _, _, gs = _contract_operands()
+    import numpy as _np
+    rng = _np.random.default_rng(1)
+    wg = jnp.asarray(rng.standard_normal((3, 128, 256)), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((3, 128, 256)), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((3, 256, 128)), jnp.float32)
+    cfg = KernelConfig(backend="pallas_interpret")
+    return (lambda x: grouped_linear_ffn(x, wg, wu, wd, gs, act="silu_mul",
+                                         config=cfg)), (x,)
+
+
+def _build_ffn_grad():
+    x, _, _, _, gs = _contract_operands()
+    import numpy as _np
+    rng = _np.random.default_rng(1)
+    wg = jnp.asarray(rng.standard_normal((3, 128, 256)), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((3, 128, 256)), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((3, 256, 128)), jnp.float32)
+    cfg = KernelConfig(backend="pallas_interpret", wgrad_precision="fp8")
+
+    def loss(x, wg_, wu_, wd_):
+        y = grouped_linear_ffn(x, wg_, wu_, wd_, gs, act="silu_mul",
+                               config=cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+    return jax.grad(loss, argnums=(0, 1, 2, 3)), (x, wg, wu, wd)
+
+
+_register_contract(
+    "grouped_linear.fp8.fwd",
+    description="fp8 forward: ONE standalone quantize (x), one plan "
+                "build, zero padding primitives",
+    build=_build_linear_fwd,
+    quantize_count=1, quantize_shapes=((256, 128),),
+    plan_builds=1, forbid_padding=True)
+
+_register_contract(
+    "grouped_linear.fp8.grad",
+    description="fp8 fwd+bwd: quantizes exactly {x, dy}; the forward's "
+                "TilePlan serves the dgrad and wgrad (one build total)",
+    build=_build_linear_grad,
+    quantize_count=2, quantize_shapes=((256, 128), (256, 128)),
+    plan_builds=1, forbid_padding=True)
+
+_register_contract(
+    "grouped_linear_fused.fp8.fwd",
+    description="fused epilogue forward: ZERO standalone quantizes (the "
+                "act_quant pass owns h), no wide h materialization",
+    build=_build_fused_fwd,
+    quantize_count=0, plan_builds=1, forbid_padding=True,
+    forbid_wide_shapes=((256, 256),))
+
+_register_contract(
+    "grouped_linear_fused.fp8.grad",
+    description="fused epilogue fwd+bwd: quantizes exactly {dy}; one "
+                "plan build serves forward, dgrad, and wgrad",
+    build=_build_fused_grad,
+    quantize_count=1, quantize_shapes=((256, 128),),
+    plan_builds=1, forbid_padding=True)
+
+_register_contract(
+    "grouped_linear_ffn.fp8.fwd",
+    description="producer-fused FFN forward: ONE standalone quantize "
+                "(x), gate/up through grouped_gemm_quant, g/u/h never "
+                "wider than fp8",
+    build=_build_ffn_fwd,
+    quantize_count=1, quantize_shapes=((256, 128),),
+    plan_builds=1, gemm_quant_calls=2, forbid_padding=True,
+    forbid_wide_shapes=((256, 256),))
+
+_register_contract(
+    "grouped_linear_ffn.fp8.grad",
+    description="producer-fused FFN fwd+bwd (all-fp8 wgrad): quantizes "
+                "exactly {x, dy, dg, du} — never g/u/h",
+    build=_build_ffn_grad,
+    quantize_count=4,
+    quantize_shapes=((256, 128), (256, 128), (256, 256), (256, 256)),
+    plan_builds=1, gemm_quant_calls=2, forbid_padding=True)

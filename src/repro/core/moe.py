@@ -336,3 +336,99 @@ def shard_moe_params(params, cfg: MoEConfig, ep_size: int):
                      "shared_up": P(None, "model"),
                      "shared_down": P("model", None)})
     return spec
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (repro.analysis layer 1)
+# ---------------------------------------------------------------------------
+# The MoE-layer invariants the ci_tier1.sh count gates used to pin with
+# monkeypatched counters: quantize-once (4 standalone quantizes per
+# fwd+bwd, two of them xs-shaped), producer-fusion (forward = exactly the
+# shared xs, gate/up through grouped_gemm_quant), and plan-once (one
+# schedule build per routing decision).  cap = _capacity(32*top_k, 1, cf)
+# = 64 for this example config (TP mode keeps the exact slot count).
+
+from repro.analysis.contracts import register_contract as _register_contract
+
+
+def _contract_cfg(fuse_producer=False):
+    return MoEConfig(num_experts=4, top_k=2, d_model=128, d_ff_expert=256,
+                     precision="fp8", backend="pallas_interpret",
+                     kernel_config=KernelConfig(wgrad_precision="fp8",
+                                                fuse_producer=fuse_producer))
+
+
+def _contract_inputs(cfg):
+    params = init_moe_params(jax.random.PRNGKey(0), cfg)
+    xt = jax.random.normal(jax.random.PRNGKey(1), (32, cfg.d_model))
+    return params, xt
+
+
+def _build_moe_fwd():
+    cfg = _contract_cfg()
+    params, xt = _contract_inputs(cfg)
+    return (lambda p, x: moe_apply(p, x, cfg)[0]), (params, xt)
+
+
+def _build_moe_grad():
+    cfg = _contract_cfg()
+    params, xt = _contract_inputs(cfg)
+
+    def loss(p, x):
+        return jnp.mean(moe_apply(p, x, cfg)[0].astype(jnp.float32) ** 2)
+    return jax.grad(loss, argnums=(0, 1)), (params, xt)
+
+
+def _build_moe_fused_fwd():
+    cfg = _contract_cfg(fuse_producer=True)
+    params, xt = _contract_inputs(cfg)
+    return (lambda p, x: moe_apply(p, x, cfg)[0]), (params, xt)
+
+
+def _build_moe_fused_grad():
+    cfg = _contract_cfg(fuse_producer=True)
+    params, xt = _contract_inputs(cfg)
+
+    def loss(p, x):
+        return jnp.mean(moe_apply(p, x, cfg)[0].astype(jnp.float32) ** 2)
+    return jax.grad(loss, argnums=(0, 1)), (params, xt)
+
+
+_register_contract(
+    "moe_apply.fp8.fwd",
+    description="MoE forward: ONE standalone quantize of the packed xs "
+                "serves the gate AND up GEMMs; one plan build per "
+                "routing decision; no padding of the token buffer",
+    build=_build_moe_fwd,
+    quantize_count=1, quantize_shapes=((64, 128),),
+    plan_builds=1, forbid_padding=True)
+
+_register_contract(
+    "moe_apply.fp8.grad",
+    description="quantize-once over fwd+bwd: exactly {xs, down-dy, dg, "
+                "du} — 4 calls, two xs-shaped; h never standalone-"
+                "quantized (the fused epilogue owns it)",
+    build=_build_moe_grad,
+    quantize_count=4,
+    quantize_shapes=((64, 128), (64, 128), (64, 256), (64, 256)),
+    plan_builds=1, forbid_padding=True)
+
+_register_contract(
+    "moe_apply.fused_producer.fwd",
+    description="producer-fused forward: the ONLY standalone quantize is "
+                "the shared xs; gate/up route through grouped_gemm_quant "
+                "(2 dispatches); g/u/h never exist wider than fp8",
+    build=_build_moe_fused_fwd,
+    quantize_count=1, quantize_shapes=((64, 128),),
+    plan_builds=1, gemm_quant_calls=2, forbid_padding=True,
+    forbid_wide_shapes=((64, 256),))
+
+_register_contract(
+    "moe_apply.fused_producer.grad",
+    description="producer-fused fwd+bwd: same 4-quantize floor {xs, "
+                "down-dy, dg, du}, gate/up still through "
+                "grouped_gemm_quant, one plan build",
+    build=_build_moe_fused_grad,
+    quantize_count=4,
+    quantize_shapes=((64, 128), (64, 128), (64, 256), (64, 256)),
+    plan_builds=1, gemm_quant_calls=2, forbid_padding=True)

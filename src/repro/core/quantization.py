@@ -18,6 +18,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import events as _events
 from repro.kernels import ops as kops
 from repro.kernels import ref as kref
 
@@ -130,6 +131,10 @@ def quantize_tilewise(x, *, backend=None, config=None):
     inside custom_vjp boundaries (see core.grouped_gemm).  ``config``
     optionally carries an autotuned quantizer tile height (the output is
     tile-height independent)."""
+    # one event per STANDALONE tilewise quantization — the quantize-once
+    # contracts (REPRO-C01) count these; fused epilogues (act_quantize,
+    # grouped_gemm_quant) quantize in-kernel and do not pass through here
+    _events.emit("quantize_tilewise", shape=tuple(x.shape))
     return kops.quantize_tilewise(x, backend=backend, config=config)
 
 

@@ -86,6 +86,7 @@ import jax
 import jax.numpy as jnp
 
 from repro import compat
+from repro.analysis import events as _events
 from repro.kernels import ref as _ref
 from repro.kernels.grouped_gemm_kernel import (QUANT_BLOCK, gmm_pallas,
                                                gmm_pallas_quant)
@@ -976,6 +977,57 @@ TILE_FREE_BACKENDS = _plan_tile_frozenset(uses_plan=False)
 
 
 # ---------------------------------------------------------------------------
+# Operator contract facts (repro.analysis layer 2, rule REPRO-R07)
+# ---------------------------------------------------------------------------
+
+# OpKey -> declarative facts the contract checker validates: which public
+# dispatch function fronts the operator, whether its hot path is
+# padding-free, and how many STANDALONE tilewise quantizations the
+# operator itself performs (fused epilogues quantize in-kernel: zero).
+_OP_CONTRACT_FACTS: "dict[OpKey, dict]" = {}
+
+
+def register_operator_contract(op_key, *, entry_point: str,
+                               padding_free: bool,
+                               standalone_quantizes: int = 0) -> None:
+    """Declare contract facts for one operator — registered next to its
+    ``register_operator`` block so a new family cannot land without
+    naming its invariants (REPRO-R07 fails the lint otherwise)."""
+    _OP_CONTRACT_FACTS[_op_key(op_key)] = {
+        "entry_point": entry_point,
+        "padding_free": padding_free,
+        "standalone_quantizes": standalone_quantizes,
+    }
+
+
+def op_contract_facts() -> "dict[OpKey, dict]":
+    return dict(_OP_CONTRACT_FACTS)
+
+
+register_operator_contract(("gemm", "fp8"),
+                           entry_point="grouped_gemm_fp8",
+                           padding_free=True)
+register_operator_contract(("gemm", "bf16"),
+                           entry_point="grouped_gemm_bf16",
+                           padding_free=True)
+register_operator_contract(("gemm_quant", "fp8"),
+                           entry_point="grouped_gemm_quant",
+                           padding_free=True)
+register_operator_contract(("wgrad", "bf16"),
+                           entry_point="grouped_gemm_wgrad",
+                           padding_free=True)
+register_operator_contract(("wgrad", "fp8"),
+                           entry_point="grouped_gemm_wgrad_fp8",
+                           padding_free=True)
+register_operator_contract(("quantize", "fp8"),
+                           entry_point="quantize_tilewise",
+                           padding_free=True, standalone_quantizes=1)
+register_operator_contract(("act_quant", "fp8"),
+                           entry_point="act_quantize",
+                           padding_free=True)
+
+
+# ---------------------------------------------------------------------------
 # Public entry points
 # ---------------------------------------------------------------------------
 
@@ -1031,6 +1083,9 @@ def grouped_gemm_quant(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
     if cfg.out_dtype is None:
         cfg = cfg.with_(out_dtype=jnp.bfloat16)
     num_groups = num_groups if num_groups is not None else b_fp8.shape[0]
+    # one event per producer-GEMM dispatch — the producer-fusion
+    # contracts (REPRO-C05) pin the gate/up routing count
+    _events.emit("gemm_quant", m=a_fp8.shape[0], n=b_fp8.shape[2])
     key = OpKey("gemm_quant", "fp8")
     name = resolve(key, cfg.backend,
                    tile=(cfg, a_fp8.shape[0], a_fp8.shape[1],

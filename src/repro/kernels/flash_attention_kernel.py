@@ -77,7 +77,10 @@ def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 256,
     """q: [B, Hq, S, D]; k, v: [B, Hkv, S, D] -> [B, Hq, S, D]."""
     b, hq, s, d = q.shape
     _, hkv, sk, _ = k.shape
-    assert hq % hkv == 0, (hq, hkv)
+    if hq % hkv != 0:
+        raise ValueError(f"Hq={hq} must be a multiple of Hkv={hkv} "
+                         f"(GQA group count must be integral); got "
+                         f"q {q.shape}, k {k.shape}")
     g = hq // hkv
     block_q = min(block_q, s)
     block_k = min(block_k, sk)

@@ -43,6 +43,8 @@ from typing import Any, Iterable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import events as _events
+
 QUANT_BLOCK = 128  # the paper's 1x128 / 128x128 quantization granularity
 
 
@@ -257,6 +259,9 @@ def make_group_metadata(group_sizes: jax.Array, m: int, block_m: int,
     zero-fills the whole buffer (``gmm_pallas`` still short-circuits to
     ``jnp.zeros`` to skip the launch).
     """
+    # one event per schedule build: the plan-once/run-many contract
+    # (REPRO-C02) counts these at trace time
+    _events.emit("plan_build", m=m, block_m=block_m, num_groups=num_groups)
     group_sizes = group_sizes.astype(jnp.int32)
     group_offsets = jnp.concatenate(
         [jnp.zeros((1,), jnp.int32), jnp.cumsum(group_sizes)])
@@ -932,5 +937,8 @@ def decode_config(m: int, k: int, n: int, g: int, *,
     selection by default (``measure=False``) — engine construction should
     not block on kernel timing; pass ``measure=True`` to tune on-device.
     """
+    # one event per pool selection: the decode-plan contract (REPRO-C06)
+    # pins exactly one per Engine construction
+    _events.emit("decode_select", m=m, k=k, n=n, g=g)
     return autotune(m, k, n, g, backend=backend, cache_path=cache_path,
                     measure=measure, op="decode", **kw)

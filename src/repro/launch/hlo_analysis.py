@@ -311,6 +311,49 @@ def analyze(text: str, *, top_k: int = 12):
     }
 
 
+def find_padding_ops(text: str):
+    """Locate HLO-level padding in a compiled module — the compiled-program
+    counterpart of the REPRO-C03 jaxpr contract (repro.analysis.contracts).
+
+    The jaxpr check proves the *traced* program is padding-free; this proves
+    nothing re-introduced padding downstream (a rewrite pass, a fusion
+    boundary).  Reported:
+
+      * ``pad`` ops that actually grow their operand — a zero-width pad
+        (result shape == operand shape, e.g. the blockwise quantizer's
+        already-aligned case) is elided by XLA and is not padding traffic;
+      * ``copy``/``fusion`` ops whose ``op_name`` metadata traces back to a
+        ``pad`` primitive, which is where fused pads end up after
+        optimization.
+
+    Returns a list of dicts: {computation, op, opcode, result, label}.
+    """
+    comps, _ = parse_module(text)
+    hits = []
+    for comp in comps.values():
+        for op in comp.ops:
+            meta = _METADATA_RE.search(op.line)
+            label = meta.group(1) if meta else ""
+            if op.opcode == "pad":
+                res_dims, _ = _shape_elems(op.result)
+                mo = re.search(r"(%[\w\.\-]+)", op.rest)
+                if mo and mo.group(1) in comp.shapes:
+                    in_dims, _ = _shape_elems(comp.shapes[mo.group(1)])
+                    if in_dims is not None and in_dims == res_dims:
+                        continue            # zero-width: no elements added
+            elif op.opcode in ("copy", "fusion"):
+                segs = label.split("/") if label else []
+                if not any(s == "pad" or s.startswith("pad[")
+                           for s in segs):
+                    continue
+            else:
+                continue
+            hits.append({"computation": comp.name, "op": op.name,
+                         "opcode": op.opcode, "result": op.result,
+                         "label": label})
+    return hits
+
+
 if __name__ == "__main__":
     import sys
     res = analyze(open(sys.argv[1]).read())

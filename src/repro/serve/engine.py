@@ -140,3 +140,83 @@ class Engine:
         tokens = jnp.concatenate([first[:, None], rest], axis=1)
         num = jnp.full((tokens.shape[0],), tokens.shape[1], jnp.int32)
         return GenerationResult(tokens=tokens, num_generated=num)
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (repro.analysis layer 1)
+# ---------------------------------------------------------------------------
+# Decode plan discipline, checked by a REAL smoke generate (mode="run" —
+# jit with concrete args executes; same cost as the serving CI gate this
+# replaced): one decode-config pool selection per Engine, block_m<=16,
+# and exactly one plan build per phase per expert group (routed + shared
+# x prefill + decode = 4), with the decode-phase build using the decode
+# config's tile height.
+
+from repro.analysis.contracts import register_contract as _register_contract
+
+
+def _build_engine_contract():
+    import os
+    import tempfile
+
+    from repro.configs import smoke_config
+    from repro.models.model_zoo import make_model, synthetic_batch
+
+    cfg = dataclasses.replace(smoke_config("qwen2-moe-a2.7b"),
+                              precision="fp8",
+                              gemm_backend="pallas_interpret")
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = synthetic_batch(jax.random.PRNGKey(1), cfg, 16, 2)
+
+    def fn():
+        # the decode selection autotunes through the JSON plan cache —
+        # route the write to a throwaway path, never the user's cache
+        prev = os.environ.get("REPRO_TILEPLAN_CACHE")
+        os.environ["REPRO_TILEPLAN_CACHE"] = os.path.join(
+            tempfile.mkdtemp(), "tileplan_cache.json")
+        try:
+            engine = Engine(model, params, max_new_tokens=6,
+                            decode_batch_size=2)
+        finally:
+            if prev is None:
+                os.environ.pop("REPRO_TILEPLAN_CACHE", None)
+            else:
+                os.environ["REPRO_TILEPLAN_CACHE"] = prev
+        res = engine.generate(batch, key=jax.random.PRNGKey(42))
+        return engine, res
+    return fn, ()
+
+
+def _check_engine_contract(result, events):
+    engine, res = result
+    msgs = []
+    dc = engine.decode_config
+    if dc is None:
+        msgs.append("engine resolved no decode config for an MoE model")
+    elif dc.block_m > 16:
+        msgs.append(f"decode config block_m={dc.block_m} > 16 — not a "
+                    f"decode-pool entry")
+    if tuple(res.tokens.shape) != (2, 6):
+        msgs.append(f"generate returned tokens of shape "
+                    f"{tuple(res.tokens.shape)}, expected (2, 6)")
+    builds = [e for e in events if e.kind == "plan_build"]
+    # build order: prefill routed, prefill shared, decode routed, decode
+    # shared — the decode-phase builds must use the decode tile height
+    if dc is not None and len(builds) == 4 \
+            and builds[2].data["block_m"] != dc.block_m:
+        msgs.append(f"decode-phase plan build used "
+                    f"block_m={builds[2].data['block_m']}, not the "
+                    f"decode config's {dc.block_m}")
+    return msgs
+
+
+_register_contract(
+    "engine.generate.decode_plan",
+    description="one decode-config selection per Engine; a full generate "
+                "(prefill + >=4 decode steps) builds plan metadata once "
+                "per phase per expert group; decode tiles block_m<=16",
+    build=_build_engine_contract,
+    mode="run",
+    decode_selects=1, plan_builds=4,
+    extra=_check_engine_contract)

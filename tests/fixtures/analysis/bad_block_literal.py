@@ -1,0 +1,11 @@
+"""Known-bad fixture for REPRO-A03: hardcodes a (misaligned) tile shape
+outside kernels/.
+
+Never imported — the AST linter parses it in tests/test_analysis.py.
+"""
+from repro.kernels.plan import KernelConfig
+
+
+def make_config():
+    # WRONG: tile geometry belongs to the plan.py pool; 96 % 128 != 0
+    return KernelConfig(block_n=96)

@@ -1,0 +1,11 @@
+"""Known-bad fixture for REPRO-A01: bypasses the dispatch registry by
+calling a kernel-internal Pallas entry point directly.
+
+Never imported — the AST linter parses it in tests/test_analysis.py.
+"""
+from repro.kernels.grouped_gemm_kernel import gmm_pallas
+
+
+def forward(lhs, rhs, plan):
+    # WRONG: skips resolve()'s availability / fallback / tile policy
+    return gmm_pallas(lhs, rhs, plan.group_sizes)

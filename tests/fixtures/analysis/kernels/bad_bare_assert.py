@@ -1,0 +1,11 @@
+"""Known-bad fixture for REPRO-A02: a bare assert in a kernel file (the
+``kernels`` directory component makes the linter treat it as one).
+
+Never imported — the AST linter parses it in tests/test_analysis.py.
+"""
+
+
+def kernel_entry(x):
+    # WRONG: stripped under python -O; must raise ValueError instead
+    assert x.shape[-1] % 128 == 0
+    return x

@@ -1,0 +1,208 @@
+"""Tests for the kernel contract checker (repro.analysis).
+
+Three layers, each exercised both ways: zero findings on the clean tree,
+and each known-bad fixture firing exactly its own rule — plus the
+coverage property the ISSUE pins: removing a contract expectation
+demonstrably lets the matching violation through.
+"""
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.analysis import ast_lint, contracts, registry_lint
+from repro.analysis.__main__ import main as analysis_main
+from repro.analysis.findings import Finding, RULES, filter_baselined
+from repro.core import quantization
+from repro.launch.hlo_analysis import analyze, find_padding_ops
+
+FIXTURES = os.path.join(os.path.dirname(__file__), "fixtures", "analysis")
+
+
+def _rules(findings):
+    return [f.rule_id for f in findings]
+
+
+# ---------------------------------------------------------------------------
+# layer 3: AST lint
+# ---------------------------------------------------------------------------
+
+def test_ast_clean_tree_zero_findings():
+    assert ast_lint.scan_paths() == []
+
+
+def test_fixture_direct_kernel_call_fires_exactly_a01():
+    fs = ast_lint.scan_file(
+        os.path.join(FIXTURES, "bad_direct_kernel_call.py"))
+    assert _rules(fs) == ["REPRO-A01"]
+    assert "gmm_pallas" in fs[0].message
+    assert fs[0].line > 1 and fs[0].path.endswith(
+        "bad_direct_kernel_call.py")
+
+
+def test_fixture_block_literal_fires_exactly_a03():
+    fs = ast_lint.scan_file(os.path.join(FIXTURES, "bad_block_literal.py"))
+    assert _rules(fs) == ["REPRO-A03"]
+    assert "block_n=96" in fs[0].message
+    assert "not a multiple of 128" in fs[0].message
+
+
+def test_fixture_bare_assert_fires_exactly_a02():
+    fs = ast_lint.scan_file(
+        os.path.join(FIXTURES, "kernels", "bad_bare_assert.py"))
+    assert _rules(fs) == ["REPRO-A02"]
+
+
+def test_kernel_file_asserts_allowed_outside_lint():
+    # the same source outside a kernels/ dir is not an A02 violation
+    src = "def f(x):\n    assert x\n    return x\n"
+    assert ast_lint.scan_source(src, "src/repro/core/whatever.py") == []
+    assert _rules(ast_lint.scan_source(
+        src, "src/repro/kernels/whatever.py")) == ["REPRO-A02"]
+
+
+# ---------------------------------------------------------------------------
+# layer 2: registry / alignment lint
+# ---------------------------------------------------------------------------
+
+def test_registry_clean_tree_zero_findings():
+    assert registry_lint.run() == []
+
+
+# ---------------------------------------------------------------------------
+# layer 1: jaxpr contracts
+# ---------------------------------------------------------------------------
+
+def _double_quantize(x):
+    # WRONG by construction: quantizes the same buffer twice
+    q1, s1 = quantization.quantize_tilewise(x)
+    q2, s2 = quantization.quantize_tilewise(x)
+    return q1, s1, q2, s2
+
+
+def test_double_quantize_fires_exactly_c01():
+    x = jnp.ones((8, 128), jnp.float32)
+    c = contracts.Contract(name="test.double_quantize",
+                           quantize_count=1,
+                           path="tests/test_analysis.py")
+    fs = contracts.check_contract(_double_quantize, c, x)
+    assert _rules(fs) == ["REPRO-C01"]
+    assert "traced 2" in fs[0].message
+
+
+def test_coverage_property_removing_expectation_lets_fixture_pass():
+    # the ISSUE's acceptance: each gate is demonstrably load-bearing —
+    # the same violating fn passes once the expectation is removed
+    x = jnp.ones((8, 128), jnp.float32)
+    c_off = contracts.Contract(name="test.double_quantize.unchecked",
+                               quantize_count=None)
+    assert contracts.check_contract(_double_quantize, c_off, x) == []
+
+
+def test_padding_fires_c03_and_zero_width_pad_does_not():
+    x = jnp.ones((8, 128), jnp.float32)
+    c = contracts.Contract(name="test.pad", forbid_padding=True,
+                           path="tests/test_analysis.py")
+    grown = contracts.check_contract(
+        lambda v: jnp.pad(v, ((0, 5), (0, 0))), c, x)
+    assert _rules(grown) == ["REPRO-C03"]
+    zero_width = contracts.check_contract(
+        lambda v: jnp.pad(v, ((0, 0), (0, 0))), c, x)
+    assert zero_width == []
+
+
+def test_wide_intermediate_fires_c04():
+    x = jnp.ones((8, 128), jnp.float32)
+    c = contracts.Contract(name="test.wide",
+                           forbid_wide_shapes=((8, 128),),
+                           path="tests/test_analysis.py")
+    fs = contracts.check_contract(lambda v: jax.nn.silu(v) * v, c, x)
+    assert "REPRO-C04" in _rules(fs)
+
+
+def test_registered_linear_fwd_contract_clean():
+    reg = contracts.load_registered()
+    assert contracts.run_contract(reg["grouped_linear.fp8.fwd"]) == []
+
+
+def test_every_finding_rule_is_documented():
+    reg = contracts.load_registered()
+    assert {"grouped_linear.fp8.fwd", "grouped_linear.fp8.grad",
+            "grouped_linear_fused.fp8.fwd", "moe_apply.fp8.grad",
+            "engine.generate.decode_plan"} <= set(reg)
+    for rid in ("REPRO-C01", "REPRO-C03", "REPRO-R05", "REPRO-A01"):
+        assert rid in RULES
+
+
+# ---------------------------------------------------------------------------
+# CLI + baseline
+# ---------------------------------------------------------------------------
+
+def test_cli_nonzero_on_fixture_and_baseline_suppresses(tmp_path, capsys):
+    fixture = os.path.join(FIXTURES, "bad_block_literal.py")
+    rc = analysis_main(["--ast", "--paths", fixture])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "REPRO-A03" in out and "bad_block_literal.py" in out
+
+    finding = ast_lint.scan_file(fixture)[0]
+    baseline = tmp_path / "baseline.json"
+    baseline.write_text(json.dumps({"findings": [finding.key()]}))
+    rc = analysis_main(["--ast", "--paths", fixture,
+                        "--baseline", str(baseline)])
+    out = capsys.readouterr().out
+    assert rc == 0 and "1 baselined" in out
+
+
+def test_baseline_filter_is_line_insensitive():
+    f1 = Finding("REPRO-A03", "p.py", 10, "msg")
+    f2 = Finding("REPRO-A03", "p.py", 99, "msg")
+    assert filter_baselined([f2], {f1.key()}) == []
+
+
+# ---------------------------------------------------------------------------
+# HLO-level padding detection (satellite: launch/hlo_analysis)
+# ---------------------------------------------------------------------------
+
+_SYNTH_HLO = """\
+ENTRY %main (p0: f32[256,128]) -> f32[264,128] {
+  %p0 = f32[256,128] parameter(0)
+  %zero = f32[] constant(0)
+  %zw = f32[256,128] pad(f32[256,128] %p0, f32[] %zero), padding=0_0x0_0
+  %grow = f32[264,128] pad(f32[256,128] %zw, f32[] %zero), padding=0_8x0_0
+  ROOT %cp = f32[264,128] copy(f32[264,128] %grow), metadata={op_name="jit(f)/pad"}
+}
+"""
+
+
+def test_find_padding_ops_reports_real_pads_not_zero_width():
+    hits = find_padding_ops(_SYNTH_HLO)
+    ops = {h["op"]: h for h in hits}
+    assert "%grow" in ops and ops["%grow"]["opcode"] == "pad"
+    assert "%cp" in ops        # copy labelled as a fused pad
+    assert "%zw" not in ops    # zero-width pad: XLA no-op, not padding
+    # analyze() is unchanged by the new helper
+    assert analyze(_SYNTH_HLO)["hbm_bytes"] > 0
+
+
+def test_find_padding_ops_on_compiled_programs():
+    x = jax.ShapeDtypeStruct((60, 128), jnp.float32)
+    padded = jax.jit(lambda v: jnp.pad(v, ((0, 4), (0, 0)))) \
+        .lower(x).compile().as_text()
+    assert find_padding_ops(padded), "compiled pad program must be flagged"
+    clean = jax.jit(lambda v: jnp.tanh(v) @ v.T).lower(x).compile().as_text()
+    assert find_padding_ops(clean) == []
+
+
+# ---------------------------------------------------------------------------
+# flash-attention shape guard (satellite: assert -> ValueError)
+# ---------------------------------------------------------------------------
+
+def test_flash_attention_gqa_mismatch_raises_value_error():
+    from repro.kernels.flash_attention_kernel import flash_attention
+    q = jnp.zeros((1, 3, 16, 8), jnp.float32)
+    kv = jnp.zeros((1, 2, 16, 8), jnp.float32)
+    with pytest.raises(ValueError, match="multiple of Hkv"):
+        flash_attention(q, kv, kv)
