@@ -99,9 +99,25 @@ def _select_config(m, k, n, g, backend, *, measure, op="gemm"):
                              op=op)
 
 
+def _autotune_note() -> str:
+    """Derived-column suffix describing the most recent pool selection:
+    how many entries the static resource model pruned before ranking and
+    how many measurements failed-and-were-skipped (satellite of the
+    resource-lint layer: the report shows the model working)."""
+    rep = plan_mod.last_autotune_report()
+    if not rep:
+        return ""
+    note = f";pool_pruned={len(rep.get('pruned', []))}"
+    skipped = rep.get("skipped", [])
+    if skipped:
+        note += f";measure_skipped={len(skipped)}"
+    return note
+
+
 def bench_cases(report, cases, *, backend=None, measure_autotune=True):
     for m, n, k, g in cases:
         cfg = _select_config(m, k, n, g, backend, measure=measure_autotune)
+        note = _autotune_note()
         block_m = cfg.block_m
         a8, sa, b8, sb, gs, sizes = _make_inputs(m, k, n, g, seed=m + g + n)
         padded_m = int(np.ceil((m + g * (block_m - 1)) / block_m) * block_m)
@@ -117,7 +133,7 @@ def bench_cases(report, cases, *, backend=None, measure_autotune=True):
                f"@{cfg.backend or 'auto'};"
                f"accel_pct={accel:.1f};pad_rows={ov['pad_rows']};"
                f"pad_extra_bytes={ov['a_bytes'] + ov['sa_bytes']};"
-               f"tiles={pad_tiles}vs{min_tiles + g - 1}")
+               f"tiles={pad_tiles}vs{min_tiles + g - 1}{note}")
 
 
 def bench_gemm_quant_cases(report, cases, *, backend=None,
@@ -131,6 +147,7 @@ def bench_gemm_quant_cases(report, cases, *, backend=None,
     for m, n, k, g in cases:
         cfg = _select_config(m, k, n, g, backend, measure=measure_autotune,
                              op="gemm_quant")
+        note = _autotune_note()
         a8, sa, b8, sb, gs, _ = _make_inputs(m, k, n, g, seed=m + g + n)
         t_fused = time_fn(_ours_quant, a8, sa, b8, sb, gs, cfg)
         t_unfused = time_fn(_unfused_quant, a8, sa, b8, sb, gs, cfg)
@@ -143,7 +160,7 @@ def bench_gemm_quant_cases(report, cases, *, backend=None,
                f"@{cfg.backend or 'auto'};"
                f"unfused_us={t_unfused * 1e6:.1f};"
                f"producer_bytes_saved={saved};"
-               f"fused_out_bytes={fused_out}")
+               f"fused_out_bytes={fused_out}{note}")
 
 
 def bench_wgrad_cases(report, cases, *, backend=None, measure_autotune=True):
@@ -156,6 +173,7 @@ def bench_wgrad_cases(report, cases, *, backend=None, measure_autotune=True):
     for m, n, k, g in cases:
         cfg = _select_config(m, k, n, g, backend, measure=measure_autotune,
                              op="wgrad")
+        note = _autotune_note()
         sizes = generate_group_sizes(m, g, seed=m + g)
         x = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
         dy = jnp.asarray(rng.standard_normal((m, n)), jnp.bfloat16)
@@ -172,7 +190,7 @@ def bench_wgrad_cases(report, cases, *, backend=None, measure_autotune=True):
         report(f"wgrad/M{m}_N{n}_K{k}_G{g}",
                t_ours * 1e6,
                f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
-               f"@{resolved};xla_ragged_us={t_ragged * 1e6:.1f}")
+               f"@{resolved};xla_ragged_us={t_ragged * 1e6:.1f}{note}")
 
 
 def bench_wgrad_fp8_cases(report, cases, *, backend=None,
@@ -186,6 +204,7 @@ def bench_wgrad_fp8_cases(report, cases, *, backend=None,
     for m, n, k, g in cases:
         cfg = _select_config(m, k, n, g, backend, measure=measure_autotune,
                              op="wgrad_fp8")
+        note = _autotune_note()
         # the bf16 baseline times under ITS OWN tuned tiles — timing it
         # under the fp8-tuned config would conflate tile-shape choice
         # with operand precision in the reported delta
@@ -205,7 +224,7 @@ def bench_wgrad_fp8_cases(report, cases, *, backend=None,
         report(f"wgrad_fp8/M{m}_N{n}_K{k}_G{g}",
                t_ours * 1e6,
                f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
-               f"@{resolved};bf16_wgrad_us={t_bf16 * 1e6:.1f}")
+               f"@{resolved};bf16_wgrad_us={t_bf16 * 1e6:.1f}{note}")
 
 
 def bench_quantize_cases(report, cases, *, backend=None,
@@ -219,6 +238,7 @@ def bench_quantize_cases(report, cases, *, backend=None,
     for m, n, k, g in cases:
         cfg = plan_mod.autotune(m, k, 0, 0, backend=backend,
                                 measure=measure_autotune, op="quantize")
+        note = _autotune_note()
         x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
         t_tuned = time_fn(
             lambda x_: dispatch.quantize_tilewise(x_, backend=cfg.backend,
@@ -229,7 +249,7 @@ def bench_quantize_cases(report, cases, *, backend=None,
         report(f"quantize/M{m}_K{k}",
                t_tuned * 1e6,
                f"config=bm{cfg.block_m}@{cfg.backend or 'auto'};"
-               f"kernel_default_us={t_default * 1e6:.1f}")
+               f"kernel_default_us={t_default * 1e6:.1f}{note}")
 
 
 def bench_decode_cases(report, cases, *, backend=None, measure_autotune=False):
@@ -243,6 +263,7 @@ def bench_decode_cases(report, cases, *, backend=None, measure_autotune=False):
     for m, n, k, g in cases:
         cfg = plan_mod.decode_config(m, k, n, g, backend=backend,
                                      measure=measure_autotune)
+        note = _autotune_note()
         a8, sa, b8, sb, gs, _ = _make_inputs(m, k, n, g, seed=m + g + n)
         t_dec = time_fn(_ours, a8, sa, b8, sb, gs, cfg)
         cfg_train = plan_mod.KernelConfig().with_(backend=cfg.backend)
@@ -251,7 +272,7 @@ def bench_decode_cases(report, cases, *, backend=None, measure_autotune=False):
                t_dec * 1e6,
                f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
                f"@{cfg.backend or 'auto'};tiny_m=1;"
-               f"default_bm{cfg_train.block_m}_us={t_train * 1e6:.1f}")
+               f"default_bm{cfg_train.block_m}_us={t_train * 1e6:.1f}{note}")
 
 
 CASES = [(m, nk, nk, g) for m in (2048, 8192) for g in (4, 8, 16, 32)

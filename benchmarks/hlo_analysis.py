@@ -1,2 +1,19 @@
-"""Shim: the loop-aware HLO analyzer lives in repro.launch.hlo_analysis."""
-from repro.launch.hlo_analysis import analyze, parse_module  # noqa: F401
+"""DEPRECATED shim: the HLO analyzer lives in ``repro.launch.hlo_analysis``.
+
+This module exists so historical ``import hlo_analysis`` /
+``from hlo_analysis import analyze`` call sites (benchmark scripts, old
+notebooks) keep working; it re-exports the single source of truth and
+adds nothing.  New code must import ``repro.launch.hlo_analysis``
+directly — a test pins that both import paths resolve to the *same*
+function objects, so the two can never drift apart again.
+"""
+from repro.launch.hlo_analysis import (  # noqa: F401
+    Computation,
+    Op,
+    analyze,
+    find_padding_ops,
+    parse_module,
+)
+
+__all__ = ["Computation", "Op", "analyze", "find_padding_ops",
+           "parse_module"]

@@ -82,6 +82,9 @@ def main() -> None:
             "platform": platform.platform(),
             "pin_config": args.pin_config,
             "backend": args.backend,
+            # per-op count of CONFIG_POOL entries the static resource
+            # model eliminated before measurement (kernels/resources.py)
+            "pool_pruned": plan_mod.prune_stats(),
             "rows": rows,
         }
         with open(args.json, "w") as f:

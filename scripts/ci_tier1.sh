@@ -75,6 +75,13 @@ EOF
 #             and one real Engine generate (REPRO-C01..C06)
 #   layer 2 — operator-registry + tile-pool alignment lint (REPRO-R01..R07)
 #   layer 3 — AST lint over src/repro (REPRO-A01..A03)
+#   layer 4 — static kernel-resource lint: VMEM/alignment budget proofs
+#             for every operator family x pool entry x device
+#             (REPRO-V01..V07, kernels/resources.py)
+#   layer 5 — retrace detector: compile contracts proving the jitted hot
+#             paths (grouped_linear{,_ffn} steps, Engine.generate, the
+#             padded baseline) compile exactly once per shape/phase/bucket
+#             (REPRO-T01..T03)
 # Fails on any finding not in the checked-in (empty) baseline.
 REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \

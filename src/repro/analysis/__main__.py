@@ -1,6 +1,7 @@
 """CLI for the kernel contract checker.
 
-    python -m repro.analysis [--contracts] [--registry] [--ast] [--all]
+    python -m repro.analysis [--contracts] [--registry] [--ast]
+                             [--resources] [--retrace] [--all]
                              [--paths P ...] [--baseline FILE] [--json]
                              [--list-rules] [--no-run-contracts]
 
@@ -10,6 +11,10 @@ Exit status 0 iff no findings outside the baseline.  Layers:
   (includes one real Engine generate unless ``--no-run-contracts``)
 * ``--registry``   — layer 2: operator-registry + tile-pool alignment lint
 * ``--ast``        — layer 3: AST lint over ``--paths`` (default src/repro)
+* ``--resources``  — layer 4: static VMEM/alignment budget proofs over the
+  registered operator families x the whole tile pool (pure arithmetic)
+* ``--retrace``    — layer 5: compile contracts (jit-retrace detector;
+  executes, so skipped under ``--no-run-contracts``)
 * ``--all``        — everything (the CI invocation); also the default
 """
 from __future__ import annotations
@@ -25,13 +30,17 @@ def main(argv=None) -> int:
     p = argparse.ArgumentParser(
         prog="python -m repro.analysis",
         description="kernel contract checker (padding-free / "
-                    "quantize-once / alignment invariants)")
+                    "quantize-once / alignment / resource invariants)")
     p.add_argument("--contracts", action="store_true",
                    help="run layer 1 jaxpr contracts")
     p.add_argument("--registry", action="store_true",
                    help="run layer 2 registry/alignment lint")
     p.add_argument("--ast", action="store_true",
                    help="run layer 3 AST lint")
+    p.add_argument("--resources", action="store_true",
+                   help="run layer 4 kernel-resource lint (VMEM budgets)")
+    p.add_argument("--retrace", action="store_true",
+                   help="run layer 5 compile contracts (retrace detector)")
     p.add_argument("--all", action="store_true",
                    help="run every layer (default when no layer given)")
     p.add_argument("--paths", nargs="*", default=None,
@@ -43,17 +52,20 @@ def main(argv=None) -> int:
     p.add_argument("--list-rules", action="store_true",
                    help="print every rule ID with its rationale and exit")
     p.add_argument("--no-run-contracts", action="store_true",
-                   help="skip mode='run' contracts (the Engine generate)")
+                   help="skip executing contracts (the Engine generate "
+                        "and the layer 5 compile contracts)")
     args = p.parse_args(argv)
 
     if args.list_rules:
         print(fmod.describe_rules())
         return 0
 
-    if not (args.contracts or args.registry or args.ast):
+    if not (args.contracts or args.registry or args.ast
+            or args.resources or args.retrace):
         args.all = True
     if args.all:
         args.contracts = args.registry = args.ast = True
+        args.resources = args.retrace = True
 
     findings: "list[fmod.Finding]" = []
     if args.ast:
@@ -62,10 +74,16 @@ def main(argv=None) -> int:
     if args.registry:
         from repro.analysis import registry_lint
         findings.extend(registry_lint.run())
+    if args.resources:
+        from repro.analysis import resource_lint
+        findings.extend(resource_lint.run())
     if args.contracts:
         from repro.analysis import contracts
         findings.extend(contracts.run_registered(
             include_run_mode=not args.no_run_contracts))
+    if args.retrace and not args.no_run_contracts:
+        from repro.analysis import retrace
+        findings.extend(retrace.run_registered())
 
     baseline = fmod.load_baseline(args.baseline)
     live = fmod.filter_baselined(findings, baseline)

@@ -124,6 +124,56 @@ RULES: "dict[str, tuple[str, str]]" = {
         "tile geometry lives in kernels/plan.py (pool + KernelConfig "
         "defaults) and kernel signatures only; literals elsewhere dodge "
         "the alignment validation and the autotuner"),
+    # ---- layer 4: kernel-resource lint (REPRO-V*) ----------------------
+    "REPRO-V01": (
+        "VMEM footprint over budget",
+        "the per-program footprint (operand + scale + output tiles + "
+        "accumulator scratch, at physical lane/sublane tiling) exceeds "
+        "the device VMEM budget even single-buffered — the kernel "
+        "cannot be resident at all"),
+    "REPRO-V02": (
+        "block_m sublane misalignment",
+        "block_m must be a multiple of 8 (VMEM sublane granularity); a "
+        "misaligned tile height forces relayouts on every load"),
+    "REPRO-V03": (
+        "block_n lane misalignment",
+        "block_n must be a multiple of 128 (VMEM lane width, and the "
+        "paper's 128B shared-alignment analogue for fp8 payload rows)"),
+    "REPRO-V04": (
+        "block_k scale-granularity misalignment",
+        "block_k must be a multiple of QUANT_BLOCK=128 so each K tile "
+        "covers a whole number of 1x128 scale columns — a fractional "
+        "scale column cannot be fetched as one block"),
+    "REPRO-V05": (
+        "degenerate grid at reference shape",
+        "a tile wider than the operand it walks (block_n>N, block_k>K) "
+        "gives the grid zero full steps, and block_m>=2*M wastes >=50% "
+        "of every A fetch — the half-size tile does the same work"),
+    "REPRO-V06": (
+        "decode tile cannot fill an MXU pass",
+        "decode-pool entries serve <=16 token-rows per step; a taller "
+        "block_m fetches A rows no decode step can ever fill"),
+    "REPRO-V07": (
+        "no double-buffering headroom",
+        "the footprint fits single-buffered but exceeds the VMEM budget "
+        "with the grid pipeline's double-buffering — the kernel would "
+        "serialize fetch against compute (or Mosaic rejects it)"),
+    # ---- layer 5: retrace detector (REPRO-T*) --------------------------
+    "REPRO-T01": (
+        "shape-stable call retraces",
+        "repeat calls at identical abstract shapes must hit the jit "
+        "cache: grouped_linear / grouped_linear_ffn fwd+bwd compile "
+        "exactly once across routing changes of the same shape"),
+    "REPRO-T02": (
+        "engine phase recompiles",
+        "Engine.generate compiles exactly once per phase (one prefill "
+        "trace, one decode-loop trace) across repeat generate calls — "
+        "the serving analogue of the paper's configure-once pool"),
+    "REPRO-T03": (
+        "padded baseline compiles off-bucket",
+        "the padded baseline compiles once per M-bucket; a bucket-"
+        "stable call sequence that retraces reintroduces the "
+        "recompilation cost padding was supposed to amortize"),
 }
 
 

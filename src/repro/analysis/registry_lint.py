@@ -154,9 +154,11 @@ def run() -> "List[Finding]":
     # ---- R06: scale-layout constant agreement --------------------------
     from repro.core import quantization as qz
     from repro.kernels import ref as kref
+    from repro.kernels import resources as kres
     blocks = {"kernels.plan": plan.QUANT_BLOCK,
               "kernels.ref": kref.QUANT_BLOCK,
-              "core.quantization": qz.QUANT_BLOCK}
+              "core.quantization": qz.QUANT_BLOCK,
+              "kernels.resources": kres.QUANT_BLOCK}
     if len(set(blocks.values())) != 1 or plan.QUANT_BLOCK != 128:
         findings.append(Finding(
             "REPRO-R06", ploc, 1,

@@ -1,0 +1,200 @@
+"""Layer 4 — static kernel-resource lint (REPRO-V01..V07).
+
+Proves, without running a single kernel, that every tile config the
+dispatch/plan machinery can hand to a kernel fits the device it targets:
+the registered operator families in ``dispatch._OPERATORS`` are crossed
+with every ``CONFIG_POOL`` / ``DECODE_POOL`` / ``_DEVICE_DEFAULTS``
+entry, and each ``(family, config, device)`` triple is checked against
+the :mod:`repro.kernels.resources` footprint model and the
+``plan.DEVICE_SPECS`` VMEM budget.  This is the Pallas/TPU analogue of
+the paper's static TMA-descriptor validation: 16B/128B alignment becomes
+sublane/lane/QUANT_BLOCK divisibility, and the shared-memory budget
+becomes the per-core VMEM budget.
+
+Rules:
+
+* **REPRO-V01** — footprint exceeds the device VMEM budget even
+  single-buffered: the kernel cannot be resident at all.
+* **REPRO-V02** — ``block_m`` not a multiple of 8 (sublane granularity).
+* **REPRO-V03** — ``block_n`` not a multiple of 128 (lane width).
+* **REPRO-V04** — ``block_k`` not a multiple of ``QUANT_BLOCK``: the
+  tile covers a fractional 1x128 scale column.
+* **REPRO-V05** — grid degeneracy: a tile wider/taller than the operand
+  it walks at the family's reference shape.
+* **REPRO-V06** — decode-pool hazard: a decode entry taller than
+  ``DECODE_MAX_BLOCK_M`` rows fetches rows a decode step can never fill.
+* **REPRO-V07** — pipeline headroom: the footprint fits single-buffered
+  but exceeds the budget double-buffered, so the grid pipeline would
+  serialize (or Mosaic would refuse the allocation).
+
+The default ``run()`` needs the real registry/pool (imports
+``repro.kernels``); ``scan_file`` checks JSON fixture entries with no
+jax dependency, which is what the known-bad fixture tests use.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any, Dict, List, Optional
+
+from .findings import Finding, relpath
+from ..kernels import resources as res
+
+#: reference shapes the pool is proved against, per family — the bench
+#: suite's large training shape for the GEMM-shaped families and the
+#: whole-row elementwise kernels' FFN hidden size (elementwise kernels
+#: keep (block_m, K) rows resident, so K is the budget driver there)
+REF_SHAPES: "Dict[str, Dict[str, int]]" = {
+    "gemm": {"m": 8192, "k": 4096, "n": 4096},
+    "gemm_quant": {"m": 8192, "k": 4096, "n": 4096},
+    "wgrad": {"m": 8192, "k": 4096, "n": 4096},
+    "quantize": {"m": 8192, "k": 2048, "n": 2048},
+    "act_quant": {"m": 8192, "k": 2048, "n": 2048},
+}
+
+#: reference decode step: a full serving batch of 16 token-rows
+DECODE_REF_M = 16
+
+_ALIGN_RULES = {"sublane": "REPRO-V02", "lane": "REPRO-V03",
+                "quant": "REPRO-V04"}
+
+
+def check_entry(family: str, config: Any, shape: "Dict[str, int]", *,
+                device: str = "tpu v5e", decode: bool = False,
+                where: str = "", path: str = "", line: int = 1,
+                vmem_bytes: Optional[int] = None,
+                wgrad_precision: Optional[str] = None) -> "List[Finding]":
+    """Check one ``(family, config, device)`` triple at ``shape``.
+
+    Checks short-circuit in severity order — an entry that is misaligned
+    gets only its alignment rule (its footprint under a geometry the
+    hardware cannot tile is meaningless), a degenerate grid only V05,
+    and only a structurally-sound entry is budget-checked (V01/V07).
+    """
+    m, k, n = shape["m"], shape["k"], shape.get("n", shape["k"])
+    budget = res.vmem_budget(device) if vmem_bytes is None else vmem_bytes
+    bm, bn, bk = res.config_blocks(config)
+    triple = (f"{family} x {where or f'block_m={bm},block_n={bn},block_k={bk}'}"
+              f" x {device}")
+    out: "List[Finding]" = []
+
+    align = res.alignment_issues(config)
+    if align:
+        for code, msg in align:
+            out.append(Finding(rule_id=_ALIGN_RULES[code], path=path,
+                               line=line, message=f"{triple}: {msg}"))
+        return out
+
+    elementwise = family in ("quantize", "act_quant")
+    degen = res.degeneracy_issues(config, m=m, k=k, n=n,
+                                  elementwise=elementwise)
+    if degen:
+        for msg in degen:
+            out.append(Finding(rule_id="REPRO-V05", path=path, line=line,
+                               message=f"{triple}: {msg}"))
+        return out
+
+    if decode and not elementwise and bm > res.DECODE_MAX_BLOCK_M:
+        out.append(Finding(
+            rule_id="REPRO-V06", path=path, line=line,
+            message=f"{triple}: decode entry block_m={bm} exceeds the "
+                    f"largest decode step ({res.DECODE_MAX_BLOCK_M} "
+                    f"token-rows) — fetched A rows can never be filled"))
+        return out
+
+    fp = res.footprint(family, config, m=m, k=k, n=n,
+                       wgrad_precision=wgrad_precision)
+    if fp["total_single"] > budget:
+        out.append(Finding(
+            rule_id="REPRO-V01", path=path, line=line,
+            message=f"{triple}: VMEM footprint {fp['total_single']} B "
+                    f"(single-buffered) exceeds the {budget} B budget"))
+    elif fp["total"] > budget:
+        out.append(Finding(
+            rule_id="REPRO-V07", path=path, line=line,
+            message=f"{triple}: footprint {fp['total_single']} B fits "
+                    f"single-buffered but {fp['total']} B double-buffered "
+                    f"exceeds the {budget} B budget — the grid pipeline "
+                    f"cannot keep a block in flight"))
+    return out
+
+
+def _registry_families() -> "List[str]":
+    from ..kernels import dispatch
+    fams = {key.family for key in dispatch._OPERATORS}
+    return [f for f in res.FAMILIES if f in fams]
+
+
+def run(paths: "Optional[List[str]]" = None) -> "List[Finding]":
+    """Prove the whole tuning surface: registered operator families x
+    (CONFIG_POOL + DECODE_POOL + _DEVICE_DEFAULTS) x DEVICE_SPECS.
+
+    With ``paths``, instead scan JSON fixture files (jax-free).
+    """
+    if paths:
+        out: "List[Finding]" = []
+        for p in paths:
+            out.extend(scan_file(p))
+        return out
+
+    from ..kernels import plan
+    plan_path = relpath(plan.__file__)
+    findings: "List[Finding]" = []
+    families = _registry_families()
+    devices = sorted(plan.DEVICE_SPECS)
+
+    for family in families:
+        ref = REF_SHAPES.get(family, REF_SHAPES["gemm"])
+        wp = "fp8" if family == "wgrad" else None
+        for device in devices:
+            for cfg in plan.CONFIG_POOL:
+                where = (f"CONFIG_POOL[block_m={cfg.block_m},"
+                         f"block_n={cfg.block_n},block_k={cfg.block_k}]")
+                findings.extend(check_entry(
+                    family, cfg, ref, device=device, where=where,
+                    path=plan_path, wgrad_precision=wp))
+            if family in ("gemm", "gemm_quant"):
+                dref = dict(ref, m=DECODE_REF_M)
+                for cfg in plan.DECODE_POOL:
+                    where = (f"DECODE_POOL[block_m={cfg.block_m},"
+                             f"block_n={cfg.block_n},block_k={cfg.block_k}]")
+                    findings.extend(check_entry(
+                        family, cfg, dref, device=device, decode=True,
+                        where=where, path=plan_path))
+
+    # device defaults are checked against their OWN device's budget
+    for dev_key, kw in plan._DEVICE_DEFAULTS:
+        try:
+            cfg = plan.KernelConfig(**kw)
+        except (TypeError, ValueError) as exc:  # pragma: no cover - lint net
+            findings.append(Finding(
+                rule_id="REPRO-V02", path=plan_path, line=1,
+                message=f"_DEVICE_DEFAULTS[{dev_key!r}] does not construct "
+                        f"a KernelConfig: {exc}"))
+            continue
+        for family in families:
+            ref = REF_SHAPES.get(family, REF_SHAPES["gemm"])
+            findings.extend(check_entry(
+                family, cfg, ref, device=dev_key,
+                where=f"_DEVICE_DEFAULTS[{dev_key!r}]", path=plan_path,
+                wgrad_precision="fp8" if family == "wgrad" else None))
+    return findings
+
+
+def scan_file(path: str) -> "List[Finding]":
+    """Check fixture entries from a JSON file: either one entry object or
+    a list of ``{"family", "config", "shape", "device"?, "decode"?,
+    "where"?}`` objects.  Pure arithmetic — no jax import."""
+    with open(path) as f:
+        data = json.load(f)
+    entries = data if isinstance(data, list) else [data]
+    rel = relpath(os.path.abspath(path))
+    out: "List[Finding]" = []
+    for entry in entries:
+        out.extend(check_entry(
+            entry["family"], entry["config"], entry["shape"],
+            device=entry.get("device", "tpu v5e"),
+            decode=bool(entry.get("decode", False)),
+            where=entry.get("where", ""), path=rel,
+            wgrad_precision=entry.get("wgrad_precision")))
+    return out

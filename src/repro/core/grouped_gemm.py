@@ -780,3 +780,68 @@ _register_contract(
     quantize_count=4,
     quantize_shapes=((256, 128), (256, 128), (256, 256), (256, 256)),
     plan_builds=1, gemm_quant_calls=2, forbid_padding=True)
+
+
+# ---------------------------------------------------------------------------
+# Compile contracts (repro.analysis layer 5: REPRO-T01)
+# ---------------------------------------------------------------------------
+# Shape-stable repeat calls must hit the jit cache: three steps with
+# DIFFERENT routings (new group_sizes values, same shapes) may trace the
+# step function exactly once.  group_sizes rides as a traced operand —
+# retracing here would mean every MoE routing decision recompiles the
+# layer, the failure mode the TilePlan's value-independent schedule
+# exists to avoid.
+
+from repro.analysis.retrace import \
+    register_compile_contract as _register_compile_contract
+
+
+def _build_linear_retrace():
+    x, w, _, _, _ = _contract_operands()
+    cfg = KernelConfig(backend="pallas_interpret")
+
+    def linear_step(x, w, gs):
+        y = grouped_linear(x, w, gs, precision="fp8", config=cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    fn = jax.jit(jax.value_and_grad(linear_step, argnums=(0, 1)))
+    routings = ([60, 0, 130], [100, 50, 40], [0, 0, 256])
+    calls = [(x, w, jnp.asarray(r, jnp.int32)) for r in routings]
+    return fn, calls
+
+
+def _build_ffn_retrace():
+    x, _, _, _, _ = _contract_operands()
+    import numpy as _np
+    rng = _np.random.default_rng(1)
+    wg = jnp.asarray(rng.standard_normal((3, 128, 256)), jnp.float32)
+    wu = jnp.asarray(rng.standard_normal((3, 128, 256)), jnp.float32)
+    wd = jnp.asarray(rng.standard_normal((3, 256, 128)), jnp.float32)
+    cfg = KernelConfig(backend="pallas_interpret", wgrad_precision="fp8")
+
+    def ffn_step(x, wg_, wu_, wd_, gs):
+        y = grouped_linear_ffn(x, wg_, wu_, wd_, gs, act="silu_mul",
+                               config=cfg)
+        return jnp.sum(y.astype(jnp.float32) ** 2)
+
+    fn = jax.jit(jax.value_and_grad(ffn_step, argnums=(0, 1, 2, 3)))
+    routings = ([60, 0, 130], [100, 50, 40], [256, 0, 0])
+    calls = [(x, wg, wu, wd, jnp.asarray(r, jnp.int32))
+             for r in routings]
+    return fn, calls
+
+
+_register_compile_contract(
+    "grouped_linear.fp8.retrace",
+    description="fp8 fwd+bwd step compiles ONCE across three routing "
+                "changes of the same shape",
+    build=_build_linear_retrace,
+    expected={"linear_step": 1}, rule="REPRO-T01")
+
+_register_compile_contract(
+    "grouped_linear_ffn.fp8.retrace",
+    description="producer-fused FFN fwd+bwd step (all-fp8 wgrad) "
+                "compiles ONCE across three routing changes of the same "
+                "shape",
+    build=_build_ffn_retrace,
+    expected={"ffn_step": 1}, rule="REPRO-T01")

@@ -286,7 +286,8 @@ def _tile_policy(key: OpKey, name: str, tile, *, explicit: bool) -> str:
     if cfg.compatible(k, n):
         return name
     if explicit:
-        cfg.validate(m, k, n)            # raises with the shape message
+        # raises with the shape message (or the computed VMEM footprint)
+        cfg.validate(m, k, n, family=key.family)
     for fb in ("xla_ragged", "xla_exact"):
         if fb in table and table[fb].available()[0]:
             return fb

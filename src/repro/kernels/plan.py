@@ -36,6 +36,7 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import json
+import logging
 import os
 import time
 from typing import Any, Iterable, Optional
@@ -44,6 +45,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.analysis import events as _events
+from repro.kernels import resources as _resources
+
+logger = logging.getLogger("repro.plan")
 
 QUANT_BLOCK = 128  # the paper's 1x128 / 128x128 quantization granularity
 
@@ -100,14 +104,32 @@ class KernelConfig:
                 f"wgrad_precision must be 'bf16' or 'fp8', "
                 f"got {self.wgrad_precision!r}")
 
-    def validate(self, m: int, k: int, n: int) -> "KernelConfig":
+    def validate(self, m: int, k: int, n: int, *,
+                 family: str = "gemm") -> "KernelConfig":
         """Shape-dependent constraints.  M is deliberately unconstrained —
         handling arbitrary (ragged) M without padding is the point of the
-        paper."""
+        paper.
+
+        Beyond divisibility, the static resource model budget-checks the
+        per-program VMEM footprint for ``family`` against the current
+        device, so an explicitly infeasible config raises here with the
+        computed footprint instead of surfacing as an opaque Mosaic
+        allocation error at compile time."""
         if k % self.block_k != 0:
             raise ValueError(f"K={k} must be a multiple of block_k={self.block_k}")
         if n % self.block_n != 0:
             raise ValueError(f"N={n} must be a multiple of block_n={self.block_n}")
+        if family in _resources.FAMILIES:
+            budget = device_spec().vmem_bytes
+            fp = _resources.footprint(family, self, m=m, k=k, n=n,
+                                      wgrad_precision=self.wgrad_precision)
+            if fp["total_single"] > budget:
+                raise ValueError(
+                    f"{family} config (block_m={self.block_m}, "
+                    f"block_n={self.block_n}, block_k={self.block_k}) needs "
+                    f"{fp['total_single']} B of VMEM per program at "
+                    f"M={m}, K={k}, N={n} — over the {budget} B device "
+                    f"budget even single-buffered (buffers: {fp['buffers']})")
         return self
 
     def compatible(self, k: int, n: int) -> bool:
@@ -505,14 +527,22 @@ class DeviceSpec:
     peak_flops: float      # bf16 MXU (or SIMD) FLOP/s
     hbm_bw: float          # bytes/s
     hbm_bytes: float       # per-chip capacity (roofline "fits" column)
+    # per-core VMEM budget the static resource model proves tile configs
+    # against (kernels/resources.py owns the numbers; the "cpu" entry
+    # carries the tightest real-TPU budget so interpret-mode selections
+    # transfer to hardware)
+    vmem_bytes: int = _resources.VMEM_BYTES["cpu"]
 
 
 DEVICE_SPECS = {
     "tpu v5e": DeviceSpec("tpu v5e", peak_flops=1.97e14, hbm_bw=8.2e11,
-                          hbm_bytes=16e9),
+                          hbm_bytes=16e9,
+                          vmem_bytes=_resources.VMEM_BYTES["tpu v5e"]),
     "tpu": DeviceSpec("tpu", peak_flops=2.75e14, hbm_bw=1.2e12,
-                      hbm_bytes=32e9),
-    "cpu": DeviceSpec("cpu", peak_flops=2e11, hbm_bw=5e10, hbm_bytes=64e9),
+                      hbm_bytes=32e9,
+                      vmem_bytes=_resources.VMEM_BYTES["tpu"]),
+    "cpu": DeviceSpec("cpu", peak_flops=2e11, hbm_bw=5e10, hbm_bytes=64e9,
+                      vmem_bytes=_resources.VMEM_BYTES["cpu"]),
 }
 
 
@@ -665,12 +695,19 @@ def cache_key(device_kind: str, backend: str, m: int, k: int, n: int,
     ``op`` is any key of :data:`_AUTOTUNE_OPS` — the registry-derived
     family list (currently gemm, decode, wgrad, wgrad_fp8, quantize,
     act_quant, gemm_quant; new dispatch families join by adding an entry
-    there, never by editing this function).  The forward-GEMM orientation
-    keeps the historical suffix-free key format so existing caches stay
-    valid; every other op appends ``|<op>``.
+    there, never by editing this function).  The non-default ops append
+    ``|<op>``.
+
+    Every key is additionally namespaced by the static resource model's
+    version (``|rm<N>``): pool selections made under an older footprint
+    model — in particular any selection from before static feasibility
+    pruning existed — must be re-tuned, not trusted.  Old-format entries
+    in an existing cache file simply never match (and are preserved on
+    save), so stale caches are ignored rather than crashed on.
     """
     suffix = "" if op == "gemm" else f"|{op}"
-    return f"{device_kind}|{backend}|M{_m_bucket(m)}|K{k}|N{n}|G{g}{suffix}"
+    return (f"{device_kind}|{backend}|M{_m_bucket(m)}|K{k}|N{n}|G{g}{suffix}"
+            f"|rm{_resources.RESOURCE_MODEL_VERSION}")
 
 
 def _read_cache_file(path: str) -> "dict[str, dict]":
@@ -729,6 +766,60 @@ _AUTOTUNE_OPS = {
     "quantize": ("quantize", "fp8"),
     "act_quant": ("act_quant", "fp8"),
 }
+
+# autotune op -> (resource-model family, wgrad operand precision) for the
+# static feasibility pruning pass
+_RESOURCE_FAMILIES = {
+    "gemm": ("gemm", None),
+    "decode": ("gemm", None),
+    "gemm_quant": ("gemm_quant", None),
+    "wgrad": ("wgrad", "bf16"),
+    "wgrad_fp8": ("wgrad", "fp8"),
+    "quantize": ("quantize", None),
+    "act_quant": ("act_quant", None),
+}
+
+# how many pool entries static feasibility pruning eliminated this
+# process, per op — benchmarks/run.py snapshots this next to the rows it
+# measured so BENCH_*.json records the model's contribution
+_PRUNE_STATS: "dict[str, int]" = {}
+# full report of the most recent autotune() call (tests + bench notes)
+_LAST_REPORT: "dict[str, Any]" = {}
+
+
+def prune_stats() -> "dict[str, int]":
+    """Per-op count of statically-pruned pool entries this process."""
+    return dict(_PRUNE_STATS)
+
+
+def reset_prune_stats() -> None:
+    _PRUNE_STATS.clear()
+
+
+def last_autotune_report() -> "dict[str, Any]":
+    """The most recent autotune() call's selection report: op, cache key,
+    cache_hit, pruned [(config dict, reason)], skipped [(config dict,
+    reason)] from the measurement loop, and the winning source."""
+    return dict(_LAST_REPORT)
+
+
+def _prune_infeasible(cands, op: str, m: int, k: int, n: int,
+                      spec: "DeviceSpec"):
+    """Drop statically-infeasible candidates before ranking/measuring.
+    Returns ``(kept, pruned)`` with ``pruned`` as (config, reason) pairs.
+    If the model would reject everything the original pool stands (the
+    lint will flag the pool itself; selection must not dead-end)."""
+    family, wprec = _RESOURCE_FAMILIES[op]
+    kept, pruned = [], []
+    for c in cands:
+        reason = _resources.infeasible_reason(
+            family, c, m, k, n, vmem_bytes=spec.vmem_bytes,
+            wgrad_precision=wprec)
+        (kept if reason is None else pruned).append(
+            c if reason is None else (c, reason))
+    if not kept:
+        return tuple(cands), []
+    return tuple(kept), pruned
 
 
 def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
@@ -864,6 +955,10 @@ def autotune(m: int, k: int, n: int, g: int, *,
         # upgrade it (tile-free backends never measure, so theirs stand)
         wants_measured = measure and not tile_free
         if entry.get("source") == "measured" or not wants_measured:
+            _LAST_REPORT.clear()
+            _LAST_REPORT.update(op=op, key=key, cache_hit=True,
+                                pruned=[], skipped=[],
+                                source=entry.get("source"))
             return KernelConfig.from_dict(entry["config"])
 
     if pool is None and op == "decode":
@@ -888,6 +983,16 @@ def autotune(m: int, k: int, n: int, g: int, *,
     if not cands:
         raise ValueError(f"no pool candidate is legal for K={k}, N={n}")
     spec = device_spec(kind)
+    # static feasibility pruning: the resource model eliminates entries
+    # that can never run well at this shape (VMEM over budget, degenerate
+    # grid) before a single measurement is spent on them
+    cands, pruned = _prune_infeasible(cands, op, m, k, n, spec)
+    if pruned:
+        _PRUNE_STATS[op] = _PRUNE_STATS.get(op, 0) + len(pruned)
+        for c, reason in pruned:
+            logger.info("autotune[%s] statically pruned block_m=%d,"
+                        "block_n=%d,block_k=%d: %s", op, c.block_m,
+                        c.block_n, c.block_k, reason)
     if op in ("gemm", "decode"):
         cost = estimate_cost_s
     elif op == "gemm_quant":
@@ -908,11 +1013,30 @@ def autotune(m: int, k: int, n: int, g: int, *,
         overrides["wgrad_precision"] = "fp8"
     ranked = [c.with_(**overrides) for c in ranked]
 
+    skipped: "list[tuple[KernelConfig, str]]" = []
     if measure and not tile_free:
-        timed = [(_measure_candidate(c, m, k, n, g, seed=seed, op=op), c)
-                 for c in ranked[:max_candidates]]
-        best_s, best = min(timed, key=lambda tc: tc[0])
-        source = "measured"
+        # a candidate that fails to compile/measure is recorded and
+        # skipped, not allowed to abort the sweep (and a statically
+        # pruned config never reaches this loop at all)
+        timed = []
+        for c in ranked[:max_candidates]:
+            try:
+                timed.append((_measure_candidate(c, m, k, n, g, seed=seed,
+                                                 op=op), c))
+            except Exception as exc:  # noqa: BLE001 - sweep must survive
+                reason = f"{type(exc).__name__}: {exc}"
+                skipped.append((c, reason))
+                logger.warning("autotune[%s] measurement of block_m=%d,"
+                               "block_n=%d,block_k=%d failed, skipping: %s",
+                               op, c.block_m, c.block_n, c.block_k, reason)
+        if timed:
+            best_s, best = min(timed, key=lambda tc: tc[0])
+            source = "measured"
+        else:
+            # every measurement failed — fall back to the cost-model
+            # ranking rather than dead-ending the caller
+            best, best_s = ranked[0], cost(m, k, n, g, ranked[0], spec)
+            source = "cost_model"
     else:
         # tile-shape-independent backends (the XLA paths) or measure=False:
         # cost-model order is the selection
@@ -920,7 +1044,15 @@ def autotune(m: int, k: int, n: int, g: int, *,
         source = "cost_model"
 
     entries[key] = {"config": best.to_dict(), "seconds": best_s,
-                    "source": source, "pool_size": len(cands), "op": op}
+                    "source": source, "pool_size": len(cands), "op": op,
+                    "pruned": len(pruned),
+                    "skipped": [{"config": c.to_dict(), "reason": r}
+                                for c, r in skipped]}
+    _LAST_REPORT.clear()
+    _LAST_REPORT.update(op=op, key=key, cache_hit=False,
+                        pruned=[(c.to_dict(), r) for c, r in pruned],
+                        skipped=[(c.to_dict(), r) for c, r in skipped],
+                        source=source)
     save_cache(entries, cache_path)
     return best
 

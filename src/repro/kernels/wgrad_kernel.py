@@ -209,7 +209,7 @@ def gmm_pallas_wgrad(x: jax.Array, dy: jax.Array, group_sizes: jax.Array, *,
         block_m = plan.block_m
         plan.check_against(m, block_m, num_groups)
     KernelConfig(block_m=block_m, block_n=block_n,
-                 block_k=block_k).validate(m, k, n)
+                 block_k=block_k).validate(m, k, n, family="wgrad")
 
     in_specs = [
         # x tile: globally block-aligned copy of the visit's M-tile,
@@ -321,8 +321,8 @@ def gmm_pallas_wgrad_fp8(x_fp8: jax.Array, s_x: jax.Array,
     if plan is not None:
         block_m = plan.block_m
         plan.check_against(m, block_m, num_groups)
-    KernelConfig(block_m=block_m, block_n=block_n,
-                 block_k=block_k).validate(m, k, n)
+    KernelConfig(block_m=block_m, block_n=block_n, block_k=block_k,
+                 wgrad_precision="fp8").validate(m, k, n, family="wgrad")
 
     in_specs = [
         # x tile: the visit's M-tile, K-slice (fp8 payload)

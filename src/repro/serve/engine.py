@@ -220,3 +220,57 @@ _register_contract(
     mode="run",
     decode_selects=1, plan_builds=4,
     extra=_check_engine_contract)
+
+
+# ---------------------------------------------------------------------------
+# Compile contracts (repro.analysis layer 5: REPRO-T02)
+# ---------------------------------------------------------------------------
+# Engine.generate compiles exactly once per phase: the first generate
+# traces the prefill step and the decode loop once each, and a second
+# generate over a same-shaped batch hits both jit caches.  The Engine is
+# constructed inside the contract's trace window (it jits in __init__),
+# so its entry points are the observed ones.
+
+from repro.analysis.retrace import \
+    register_compile_contract as _register_compile_contract
+
+
+def _build_engine_retrace():
+    import os
+    import tempfile
+
+    from repro.configs import smoke_config
+    from repro.models.model_zoo import make_model, synthetic_batch
+
+    cfg = dataclasses.replace(smoke_config("qwen2-moe-a2.7b"),
+                              precision="fp8",
+                              gemm_backend="pallas_interpret")
+    model = make_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = synthetic_batch(jax.random.PRNGKey(1), cfg, 16, 2)
+
+    prev = os.environ.get("REPRO_TILEPLAN_CACHE")
+    os.environ["REPRO_TILEPLAN_CACHE"] = os.path.join(
+        tempfile.mkdtemp(), "tileplan_cache.json")
+    try:
+        engine = Engine(model, params, max_new_tokens=6,
+                        decode_batch_size=2)
+    finally:
+        if prev is None:
+            os.environ.pop("REPRO_TILEPLAN_CACHE", None)
+        else:
+            os.environ["REPRO_TILEPLAN_CACHE"] = prev
+
+    def generate(key):
+        return engine.generate(batch, key=key)
+    calls = [(jax.random.PRNGKey(42),), (jax.random.PRNGKey(43),)]
+    return generate, calls
+
+
+_register_compile_contract(
+    "engine.generate.retrace",
+    description="two same-shape generates compile the prefill step and "
+                "the decode loop exactly once each",
+    build=_build_engine_retrace,
+    expected={"_prefill_impl": 1, "_decode_loop_impl": 1},
+    rule="REPRO-T02")

@@ -1,0 +1,21 @@
+"""Known-bad retrace fixture: a shape-varying loop that recompiles.
+
+The jitted step is called over a GROWING batch — every call changes the
+abstract shape, so every call is a jit cache miss.  The declared
+expectation (one trace) is exactly what REPRO-T01 must flag.
+"""
+NAME = "fixture.shape_varying_loop"
+
+EXPECTED_TRACES = {"step": 1}
+
+
+def run():
+    import jax
+    import jax.numpy as jnp
+
+    def step(x):
+        return jnp.sum(x * 2.0)
+
+    fn = jax.jit(step)
+    for rows in (8, 16, 24):        # three shapes -> three traces
+        fn(jnp.ones((rows, 128), jnp.float32))

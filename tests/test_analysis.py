@@ -1,6 +1,6 @@
 """Tests for the kernel contract checker (repro.analysis).
 
-Three layers, each exercised both ways: zero findings on the clean tree,
+Five layers, each exercised both ways: zero findings on the clean tree,
 and each known-bad fixture firing exactly its own rule — plus the
 coverage property the ISSUE pins: removing a contract expectation
 demonstrably lets the matching violation through.
@@ -12,7 +12,8 @@ import jax
 import jax.numpy as jnp
 import pytest
 
-from repro.analysis import ast_lint, contracts, registry_lint
+from repro.analysis import (ast_lint, contracts, registry_lint,
+                            resource_lint, retrace)
 from repro.analysis.__main__ import main as analysis_main
 from repro.analysis.findings import Finding, RULES, filter_baselined
 from repro.core import quantization
@@ -137,6 +138,133 @@ def test_every_finding_rule_is_documented():
 
 
 # ---------------------------------------------------------------------------
+# layer 4: kernel-resource lint
+# ---------------------------------------------------------------------------
+
+def test_resource_clean_tree_zero_findings():
+    assert resource_lint.run() == []
+
+
+def test_fixture_over_vmem_pool_entry_fires_exactly_v01():
+    fs = resource_lint.scan_file(
+        os.path.join(FIXTURES, "bad_vmem_pool_entry.json"))
+    assert _rules(fs) == ["REPRO-V01"]
+    assert "exceeds" in fs[0].message and "budget" in fs[0].message
+
+
+def test_fixture_misaligned_decode_entry_fires_exactly_v03():
+    fs = resource_lint.scan_file(
+        os.path.join(FIXTURES, "bad_decode_align_entry.json"))
+    assert _rules(fs) == ["REPRO-V03"]
+    assert "block_n=96" in fs[0].message
+
+
+def test_resource_coverage_fixing_the_entry_lets_it_pass():
+    # coverage property: the fixture's violation is load-bearing — the
+    # same entry with the defect removed produces zero findings
+    shape = {"m": 16, "k": 4096, "n": 4096}
+    ok = resource_lint.check_entry(
+        "gemm", {"block_m": 8, "block_n": 128, "block_k": 128}, shape,
+        device="tpu v5e", decode=True)
+    assert ok == []
+
+
+def test_check_entry_sublane_and_quant_alignment_rules():
+    shape = {"m": 8192, "k": 4096, "n": 4096}
+    v02 = resource_lint.check_entry(
+        "gemm", {"block_m": 12, "block_n": 128, "block_k": 128}, shape)
+    assert _rules(v02) == ["REPRO-V02"]
+    v04 = resource_lint.check_entry(
+        "gemm", {"block_m": 128, "block_n": 128, "block_k": 192}, shape)
+    assert _rules(v04) == ["REPRO-V04"]
+
+
+def test_check_entry_degenerate_and_decode_rules():
+    # tile wider than the operand: V05
+    v05 = resource_lint.check_entry(
+        "gemm", {"block_m": 128, "block_n": 512, "block_k": 128},
+        {"m": 8192, "k": 4096, "n": 256})
+    assert _rules(v05) == ["REPRO-V05"]
+    # decode entry taller than any decode step: V06
+    v06 = resource_lint.check_entry(
+        "gemm", {"block_m": 24, "block_n": 128, "block_k": 128},
+        {"m": 16, "k": 4096, "n": 4096}, decode=True)
+    assert _rules(v06) == ["REPRO-V06"]
+
+
+def test_check_entry_pipeline_headroom_fires_v07():
+    # fits single-buffered (~11 MiB) but not double-buffered (~18 MiB)
+    fs = resource_lint.check_entry(
+        "gemm", {"block_m": 8192, "block_n": 128, "block_k": 128},
+        {"m": 16384, "k": 4096, "n": 4096}, device="tpu v5e")
+    assert _rules(fs) == ["REPRO-V07"]
+    # the same entry on the 32 MiB part is feasible
+    assert resource_lint.check_entry(
+        "gemm", {"block_m": 8192, "block_n": 128, "block_k": 128},
+        {"m": 16384, "k": 4096, "n": 4096}, device="tpu v4") == []
+
+
+# ---------------------------------------------------------------------------
+# layer 5: retrace detector
+# ---------------------------------------------------------------------------
+
+def test_fixture_shape_varying_loop_fires_exactly_t01():
+    fs = retrace.check_fixture(
+        os.path.join(FIXTURES, "bad_retrace_loop.py"))
+    assert _rules(fs) == ["REPRO-T01"]
+    assert "retraced 3" in fs[0].message
+
+
+def test_retrace_coverage_removing_expectation_lets_fixture_pass():
+    # the same shape-varying loop with no declared expectation: clean
+    def build():
+        def step(x):
+            return jnp.sum(x * 2.0)
+        fn = jax.jit(step)
+        calls = [(jnp.ones((r, 128), jnp.float32),) for r in (8, 16, 24)]
+        return fn, calls
+    c = retrace.CompileContract(name="test.unchecked", build=build,
+                                expected={})
+    assert retrace.check_compile_contract(c) == []
+
+
+def test_retrace_shape_stable_calls_compile_once():
+    def build():
+        def step(x):
+            return jnp.sum(x * 2.0)
+        fn = jax.jit(step)
+        calls = [(jnp.full((8, 128), float(i)),) for i in range(3)]
+        return fn, calls
+    c = retrace.CompileContract(name="test.stable", build=build,
+                                expected={"step": 1})
+    assert retrace.check_compile_contract(c) == []
+
+
+def test_registered_compile_contracts_present():
+    reg = retrace.load_registered()
+    assert {"grouped_linear.fp8.retrace",
+            "grouped_linear_ffn.fp8.retrace",
+            "engine.generate.retrace",
+            "padding_baseline.bucket.retrace"} <= set(reg)
+    assert reg["engine.generate.retrace"].rule == "REPRO-T02"
+    assert reg["padding_baseline.bucket.retrace"].rule == "REPRO-T03"
+
+
+def test_registered_ffn_retrace_contract_clean():
+    # the acceptance pin: repeated shape-stable grouped_linear_ffn
+    # fwd+bwd calls compile exactly once
+    reg = retrace.load_registered()
+    assert retrace.check_compile_contract(
+        reg["grouped_linear_ffn.fp8.retrace"]) == []
+
+
+def test_registered_baseline_bucket_retrace_contract_clean():
+    reg = retrace.load_registered()
+    assert retrace.check_compile_contract(
+        reg["padding_baseline.bucket.retrace"]) == []
+
+
+# ---------------------------------------------------------------------------
 # CLI + baseline
 # ---------------------------------------------------------------------------
 
@@ -154,6 +282,15 @@ def test_cli_nonzero_on_fixture_and_baseline_suppresses(tmp_path, capsys):
                         "--baseline", str(baseline)])
     out = capsys.readouterr().out
     assert rc == 0 and "1 baselined" in out
+
+
+def test_cli_resources_layer_clean_and_rules_listed(capsys):
+    assert analysis_main(["--resources"]) == 0
+    capsys.readouterr()
+    assert analysis_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in ("REPRO-V01", "REPRO-V07", "REPRO-T01", "REPRO-T03"):
+        assert rid in out
 
 
 def test_baseline_filter_is_line_insensitive():
@@ -185,6 +322,17 @@ def test_find_padding_ops_reports_real_pads_not_zero_width():
     assert "%zw" not in ops    # zero-width pad: XLA no-op, not padding
     # analyze() is unchanged by the new helper
     assert analyze(_SYNTH_HLO)["hbm_bytes"] > 0
+
+
+def test_benchmarks_hlo_shim_reexports_the_same_objects():
+    # satellite: one source of truth — the benchmarks/ shim must expose
+    # the SAME function objects as repro.launch.hlo_analysis, so the two
+    # historical import paths can never drift apart again
+    import benchmarks.hlo_analysis as bh
+    import repro.launch.hlo_analysis as lh
+    assert bh.analyze is lh.analyze
+    assert bh.parse_module is lh.parse_module
+    assert bh.find_padding_ops is lh.find_padding_ops
 
 
 def test_find_padding_ops_on_compiled_programs():
