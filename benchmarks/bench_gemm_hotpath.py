@@ -44,10 +44,11 @@ def _bf16_inputs(m, k, n, g, seed):
     return x, w, jnp.asarray(sizes)
 
 
-def run(report, *, backend="xla_ragged"):
+def run(report, *, backend="xla_ragged", smoke: bool = False):
     cfg_bf16 = KernelConfig()
+    cases = CASES[:1] if smoke else CASES
 
-    for m, n, k, g in CASES:
+    for m, n, k, g in cases:
         cfg = _select_config(m, k, n, g, backend, measure=True)
         a8, sa, b8, sb, gs, _ = _make_inputs(m, k, n, g, seed=m + g + n)
         t_fp8 = time_fn(_ours, a8, sa, b8, sb, gs, cfg)
@@ -58,12 +59,13 @@ def run(report, *, backend="xla_ragged"):
         report(f"gemm_hotpath/fwd/M{m}_N{n}_K{k}_G{g}",
                t_fp8 * 1e6,
                f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
-               f"@{cfg.backend or 'auto'};bf16_us={t_bf16 * 1e6:.1f}")
+               f"@{cfg.backend or 'auto'};bf16_us={t_bf16 * 1e6:.1f}",
+               backend=dispatch.resolve(("gemm", "fp8"), cfg.backend))
 
     # producer epilogue: fused grouped_gemm_quant vs the unfused
     # composition — xla rows for the bytes math at training shapes,
     # one pallas_interpret row where the fusion is a real kernel
-    prod_cases = [(be, case) for be in (backend,) for case in CASES]
+    prod_cases = [(be, case) for be in (backend,) for case in cases]
     prod_cases += [("pallas_interpret", case) for case in PALLAS_CASES
                    if dispatch.availability("pallas_interpret")[0]]
     for be, (m, n, k, g) in prod_cases:
@@ -79,9 +81,10 @@ def run(report, *, backend="xla_ragged"):
                f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k};"
                f"unfused_us={t_unfused * 1e6:.1f};"
                f"producer_bytes_saved={saved};"
-               f"fused_out_bytes={fused_out}")
+               f"fused_out_bytes={fused_out}",
+               backend=dispatch.resolve(("gemm_quant", "fp8"), be))
 
-    for m, n, k, g in CASES:
+    for m, n, k, g in cases:
         rng = np.random.default_rng(m)
         x = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
         t_q = time_fn(lambda x_: dispatch.quantize_tilewise(x_), x)

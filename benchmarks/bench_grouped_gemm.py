@@ -77,6 +77,46 @@ def _wgrad_fp8(x8, sx, d8, sd, gs, config):
     return dispatch.grouped_gemm_wgrad_fp8(x8, sx, d8, sd, gs, config=config)
 
 
+@functools.partial(jax.jit, static_argnames=("config",))
+def _ours_bf16(x, w, gs, config):
+    return dispatch.grouped_gemm_bf16(x, w, gs, config=config)
+
+
+def _cfg_str(cfg) -> str:
+    s = f"bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+    if cfg.n_span != 1 or cfg.k_span != 1:
+        s += f"xns{cfg.n_span}xks{cfg.k_span}"
+    return s
+
+
+def _span_variant(cfg, k, n):
+    """Widest wgrad span variant of ``cfg`` whose effective tiles still
+    divide (K, N) — the multi-tile schedule the bytes columns compare
+    against the single-tile one.  Prefers symmetric spans (both operands
+    reused), then K-only, then N-only; spans=1 when nothing fits."""
+    for ns, ks in ((4, 4), (4, 1), (1, 4), (2, 2), (2, 1), (1, 2)):
+        c = cfg.with_(n_span=ns, k_span=ks)
+        if c.compatible(k, n, family="wgrad"):
+            return c
+    return cfg.with_(n_span=1, k_span=1)
+
+
+def _wgrad_bytes_cols(m, k, n, g, cfg, precision) -> str:
+    """The tentpole's proof columns: modeled operand HBM bytes under the
+    single-tile schedule (every (k, n) grid cell re-fetches both M-dim
+    operand tiles) vs the chosen/widest multi-tile schedule (x fetched
+    once per N super-tile, dy once per K super-tile)."""
+    single = plan_mod.wgrad_operand_bytes(
+        m, k, n, g, cfg.with_(n_span=1, k_span=1), precision=precision)
+    span_cfg = cfg if (cfg.n_span != 1 or cfg.k_span != 1) \
+        else _span_variant(cfg, k, n)
+    span = plan_mod.wgrad_operand_bytes(m, k, n, g, span_cfg,
+                                        precision=precision)
+    return (f"operand_bytes_single={single};"
+            f"operand_bytes_span={span};"
+            f"span_cfg=ns{span_cfg.n_span}xks{span_cfg.k_span}")
+
+
 def _select_config(m, k, n, g, backend, *, measure, op="gemm"):
     """Tile-shape selection for one case: an installed pin
     (``benchmarks.run --pin-config`` / ``plan.set_default_config``) wins;
@@ -129,11 +169,12 @@ def bench_cases(report, cases, *, backend=None, measure_autotune=True):
         min_tiles = int(np.ceil(m / block_m))
         report(f"fig2a/M{m}_N{n}_K{k}_G{g}",
                t_ours * 1e6,
-               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"config={_cfg_str(cfg)}"
                f"@{cfg.backend or 'auto'};"
                f"accel_pct={accel:.1f};pad_rows={ov['pad_rows']};"
                f"pad_extra_bytes={ov['a_bytes'] + ov['sa_bytes']};"
-               f"tiles={pad_tiles}vs{min_tiles + g - 1}{note}")
+               f"tiles={pad_tiles}vs{min_tiles + g - 1}{note}",
+               backend=dispatch.resolve(("gemm", "fp8"), cfg.backend))
 
 
 def bench_gemm_quant_cases(report, cases, *, backend=None,
@@ -156,11 +197,12 @@ def bench_gemm_quant_cases(report, cases, *, backend=None,
         fused_out = m * n + m * nb * 4        # fp8 payload + f32 scales
         report(f"gemm_quant/M{m}_N{n}_K{k}_G{g}",
                t_fused * 1e6,
-               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"config={_cfg_str(cfg)}"
                f"@{cfg.backend or 'auto'};"
                f"unfused_us={t_unfused * 1e6:.1f};"
                f"producer_bytes_saved={saved};"
-               f"fused_out_bytes={fused_out}{note}")
+               f"fused_out_bytes={fused_out}{note}",
+               backend=dispatch.resolve(("gemm_quant", "fp8"), cfg.backend))
 
 
 def bench_wgrad_cases(report, cases, *, backend=None, measure_autotune=True):
@@ -189,8 +231,10 @@ def bench_wgrad_cases(report, cases, *, backend=None, measure_autotune=True):
             else float("nan")
         report(f"wgrad/M{m}_N{n}_K{k}_G{g}",
                t_ours * 1e6,
-               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
-               f"@{resolved};xla_ragged_us={t_ragged * 1e6:.1f}{note}")
+               f"config={_cfg_str(cfg)}"
+               f"@{resolved};xla_ragged_us={t_ragged * 1e6:.1f};"
+               f"{_wgrad_bytes_cols(m, k, n, g, cfg, 'bf16')}{note}",
+               backend=resolved)
 
 
 def bench_wgrad_fp8_cases(report, cases, *, backend=None,
@@ -223,8 +267,10 @@ def bench_wgrad_fp8_cases(report, cases, *, backend=None,
                                                   precision="fp8")
         report(f"wgrad_fp8/M{m}_N{n}_K{k}_G{g}",
                t_ours * 1e6,
-               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
-               f"@{resolved};bf16_wgrad_us={t_bf16 * 1e6:.1f}{note}")
+               f"config={_cfg_str(cfg)}"
+               f"@{resolved};bf16_wgrad_us={t_bf16 * 1e6:.1f};"
+               f"{_wgrad_bytes_cols(m, k, n, g, cfg, 'fp8')}{note}",
+               backend=resolved)
 
 
 def bench_quantize_cases(report, cases, *, backend=None,
@@ -235,7 +281,11 @@ def bench_quantize_cases(report, cases, *, backend=None,
     height's wall time against the kernel's built-in default on the same
     payload."""
     rng = np.random.default_rng(0)
+    seen = set()   # rows are keyed (M, K); n/g don't reach the quantizer
     for m, n, k, g in cases:
+        if (m, k) in seen:
+            continue
+        seen.add((m, k))
         cfg = plan_mod.autotune(m, k, 0, 0, backend=backend,
                                 measure=measure_autotune, op="quantize")
         note = _autotune_note()
@@ -249,7 +299,108 @@ def bench_quantize_cases(report, cases, *, backend=None,
         report(f"quantize/M{m}_K{k}",
                t_tuned * 1e6,
                f"config=bm{cfg.block_m}@{cfg.backend or 'auto'};"
-               f"kernel_default_us={t_default * 1e6:.1f}{note}")
+               f"kernel_default_us={t_default * 1e6:.1f}{note}",
+               backend=dispatch.resolve(("quantize", "fp8"), cfg.backend))
+
+
+def bench_act_quant_cases(report, cases, *, backend=None,
+                          measure_autotune=True):
+    """The fused SwiGLU epilogue ``silu(g)*u -> 1x128 fp8`` through the
+    ``(act_quant, fp8)`` operator vs the unfused activation -> quantize
+    composition on the same rows — the suite-level row for the seam
+    ``moe_apply(precision="fp8")`` runs per expert FFN."""
+    rng = np.random.default_rng(0)
+    seen = set()   # rows are keyed (M, K); n/g don't reach the epilogue
+    for m, n, k, g in cases:
+        if (m, k) in seen:
+            continue
+        seen.add((m, k))
+        cfg = plan_mod.autotune(m, k, 0, 0, backend=backend,
+                                measure=measure_autotune, op="act_quant")
+        note = _autotune_note()
+        ga = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        ua = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        t_fused = time_fn(
+            lambda g_, u_: dispatch.act_quantize(g_, u_, backend=cfg.backend,
+                                                 config=cfg), ga, ua)
+        t_unfused = time_fn(
+            lambda g_, u_: dispatch.quantize_tilewise(
+                jax.nn.silu(g_) * u_, backend=cfg.backend), ga, ua)
+        report(f"act_quant/M{m}_K{k}",
+               t_fused * 1e6,
+               f"config=bm{cfg.block_m}@{cfg.backend or 'auto'};"
+               f"unfused_us={t_unfused * 1e6:.1f};"
+               f"h_bytes_saved={4 * m * k}{note}",
+               backend=dispatch.resolve(("act_quant", "fp8"), cfg.backend))
+
+
+def bench_gemm_bf16_cases(report, cases, *, backend=None,
+                          measure_autotune=True):
+    """The true-bf16 registry path (``op="gemm_bf16"``): the Pallas visit
+    schedule on bf16 operands where available, ``ragged_dot`` otherwise.
+    Reports the registry path's time plus the xla_ragged baseline's on
+    the same shape — on kernel backends the delta shows what sharing OUR
+    schedule across precisions buys the fp8-vs-bf16 comparison."""
+    rng = np.random.default_rng(0)
+    for m, n, k, g in cases:
+        cfg = _select_config(m, k, n, g, backend, measure=measure_autotune,
+                             op="gemm_bf16")
+        note = _autotune_note()
+        sizes = generate_group_sizes(m, g, seed=m + g)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        w = jnp.asarray(rng.standard_normal((g, k, n)), jnp.bfloat16)
+        gs = jnp.asarray(sizes)
+        t_ours = time_fn(_ours_bf16, x, w, gs, cfg)
+        resolved = dispatch.resolve(("gemm", "bf16"), cfg.backend,
+                                    tile=(cfg, m, k, n))
+        t_ragged = time_fn(_ours_bf16, x, w, gs,
+                           cfg.with_(backend="xla_ragged")) \
+            if resolved != "xla_ragged" else float("nan")
+        report(f"gemm_bf16/M{m}_N{n}_K{k}_G{g}",
+               t_ours * 1e6,
+               f"config={_cfg_str(cfg)}"
+               f"@{resolved};xla_ragged_us={t_ragged * 1e6:.1f}{note}",
+               backend=resolved)
+
+
+def bench_wgrad_multitile_cases(report, cases, *, precisions=("bf16", "fp8")):
+    """Old-vs-new wgrad schedule on the SAME kernel backend
+    (``pallas_interpret`` — the CPU-measurable twin of the TPU kernel):
+    times the single-tile grid against the widest feasible multi-tile
+    span and reports both modeled operand-byte columns next to both
+    measurements.  This is the acceptance row for the VMEM-residency
+    tentpole: bytes strictly lower, time no worse."""
+    rng = np.random.default_rng(0)
+    for m, n, k, g in cases:
+        sizes = generate_group_sizes(m, g, seed=m + g)
+        gs = jnp.asarray(sizes)
+        x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        dy = jnp.asarray(rng.standard_normal((m, n)), jnp.float32)
+        base = plan_mod.KernelConfig().with_(backend="pallas_interpret")
+        span_cfg = _span_variant(base, k, n)
+        for prec in precisions:
+            if prec == "fp8":
+                x8, sx = ref.quantize_tilewise_ref(x)
+                d8, sd = ref.quantize_tilewise_ref(dy)
+                t_single = time_fn(_wgrad_fp8, x8, sx, d8, sd, gs, base)
+                t_span = time_fn(_wgrad_fp8, x8, sx, d8, sd, gs, span_cfg)
+            else:
+                t_single = time_fn(_wgrad, x.astype(jnp.bfloat16),
+                                   dy.astype(jnp.bfloat16), gs, base)
+                t_span = time_fn(_wgrad, x.astype(jnp.bfloat16),
+                                 dy.astype(jnp.bfloat16), gs, span_cfg)
+            b_single = plan_mod.wgrad_operand_bytes(m, k, n, g, base,
+                                                    precision=prec)
+            b_span = plan_mod.wgrad_operand_bytes(m, k, n, g, span_cfg,
+                                                  precision=prec)
+            report(f"wgrad_multitile/{prec}/M{m}_N{n}_K{k}_G{g}",
+                   t_span * 1e6,
+                   f"config={_cfg_str(span_cfg)}@pallas_interpret;"
+                   f"single_tile_us={t_single * 1e6:.1f};"
+                   f"operand_bytes_single={b_single};"
+                   f"operand_bytes_span={b_span};"
+                   f"bytes_saved_pct={(1 - b_span / b_single) * 100:.1f}",
+                   backend="pallas_interpret")
 
 
 def bench_decode_cases(report, cases, *, backend=None, measure_autotune=False):
@@ -270,9 +421,10 @@ def bench_decode_cases(report, cases, *, backend=None, measure_autotune=False):
         t_train = time_fn(_ours, a8, sa, b8, sb, gs, cfg_train)
         report(f"decode/M{m}_N{n}_K{k}_G{g}",
                t_dec * 1e6,
-               f"config=bm{cfg.block_m}xbn{cfg.block_n}xbk{cfg.block_k}"
+               f"config={_cfg_str(cfg)}"
                f"@{cfg.backend or 'auto'};tiny_m=1;"
-               f"default_bm{cfg_train.block_m}_us={t_train * 1e6:.1f}{note}")
+               f"default_bm{cfg_train.block_m}_us={t_train * 1e6:.1f}{note}",
+               backend=dispatch.resolve(("gemm", "fp8"), cfg.backend))
 
 
 CASES = [(m, nk, nk, g) for m in (2048, 8192) for g in (4, 8, 16, 32)
@@ -280,6 +432,10 @@ CASES = [(m, nk, nk, g) for m in (2048, 8192) for g in (4, 8, 16, 32)
 SMOKE_CASES = [(256, 128, 128, 4)]   # tiny: interpret-mode friendly
 # decode-step shapes: M = batch*top_k routed rows in total
 DECODE_CASES = [(1, 256, 256, 4), (8, 256, 256, 4), (16, 256, 256, 4)]
+# interpret-mode-feasible shapes for the old-vs-new wgrad schedule rows;
+# the smoke list is a strict subset so bench_diff finds common row names
+WGRAD_KERNEL_CASES = [(256, 256, 256, 4), (512, 512, 512, 4)]
+WGRAD_KERNEL_SMOKE = [(256, 256, 256, 4)]
 
 
 def run(report):
@@ -306,7 +462,7 @@ def main() -> None:
 
     print("name,us_per_call,derived")
 
-    def report(name, us, derived):
+    def report(name, us, derived, **_):
         print(f"{name},{us:.1f},{derived}", flush=True)
 
     if args.decode:

@@ -8,9 +8,12 @@ M=8192, G=32) is reproduced at the same (M, G) point.
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import generate_group_sizes
+from benchmarks.common import generate_group_sizes, time_fn
+from repro.core import padding_baseline as pb
 from repro.kernels import plan as plan_mod
 
 
@@ -38,6 +41,25 @@ def run(report):
             # (a literal 0.0 here used to masquerade as a measurement)
             report(f"fig2b/M{m}_G{g}", None,
                    f"mem_saving_pct={s:.1f}")
+
+    # The measured half of this suite: the pad -> unpad round trip the
+    # paper's kernel deletes — its wall time IS the traffic the geometry
+    # rows above model (scatter write + gather read of A and S_A).
+    rng = np.random.default_rng(0)
+    for m, g in ((8192, 4), (8192, 32)):
+        k = 512
+        sizes = generate_group_sizes(m, g, seed=g)
+        a = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+        sa = jnp.ones((m, (k + 127) // 128), jnp.float32)
+        gs = jnp.asarray(sizes)
+        @jax.jit
+        def pad_rt(a_, s_, gs_):
+            a_p, _, _, row_map = pb.pad_groups(a_, s_, gs_, block_m=block_m)
+            return pb.unpad_groups(a_p, row_map)
+
+        t = time_fn(pad_rt, a, sa, gs)
+        report(f"fig2b_padpass/M{m}_G{g}", t * 1e6,
+               f"block_m={block_m};bytes_scattered={a.size * 4 + sa.size * 4}")
 
     # Fused silu·mul→quantize epilogue: the bf16 h intermediate [M, ff]
     # never exists, so its HBM write AND the quantizer's read-back vanish

@@ -1,0 +1,102 @@
+#!/usr/bin/env python3
+"""Compare two ``BENCH_*.json`` snapshots and flag measured-row time
+regressions.
+
+  python scripts/bench_diff.py OLD.json NEW.json [--threshold 0.10]
+
+Rows are matched by ``name``.  Only rows that are *measured* in BOTH
+snapshots are compared on time (``us_per_call``); derived-only rows (and
+rows measured on different backends) are reported but never fail the
+diff — a backend change or a cost-model drift is visible, not a
+regression.  A measured common row whose time grew by more than
+``--threshold`` (fractional, default 0.10 = +10%) is a regression; any
+regression makes the exit status nonzero so CI can gate on it.
+
+stdlib only — runs in the jax-free static CI step.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def load_rows(path: str) -> "tuple[dict, dict[str, dict]]":
+    with open(path) as f:
+        snap = json.load(f)
+    rows = {}
+    for row in snap.get("rows", []):
+        rows[row["name"]] = row
+    return snap, rows
+
+
+def is_measured(row: dict) -> bool:
+    # pre-protocol snapshots have no `measured` key: the presence of a
+    # recorded timing is the fallback signal
+    if "measured" in row:
+        return bool(row["measured"]) and "us_per_call" in row
+    return "us_per_call" in row
+
+
+def diff(old_path: str, new_path: str, threshold: float,
+         out=sys.stdout) -> int:
+    old_snap, old_rows = load_rows(old_path)
+    new_snap, new_rows = load_rows(new_path)
+
+    common = [n for n in new_rows if n in old_rows]
+    regressions, improved, compared, skipped = [], 0, 0, 0
+
+    print(f"# old: {old_path} ({old_snap.get('date', '?')}, "
+          f"device={old_snap.get('device', '?')}, "
+          f"{len(old_rows)} rows)", file=out)
+    print(f"# new: {new_path} ({new_snap.get('date', '?')}, "
+          f"device={new_snap.get('device', '?')}, "
+          f"{len(new_rows)} rows)", file=out)
+    print(f"# common rows: {len(common)}; threshold: +{threshold:.0%}",
+          file=out)
+
+    for name in common:
+        o, n = old_rows[name], new_rows[name]
+        if not (is_measured(o) and is_measured(n)):
+            skipped += 1
+            continue
+        if o.get("backend") and n.get("backend") \
+                and o["backend"] != n["backend"]:
+            print(f"SKIP {name}: backend changed "
+                  f"{o['backend']} -> {n['backend']}", file=out)
+            skipped += 1
+            continue
+        t_old, t_new = float(o["us_per_call"]), float(n["us_per_call"])
+        if t_old <= 0.0:
+            skipped += 1
+            continue
+        compared += 1
+        ratio = t_new / t_old
+        if ratio > 1.0 + threshold:
+            regressions.append((name, t_old, t_new, ratio))
+            print(f"REGRESSION {name}: {t_old:.1f}us -> {t_new:.1f}us "
+                  f"({(ratio - 1) * 100:+.1f}%)", file=out)
+        elif ratio < 1.0 - threshold:
+            improved += 1
+            print(f"improved {name}: {t_old:.1f}us -> {t_new:.1f}us "
+                  f"({(ratio - 1) * 100:+.1f}%)", file=out)
+
+    print(f"# compared {compared} measured rows: "
+          f"{len(regressions)} regressed, {improved} improved, "
+          f"{skipped} skipped (unmeasured/backend-change/zero)", file=out)
+    return 1 if regressions else 0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("old", help="baseline BENCH_*.json")
+    ap.add_argument("new", help="candidate BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="fractional time-regression threshold "
+                         "(default 0.10 = +10%%)")
+    args = ap.parse_args()
+    sys.exit(diff(args.old, args.new, args.threshold))
+
+
+if __name__ == "__main__":
+    main()

@@ -137,3 +137,16 @@ REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
 PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
     python -m benchmarks.bench_grouped_gemm --gemm-quant --smoke \
         --backend pallas_interpret
+
+# Full pinned suite (smoke shapes) + regression diff against the
+# committed snapshot.  --smoke row names are a strict subset of the full
+# suite's, so bench_diff matches by name; the generous threshold makes
+# this a rot gate across heterogeneous CI machines (every suite must
+# still produce its measured rows, and none may be catastrophically
+# slower) — same-machine perf trajectories use the default 10%.
+BENCH_SMOKE_JSON="$(mktemp -d)/bench_smoke.json"
+REPRO_TILEPLAN_CACHE="$(mktemp -d)/tileplan_cache.json" \
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+    python -m benchmarks.run --smoke --json "$BENCH_SMOKE_JSON"
+python scripts/bench_diff.py BENCH_2026-08-08.json "$BENCH_SMOKE_JSON" \
+    --threshold 3.0

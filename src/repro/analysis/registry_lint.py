@@ -105,8 +105,21 @@ def run() -> "List[Finding]":
                 "the registered names"))
 
     # ---- R05: pool / default alignment ---------------------------------
-    def check_cfg(cfg, where):
+    def check_cfg(cfg, where, spans_allowed=True):
         out = []
+        ns = getattr(cfg, "n_span", 1)
+        ks = getattr(cfg, "k_span", 1)
+        for axis, v in (("n_span", ns), ("k_span", ks)):
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                out.append((f"{where}: {axis}={v!r} is not an int >= 1",
+                            "spans are whole super-tile multiples of the "
+                            "base tile"))
+        if not spans_allowed and (ns != 1 or ks != 1):
+            out.append((f"{where}: spans ns{ns}xks{ks} on a non-wgrad "
+                        f"pool entry — only the wgrad family's multi-tile "
+                        f"schedule consumes them",
+                        "keep n_span=k_span=1 outside CONFIG_POOL's wgrad "
+                        "span entries"))
         if cfg.block_m % 8:
             out.append((f"{where}: block_m={cfg.block_m} not a multiple "
                         f"of 8 (sublane)", "align block_m to 8"))
@@ -130,7 +143,8 @@ def run() -> "List[Finding]":
         for msg, hint in check_cfg(cfg, f"CONFIG_POOL[{i}]"):
             findings.append(Finding("REPRO-R05", ploc, 1, msg, hint))
     for i, cfg in enumerate(plan.DECODE_POOL):
-        for msg, hint in check_cfg(cfg, f"DECODE_POOL[{i}]"):
+        for msg, hint in check_cfg(cfg, f"DECODE_POOL[{i}]",
+                                   spans_allowed=False):
             findings.append(Finding("REPRO-R05", ploc, 1, msg, hint))
         if cfg.block_m > 16:
             findings.append(Finding(
@@ -148,7 +162,8 @@ def run() -> "List[Finding]":
                 f"_DEVICE_DEFAULTS[{prefix!r}] does not construct: {e}",
                 "device defaults must be valid KernelConfig kwargs"))
             continue
-        for msg, hint in check_cfg(cfg, f"_DEVICE_DEFAULTS[{prefix!r}]"):
+        for msg, hint in check_cfg(cfg, f"_DEVICE_DEFAULTS[{prefix!r}]",
+                                   spans_allowed=False):
             findings.append(Finding("REPRO-R05", ploc, 1, msg, hint))
 
     # ---- R06: scale-layout constant agreement --------------------------

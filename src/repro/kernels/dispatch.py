@@ -11,9 +11,12 @@ precision)`` —
   ``gemm``       ``fp8``      quantized grouped GEMM ``y[rows of g] =
                               a_g @ b[g]`` (ragged M output rows; the
                               paper's forward/dgrad orientation)
-  ``gemm``       ``bf16``     the same orientation on bf16 operands
-                              (``jax.lax.ragged_dot`` — the numerics
-                              baseline / GSPMD path)
+  ``gemm``       ``bf16``     the same orientation on bf16 operands — a
+                              true Pallas kernel sharing the fp8 twin's
+                              visit schedule (so fp8-vs-bf16 comparisons
+                              measure OUR schedule on both sides), with
+                              ``jax.lax.ragged_dot`` as the portable /
+                              GSPMD fallback
   ``wgrad``      ``bf16``     ragged-contraction ``dw[g] = x_g^T @ dy_g``
                               (M contracted; DeepSeek recipe operands)
   ``wgrad``      ``fp8``      the same contraction on fp8 operands with
@@ -89,6 +92,7 @@ from repro import compat
 from repro.analysis import events as _events
 from repro.kernels import ref as _ref
 from repro.kernels.grouped_gemm_kernel import (QUANT_BLOCK, gmm_pallas,
+                                               gmm_pallas_bf16,
                                                gmm_pallas_quant)
 from repro.kernels.plan import (KernelConfig, TilePlan,  # noqa: F401
                                 make_tile_plan, resolve_config)
@@ -283,7 +287,7 @@ def _tile_policy(key: OpKey, name: str, tile, *, explicit: bool) -> str:
     if not table[name].uses_plan:
         return name
     cfg, m, k, n = tile
-    if cfg.compatible(k, n):
+    if cfg.compatible(k, n, family=key.family):
         return name
     if explicit:
         # raises with the shape message (or the computed VMEM footprint)
@@ -291,10 +295,11 @@ def _tile_policy(key: OpKey, name: str, tile, *, explicit: bool) -> str:
     for fb in ("xla_ragged", "xla_exact"):
         if fb in table and table[fb].available()[0]:
             return fb
+    eff_k, eff_n = cfg.effective_blocks(key.family)
     raise BackendUnavailableError(
         _display(key, name),
-        f"tile shapes (block_k={cfg.block_k}, block_n={cfg.block_n}) do "
-        f"not divide (K={k}, N={n}) and no tile-free {key.precision} "
+        f"tile shapes (block_k={eff_k}, block_n={eff_n}, spans included) "
+        f"do not divide (K={k}, N={n}) and no tile-free {key.precision} "
         f"{key.family} backend is available")
 
 
@@ -539,6 +544,39 @@ def gmm_xla_exact(a_fp8, s_a, b_fp8, s_b, group_sizes, *,
     return acc.astype(out_dtype)
 
 
+def gmm_bf16_xla_exact(x, w, group_sizes, *, out_dtype=jnp.bfloat16):
+    """bf16-operand oracle with :func:`~repro.kernels.grouped_gemm_kernel
+    .gmm_pallas_bf16`'s exact reduction order: one dense f32 ``dot`` per
+    (group, 128-wide K block) on f32-upcast bf16 operands, row-selected
+    by group membership and accumulated in f32 across K blocks.  Dense
+    ``dot`` (not ``ragged_dot``) is load-bearing for bitwise parity: XLA
+    splits the contraction differently per output row inside a
+    ``ragged_dot``, while M-tiling a dense dot is bitwise-stable — and
+    the kernel's per-visit dots are exactly M tiles of these.  Tail rows
+    beyond ``sum(group_sizes)`` stay exactly zero (the kernel's
+    zero-fill contract).  O(G·M·N·K) — test-scale only."""
+    x16 = x.astype(jnp.bfloat16)
+    w16 = w.astype(jnp.bfloat16)
+    m, k = x16.shape
+    g, _, n = w16.shape
+    gs = group_sizes.astype(jnp.int32)
+    ends = jnp.cumsum(gs)
+    starts = ends - gs
+    r = jnp.arange(m, dtype=jnp.int32)
+    acc = jnp.zeros((m, n), jnp.float32)
+    for j in range(k // QUANT_BLOCK):
+        aj = x16[:, j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK].astype(jnp.float32)
+        part = jnp.zeros((m, n), jnp.float32)
+        for gi in range(g):
+            bj = w16[gi, j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK, :].astype(
+                jnp.float32)
+            pg = jax.lax.dot(aj, bj, preferred_element_type=jnp.float32)
+            own = (r >= starts[gi]) & (r < ends[gi])
+            part = jnp.where(own[:, None], pg, part)
+        acc = acc + part
+    return acc.astype(out_dtype)
+
+
 def wgrad_xla_ragged(x, dy, group_sizes, *, num_groups,
                      out_dtype=jnp.float32):
     """``compat.ragged_wgrad``: ``ragged_dot_general`` where available,
@@ -682,6 +720,14 @@ register_operator(
 
 # ---- (gemm, bf16): the numerics-baseline orientation ----------------------
 
+def _run_pallas_bf16(x, w, gs, *, num_groups, config, plan, interpret):
+    return gmm_pallas_bf16(x, w, gs, num_groups=num_groups,
+                           block_m=config.block_m, block_n=config.block_n,
+                           block_k=config.block_k,
+                           out_dtype=config.out_dtype,
+                           interpret=interpret, plan=plan)
+
+
 def _run_bf16_ragged(x, w, gs, *, config, **_):
     out = compat.ragged_dot(x.astype(jnp.bfloat16), w.astype(jnp.bfloat16),
                             gs.astype(jnp.int32),
@@ -689,12 +735,36 @@ def _run_bf16_ragged(x, w, gs, *, config, **_):
     return out.astype(config.out_dtype)
 
 
+def _run_bf16_xla_exact(x, w, gs, *, config, **_):
+    return gmm_bf16_xla_exact(x, w, gs, out_dtype=config.out_dtype)
+
+
+register_operator(
+    ("gemm", "bf16"), "pallas",
+    description="compiled Pallas TPU kernel on bf16 operands — the fp8 "
+                "kernel's visit schedule without the quantize machinery",
+    available=_avail_tpu,
+    run=lambda *a, **kw: _run_pallas_bf16(*a, interpret=False, **kw),
+    uses_plan=True, uses_tiles=True)
+register_operator(
+    ("gemm", "bf16"), "pallas_interpret",
+    description="bf16 Pallas kernel in interpret mode — CPU-verifiable, "
+                "bit-identical to 'pallas'",
+    available=_avail_always,
+    run=lambda *a, **kw: _run_pallas_bf16(*a, interpret=True, **kw),
+    uses_plan=True, uses_tiles=True)
 register_operator(
     ("gemm", "bf16"), "xla_ragged",
     description="jax.lax.ragged_dot on bf16 operands (numerics baseline; "
                 "dense fallback where the primitive is missing)",
     available=_avail_always,       # compat.ragged_dot always has a fallback
     run=_run_bf16_ragged)
+register_operator(
+    ("gemm", "bf16"), "xla_exact",
+    description="per-(group, 128-K-block) dense f32 oracle with the bf16 "
+                "kernel's accumulation order",
+    available=_avail_always,
+    run=_run_bf16_xla_exact)
 
 
 # ---- (gemm_quant, fp8): the quantizing-epilogue producer ------------------
@@ -775,6 +845,7 @@ def _run_pallas_wgrad(x, dy, gs, *, num_groups, config, plan, interpret):
     return gmm_pallas_wgrad(x, dy, gs, num_groups=num_groups,
                             block_m=config.block_m, block_n=config.block_n,
                             block_k=config.block_k,
+                            n_span=config.n_span, k_span=config.k_span,
                             out_dtype=config.out_dtype, interpret=interpret,
                             plan=plan)
 
@@ -824,6 +895,7 @@ def _run_pallas_wgrad_fp8(x8, sx, dy8, sdy, gs, *, num_groups, config, plan,
                                 block_m=config.block_m,
                                 block_n=config.block_n,
                                 block_k=config.block_k,
+                                n_span=config.n_span, k_span=config.k_span,
                                 out_dtype=config.out_dtype,
                                 interpret=interpret, plan=plan)
 
@@ -1103,14 +1175,21 @@ def grouped_gemm_bf16(x, w, group_sizes, *, backend: Optional[str] = None,
                       plan: Optional[TilePlan] = None):
     """bf16-operand grouped GEMM through the ``(gemm, bf16)`` operator —
     the numerics-baseline orientation ``grouped_linear(precision="bf16")``
-    builds on (``jax.lax.ragged_dot``; a dense fallback keeps it available
-    on every JAX).  Not differentiable — training goes through
+    builds on.  A true Pallas kernel (the fp8 twin's visit schedule, bf16
+    operands, f32 accumulate) leads the auto order on TPU;
+    ``jax.lax.ragged_dot`` (with a dense fallback) keeps the family
+    available on every JAX.  Same tile-fallback semantics as every other
+    plan consumer: an auto-resolved kernel whose tile shapes don't divide
+    (K, N) falls back to the tile-free entries, an explicit request
+    raises.  Not differentiable — training goes through
     :func:`repro.core.grouped_gemm.grouped_linear`."""
     cfg = resolve_config(config, backend=backend, out_dtype=out_dtype)
     if cfg.out_dtype is None:
         cfg = cfg.with_(out_dtype=x.dtype)
+    num_groups = num_groups if num_groups is not None else w.shape[0]
     key = OpKey("gemm", "bf16")
-    name = resolve(key, cfg.backend)
+    name = resolve(key, cfg.backend,
+                   tile=(cfg, x.shape[0], x.shape[1], w.shape[2]))
     return _OPERATORS[key][name].run(
         x, w, group_sizes, num_groups=num_groups, config=cfg, plan=plan)
 

@@ -250,6 +250,139 @@ def gmm_pallas(a_fp8: jax.Array, s_a: jax.Array, b_fp8: jax.Array,
         plan.group_offsets, plan.group_ids, plan.m_tile_ids)
 
 
+def _gmm_bf16_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
+                     a_ref, b_ref,                                  # VMEM in
+                     out_ref,                                       # VMEM out
+                     acc_ref,                                       # scratch
+                     *, block_m, block_n, block_k, k_steps, num_groups,
+                     out_dtype):
+    """True-bf16 twin of :func:`_gmm_kernel`: identical grid walk, visit
+    schedule, and masked-RMW store — no scale operands and no rescale
+    (the numerics-baseline orientation, so every fp8-vs-bf16 comparison
+    measures OUR schedule on both sides, not XLA's).  Accumulation stays
+    one f32 MXU dot per 128-wide K sub-tile, the same reduction order as
+    the fp8 kernel (and the ``gmm_bf16_xla_exact`` oracle)."""
+    n_i = pl.program_id(0)
+    t = pl.program_id(1)
+    k_i = pl.program_id(2)
+
+    g = group_ids_ref[t]
+    m_tile = m_tile_ids_ref[t]
+
+    @pl.when(k_i == 0)
+    def _zero_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    a = a_ref[...].astype(jnp.float32)                 # (bm, bk)
+    b = b_ref[0].astype(jnp.float32)                   # (bk, bn)
+    for j in range(block_k // QUANT_BLOCK):
+        aj = a[:, j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK]
+        bj = b[j * QUANT_BLOCK:(j + 1) * QUANT_BLOCK]
+        acc_ref[...] += jax.lax.dot(aj, bj,
+                                    preferred_element_type=jnp.float32)
+
+    @pl.when(k_i == k_steps - 1)
+    def _store():
+        # same masked RMW as the fp8 kernel: owned rows store, unowned
+        # tail rows zero-fill, everything else preserves the adjacent
+        # visit's contents
+        start = group_offsets_ref[g]
+        end = group_offsets_ref[g + 1]
+        total = group_offsets_ref[num_groups]
+        rows = m_tile * block_m + jax.lax.broadcasted_iota(
+            jnp.int32, (block_m, block_n), 0)
+        owned = (rows >= start) & (rows < end)
+        unowned = rows >= total
+        prev = out_ref[...]
+        out_ref[...] = jnp.where(
+            owned, acc_ref[...].astype(out_dtype),
+            jnp.where(unowned, jnp.zeros_like(prev), prev))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_m", "block_n", "block_k", "out_dtype",
+                     "interpret", "num_groups"))
+def gmm_pallas_bf16(x: jax.Array, w: jax.Array, group_sizes: jax.Array, *,
+                    num_groups: int | None = None,
+                    block_m: int = 128, block_n: int = 128,
+                    block_k: int = 128,
+                    out_dtype: Any = jnp.bfloat16, interpret: bool = False,
+                    plan: TilePlan | None = None):
+    """Padding-free bf16 grouped GEMM — the true-Pallas ``(gemm, bf16)``
+    registry entry.
+
+    x:  [M, K] float — concatenated groups (cast to bf16 operands, like
+        the ``ragged_dot`` baseline this kernel replaces)
+    w:  [G, K, N] float — per-group weights (cast to bf16)
+    group_sizes: [G] int32, sum <= M; tail rows come back as DEFINED
+        zeros (same masked-store contract as :func:`gmm_pallas`)
+    plan: optional precomputed :class:`TilePlan` — the same plan-reuse
+        contract as every other kernel of a routing decision.
+    returns [M, N] out_dtype with f32 accumulation of bf16 products.
+    """
+    m, k = x.shape
+    g, k2, n = w.shape
+    if k != k2:
+        raise ValueError(
+            f"x and w disagree on K: x is [M={m}, K={k}] but w is "
+            f"[G={g}, K={k2}, N={n}]")
+    num_groups = num_groups or g
+    validate_kernel_config(m, k, n, block_m, block_n, block_k)
+
+    if m == 0:
+        return jnp.zeros((0, n), out_dtype)
+    x16 = x.astype(jnp.bfloat16)
+    w16 = w.astype(jnp.bfloat16)
+
+    if plan is None:
+        plan = make_tile_plan(group_sizes, m, block_m=block_m,
+                              num_groups=num_groups)
+    else:
+        plan.check_against(m, block_m, num_groups)
+    k_steps = k // block_k
+
+    grid = (n // block_n, plan.max_visits, k_steps)
+
+    kernel = functools.partial(
+        _gmm_bf16_kernel, block_m=block_m, block_n=block_n, block_k=block_k,
+        k_steps=k_steps, num_groups=num_groups, out_dtype=out_dtype)
+
+    def _run_kernel(group_offsets, group_ids, m_tile_ids):
+        return pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=3,
+                grid=grid,
+                in_specs=[
+                    # A tile: globally block-aligned HBM->VMEM copy
+                    pl.BlockSpec((block_m, block_k),
+                                 lambda n_i, t, k_i, go, gi, mi: (mi[t], k_i)),
+                    # B^g tile, selected by the visit's group id
+                    pl.BlockSpec((1, block_k, block_n),
+                                 lambda n_i, t, k_i, go, gi, mi: (gi[t], k_i, n_i)),
+                ],
+                out_specs=pl.BlockSpec(
+                    (block_m, block_n),
+                    lambda n_i, t, k_i, go, gi, mi: (mi[t], n_i)),
+                scratch_shapes=[pltpu.VMEM((block_m, block_n), jnp.float32)],
+            ),
+            out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+            compiler_params=compat.tpu_compiler_params(
+                dimension_semantics=("parallel", "arbitrary", "arbitrary"),
+            ),
+            interpret=interpret,
+        )(group_offsets, group_ids, m_tile_ids, x16, w16)
+
+    # all-empty schedule: short-circuit to defined zeros (same contract
+    # as the fp8 kernel)
+    return jax.lax.cond(
+        plan.total_rows() > 0,
+        lambda go, gi, mi: _run_kernel(go, gi, mi),
+        lambda go, gi, mi: jnp.zeros((m, n), out_dtype),
+        plan.group_offsets, plan.group_ids, plan.m_tile_ids)
+
+
 def _gmm_quant_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
                       a_ref, sa_ref, b_ref, sb_ref,                # VMEM in
                       q_ref, s_ref,                                # VMEM out

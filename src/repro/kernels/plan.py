@@ -81,6 +81,13 @@ class KernelConfig:
     # recipe quantizes g/u once more than the bf16-residual recipe, an
     # e4m3-relative-error tolerance delta (see core.grouped_gemm)
     fuse_producer: bool = False
+    # multi-tile wgrad spans: one grid cell of the wgrad kernel owns an
+    # (k_span*block_k, n_span*block_n) output super-tile, so the x operand
+    # tile is fetched once per n_span N steps and the dy tile once per
+    # k_span K steps (VMEM-resident reuse).  Only the wgrad family reads
+    # these; every other op treats a span>1 config as its base block shape
+    n_span: int = 1
+    k_span: int = 1
 
     def __post_init__(self):
         # normalize out_dtype so configs built from jnp scalar types and
@@ -103,6 +110,10 @@ class KernelConfig:
             raise ValueError(
                 f"wgrad_precision must be 'bf16' or 'fp8', "
                 f"got {self.wgrad_precision!r}")
+        for axis in ("n_span", "k_span"):
+            v = getattr(self, axis)
+            if not isinstance(v, int) or isinstance(v, bool) or v < 1:
+                raise ValueError(f"{axis} must be an int >= 1, got {v!r}")
 
     def validate(self, m: int, k: int, n: int, *,
                  family: str = "gemm") -> "KernelConfig":
@@ -115,10 +126,15 @@ class KernelConfig:
         device, so an explicitly infeasible config raises here with the
         computed footprint instead of surfacing as an opaque Mosaic
         allocation error at compile time."""
-        if k % self.block_k != 0:
-            raise ValueError(f"K={k} must be a multiple of block_k={self.block_k}")
-        if n % self.block_n != 0:
-            raise ValueError(f"N={n} must be a multiple of block_n={self.block_n}")
+        eff_k, eff_n = self.effective_blocks(family)
+        if k % eff_k != 0:
+            raise ValueError(
+                f"K={k} must be a multiple of block_k={self.block_k}"
+                + (f" * k_span={self.k_span}" if eff_k != self.block_k else ""))
+        if n % eff_n != 0:
+            raise ValueError(
+                f"N={n} must be a multiple of block_n={self.block_n}"
+                + (f" * n_span={self.n_span}" if eff_n != self.block_n else ""))
         if family in _resources.FAMILIES:
             budget = device_spec().vmem_bytes
             fp = _resources.footprint(family, self, m=m, k=k, n=n,
@@ -132,8 +148,17 @@ class KernelConfig:
                     f"budget even single-buffered (buffers: {fp['buffers']})")
         return self
 
-    def compatible(self, k: int, n: int) -> bool:
-        return k % self.block_k == 0 and n % self.block_n == 0
+    def effective_blocks(self, family: str = "gemm") -> "tuple[int, int]":
+        """(K, N) divisibility units for ``family``: the wgrad grid steps
+        by whole (k_span*block_k, n_span*block_n) super-tiles; every other
+        family ignores the spans."""
+        if family == "wgrad":
+            return self.block_k * self.k_span, self.block_n * self.n_span
+        return self.block_k, self.block_n
+
+    def compatible(self, k: int, n: int, family: str = "gemm") -> bool:
+        eff_k, eff_n = self.effective_blocks(family)
+        return k % eff_k == 0 and n % eff_n == 0
 
     def with_(self, **kw) -> "KernelConfig":
         return dataclasses.replace(self, **kw)
@@ -145,7 +170,8 @@ class KernelConfig:
                 "out_dtype": (None if self.out_dtype is None
                               else jnp.dtype(self.out_dtype).name),
                 "wgrad_precision": self.wgrad_precision,
-                "fuse_producer": self.fuse_producer}
+                "fuse_producer": self.fuse_producer,
+                "n_span": self.n_span, "k_span": self.k_span}
 
     @classmethod
     def from_dict(cls, d: dict) -> "KernelConfig":
@@ -154,7 +180,9 @@ class KernelConfig:
                    block_k=int(d["block_k"]), backend=d.get("backend"),
                    out_dtype=None if name is None else jnp.dtype(name),
                    wgrad_precision=d.get("wgrad_precision", "bf16"),
-                   fuse_producer=bool(d.get("fuse_producer", False)))
+                   fuse_producer=bool(d.get("fuse_producer", False)),
+                   n_span=int(d.get("n_span", 1)),
+                   k_span=int(d.get("k_span", 1)))
 
     @classmethod
     def default(cls, device_kind: Optional[str] = None) -> "KernelConfig":
@@ -486,16 +514,30 @@ def shared_plan(group_sizes: jax.Array, m: int, *,
 DECODE_BLOCK_MS = (8, 16)
 DECODE_POOL: "tuple[KernelConfig, ...]" = tuple(
     KernelConfig(block_m=bm) for bm in DECODE_BLOCK_MS)
+# multi-tile wgrad span axis: same 128x128 base tile, but one grid cell
+# owns a (k_span*128, n_span*128) output super-tile so the x operand tile
+# is fetched once per n_span N steps and dy once per k_span K steps
+# (kernels/wgrad_kernel.py).  Only the wgrad family reads the spans —
+# autotune for every other op drops the span>1 entries up front, so the
+# shared pool stays one namespace.  The axis stops at 4: span 8's
+# (1024, 1024) f32 super-tile accumulator alone would blow the v5e VMEM
+# budget the resource model proves entries against (REPRO-V01).
+WGRAD_SPANS = (2, 4)
 CONFIG_POOL: "tuple[KernelConfig, ...]" = DECODE_POOL + tuple(
     KernelConfig(block_m=bm, block_n=bn, block_k=bk)
     for bm in (64, 128, 256, 512)
     for bn, bk in ((128, 128), (256, 128))
+) + tuple(
+    KernelConfig(block_m=bm, n_span=s, k_span=s)
+    for bm in (128, 256, 512)
+    for s in WGRAD_SPANS
 )
 
 
 def candidate_pool(k: int, n: int,
                    pool: Optional[Iterable[KernelConfig]] = None,
-                   require_transposable: bool = True
+                   require_transposable: bool = True,
+                   family: str = "gemm"
                    ) -> "tuple[KernelConfig, ...]":
     """Pool entries legal for this (K, N) — never empty for 128-aligned
     shapes; falls back to the per-device default otherwise.
@@ -504,10 +546,14 @@ def candidate_pool(k: int, n: int,
     the transposed (N, K) orientation: the fp8 custom VJP runs the dgrad
     through the same config against ``w^T``, so a forward-only-legal
     selection would crash every training step's backward.
+
+    ``family`` feeds span-aware divisibility: for ``"wgrad"`` an entry
+    must divide (K, N) by its whole (k_span*block_k, n_span*block_n)
+    super-tile, so e.g. the span-4 entries drop out at K=256.
     """
     def legal(c):
-        return c.compatible(k, n) and (
-            not require_transposable or c.compatible(n, k))
+        return c.compatible(k, n, family) and (
+            not require_transposable or c.compatible(n, k, family))
 
     cands = tuple(c for c in (tuple(pool) if pool is not None else CONFIG_POOL)
                   if legal(c))
@@ -571,7 +617,8 @@ def _eff_rows(block_m: int) -> int:
 
 def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
                     spec: Optional[DeviceSpec] = None,
-                    quant_output: bool = False) -> float:
+                    quant_output: bool = False,
+                    precision: str = "fp8") -> float:
     """Roofline estimate of one grouped GEMM under ``config``: max of the
     compute and memory terms, with the visit-inflation the plan implies
     (worst case: every group boundary splits a tile, +G-1 visits).
@@ -581,7 +628,8 @@ def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
     ``quant_output`` models the quantizing-epilogue variant
     (``op="gemm_quant"``): the bf16 C flush is replaced by the fp8
     payload + f32 1x128 scale rows — half the output bytes, same
-    compute."""
+    compute.  ``precision="bf16"`` models the true-bf16 kernel
+    (``op="gemm_bf16"``): 2-byte operands, no scale-row traffic."""
     spec = spec or device_spec()
     bm, bn = config.block_m, config.block_n
     num_tiles = -(-m // bm)
@@ -591,14 +639,56 @@ def estimate_cost_s(m: int, k: int, n: int, g: int, config: KernelConfig,
     nb = -(-n // QUANT_BLOCK)
     # every visit computes a full (bm, k) x (k, n) tile row
     flops = 2.0 * visits * _eff_rows(bm) * k * n
-    a_bytes = visits * n_steps * bm * (k + 4 * kb)     # fp8 A + f32 S_A
-    b_bytes = visits * k * n                           # fp8 B per visit
+    if precision == "bf16":
+        a_bytes = visits * n_steps * bm * k * 2        # bf16 A, no scales
+        b_bytes = visits * k * n * 2                   # bf16 B per visit
+    else:
+        a_bytes = visits * n_steps * bm * (k + 4 * kb)  # fp8 A + f32 S_A
+        b_bytes = visits * k * n                        # fp8 B per visit
     if quant_output:
         c_bytes = num_tiles * bm * (n + 4 * nb)        # fp8 C + f32 scales
     else:
         c_bytes = num_tiles * bm * n * 2               # bf16 C flush
     return max(flops / spec.peak_flops,
                (a_bytes + b_bytes + c_bytes) / spec.hbm_bw)
+
+
+def wgrad_operand_bytes(m: int, k: int, n: int, g: int,
+                        config: KernelConfig,
+                        precision: str = "bf16") -> int:
+    """Modeled operand HBM bytes of one wgrad pass (x + dy fetches; the
+    dw flush is schedule-independent and excluded).  This is the traffic
+    model the multi-tile schedule exists to shrink:
+
+    * single-tile (``n_span = k_span = 1``): each visit walks every
+      (k, n) grid cell, so per visit the operands cost
+      ``kn_steps * (bm*bk + bm*bn)`` elements — x is re-fetched from HBM
+      on every N step and dy on every K step.
+    * multi-tile: one grid cell owns a ``(k_span*bk, n_span*bn)`` output
+      super-tile, the x tile stays VMEM-resident across its n_span N
+      steps and dy across its k_span K steps, so per visit the operands
+      cost ``ceil(n_steps/n_span) * bm*k + ceil(k_steps/k_span) * bm*n``
+      elements — at full span this is the ideal ``k*bm + n*bm``, one
+      fetch of each operand tile per visit.
+
+    With ``precision="fp8"`` the payloads are 1-byte and each grid cell
+    additionally fetches the whole f32 1x128 scale rows for its tiles."""
+    bm = config.block_m
+    visits = -(-m // bm) + max(g - 1, 0)
+    k_steps = -(-k // config.block_k)
+    n_steps = -(-n // config.block_n)
+    k_groups = -(-k_steps // config.k_span)
+    n_groups = -(-n_steps // config.n_span)
+    if precision == "fp8":
+        kb = -(-k // QUANT_BLOCK)
+        nb = -(-n // QUANT_BLOCK)
+        x_bytes = visits * n_groups * bm * k              # fp8 payload
+        dy_bytes = visits * k_groups * bm * n
+        scale_bytes = visits * k_groups * n_groups * bm * 4 * (kb + nb)
+        return int(x_bytes + dy_bytes + scale_bytes)
+    x_bytes = visits * n_groups * bm * k * 2              # bf16 payload
+    dy_bytes = visits * k_groups * bm * n * 2
+    return int(x_bytes + dy_bytes)
 
 
 def estimate_cost_s_wgrad(m: int, k: int, n: int, g: int,
@@ -608,28 +698,26 @@ def estimate_cost_s_wgrad(m: int, k: int, n: int, g: int,
     """Roofline estimate of the ragged-contraction (wgrad) grouped GEMM
     ``dw[g] = x_g^T @ dy_g`` under ``config``.  Same visit inflation as the
     forward (the contraction walks the same M-tile schedule); operand
-    traffic differs: x is re-fetched per N step, dy per K step, and the
-    dense ``[G, K, N]`` f32 output flushes once per group.  With
+    traffic is :func:`wgrad_operand_bytes` — per visit the old single-tile
+    schedule moves ``kn_steps*(bm*bk + bm*bn)`` operand elements while a
+    full-span multi-tile schedule moves ``k*bm + n*bm`` — and the dense
+    ``[G, K, N]`` f32 output flushes once per group.  The memory term is
+    what shrinks with wider spans, so on memory-bound wgrad shapes the
+    model prefers the widest span that divides the shape and fits VMEM
+    (the resource model prunes the rest); on compute-bound shapes the
+    span axis is cost-neutral and measurement arbitrates.  With
     ``precision="fp8"`` the operands are 1-byte fp8 plus their f32 1x128
-    tile-scale rows (over-fetched whole per tile, like the forward)."""
+    tile-scale rows (over-fetched whole per grid cell, like the
+    forward)."""
     spec = spec or device_spec()
     bm = config.block_m
-    num_tiles = -(-m // bm)
-    visits = num_tiles + max(g - 1, 0)
-    k_steps = -(-k // config.block_k)
-    n_steps = -(-n // config.block_n)
+    visits = -(-m // bm) + max(g - 1, 0)
     flops = 2.0 * visits * _eff_rows(bm) * k * n
-    if precision == "fp8":
-        kb = -(-k // QUANT_BLOCK)
-        nb = -(-n // QUANT_BLOCK)
-        x_bytes = visits * n_steps * bm * (k + 4 * kb)   # fp8 x + f32 S_x
-        dy_bytes = visits * k_steps * bm * (n + 4 * nb)  # fp8 dy + f32 S_dy
-    else:
-        x_bytes = visits * n_steps * bm * k * 2          # bf16 x per N step
-        dy_bytes = visits * k_steps * bm * n * 2         # bf16 dy per K step
+    operand_bytes = wgrad_operand_bytes(m, k, n, g, config,
+                                        precision=precision)
     dw_bytes = g * k * n * 4                             # f32 dw flush
     return max(flops / spec.peak_flops,
-               (x_bytes + dy_bytes + dw_bytes) / spec.hbm_bw)
+               (operand_bytes + dw_bytes) / spec.hbm_bw)
 
 
 def estimate_cost_s_quantize(m: int, k: int, config: KernelConfig,
@@ -759,6 +847,7 @@ def clear_cache_memo() -> None:
 # by adding one entry (+ a _measure_candidate branch), nothing else.
 _AUTOTUNE_OPS = {
     "gemm": ("gemm", "fp8"),
+    "gemm_bf16": ("gemm", "bf16"),   # true bf16 Pallas baseline kernel
     "decode": ("gemm", "fp8"),       # tiny-M serving shapes, decode pool
     "gemm_quant": ("gemm_quant", "fp8"),  # fused quantizing epilogue
     "wgrad": ("wgrad", "bf16"),
@@ -767,10 +856,14 @@ _AUTOTUNE_OPS = {
     "act_quant": ("act_quant", "fp8"),
 }
 
-# autotune op -> (resource-model family, wgrad operand precision) for the
-# static feasibility pruning pass
+# autotune op -> (resource-model family, operand precision) for the
+# static feasibility pruning pass.  The precision slot feeds
+# ``wgrad_precision`` for the wgrad family (scale-row buffers) and
+# ``gemm_precision`` for the gemm family (bf16 = 2-byte operand tiles,
+# no scale buffers); None means the family's fp8 default footprint.
 _RESOURCE_FAMILIES = {
     "gemm": ("gemm", None),
+    "gemm_bf16": ("gemm", "bf16"),
     "decode": ("gemm", None),
     "gemm_quant": ("gemm_quant", None),
     "wgrad": ("wgrad", "bf16"),
@@ -809,12 +902,13 @@ def _prune_infeasible(cands, op: str, m: int, k: int, n: int,
     Returns ``(kept, pruned)`` with ``pruned`` as (config, reason) pairs.
     If the model would reject everything the original pool stands (the
     lint will flag the pool itself; selection must not dead-end)."""
-    family, wprec = _RESOURCE_FAMILIES[op]
+    family, prec = _RESOURCE_FAMILIES[op]
     kept, pruned = [], []
     for c in cands:
         reason = _resources.infeasible_reason(
             family, c, m, k, n, vmem_bytes=spec.vmem_bytes,
-            wgrad_precision=wprec)
+            wgrad_precision=prec if family == "wgrad" else None,
+            gemm_precision=prec if family == "gemm" else None)
         (kept if reason is None else pruned).append(
             c if reason is None else (c, reason))
     if not kept:
@@ -870,6 +964,13 @@ def _measure_candidate(config: KernelConfig, m: int, k: int, n: int, g: int,
         def run():
             return dispatch.act_quantize(ga, ua, backend=config.backend,
                                          config=config)
+    elif op == "gemm_bf16":
+        xb = jnp.asarray(rng.standard_normal((m, k)), jnp.bfloat16)
+        wb = jnp.asarray(rng.standard_normal((g, k, n)), jnp.bfloat16)
+
+        def run():
+            return dispatch.grouped_gemm_bf16(xb, wb, gs, num_groups=g,
+                                              config=config)
     elif op == "gemm_quant":
         a8, sa = ref.quantize_tilewise_ref(
             jnp.asarray(rng.standard_normal((m, k)), jnp.float32))
@@ -970,7 +1071,13 @@ def autotune(m: int, k: int, n: int, g: int, *,
     # orientation under the same config, so it shares gemm's legality
     cands = candidate_pool(
         k, n, pool,
-        require_transposable=(op in ("gemm", "decode", "gemm_quant")))
+        require_transposable=(op in ("gemm", "gemm_bf16", "decode",
+                                     "gemm_quant")),
+        family=_RESOURCE_FAMILIES[op][0])
+    if op not in ("wgrad", "wgrad_fp8"):
+        # the span axes exist for the wgrad schedule only — every span>1
+        # entry is a duplicate of its span-1 base for the other ops
+        cands = tuple(c for c in cands if c.n_span == 1 and c.k_span == 1)
     if op in ("quantize", "act_quant"):
         # entries differing only in (block_n, block_k) are duplicates for
         # the quantizer/epilogue — keep one per tile height
@@ -995,6 +1102,9 @@ def autotune(m: int, k: int, n: int, g: int, *,
                         c.block_n, c.block_k, reason)
     if op in ("gemm", "decode"):
         cost = estimate_cost_s
+    elif op == "gemm_bf16":
+        cost = lambda m_, k_, n_, g_, c, s: \
+            estimate_cost_s(m_, k_, n_, g_, c, s, precision="bf16")  # noqa: E731
     elif op == "gemm_quant":
         cost = lambda m_, k_, n_, g_, c, s: \
             estimate_cost_s(m_, k_, n_, g_, c, s, quant_output=True)  # noqa: E731
@@ -1007,7 +1117,17 @@ def autotune(m: int, k: int, n: int, g: int, *,
     else:
         prec = "fp8" if op == "wgrad_fp8" else "bf16"
         cost = lambda *a: estimate_cost_s_wgrad(*a, precision=prec)  # noqa: E731
-    ranked = sorted(cands, key=lambda c: cost(m, k, n, g, c, spec))
+    if op in ("wgrad", "wgrad_fp8"):
+        # secondary key: modeled operand HBM bytes.  On compute-bound
+        # shapes the roofline max() ties across span widths — prefer the
+        # schedule that moves fewer bytes (the multi-tile point), leaving
+        # measurement to arbitrate among the top candidates
+        prec_rank = "fp8" if op == "wgrad_fp8" else "bf16"
+        ranked = sorted(cands, key=lambda c: (
+            cost(m, k, n, g, c, spec),
+            wgrad_operand_bytes(m, k, n, g, c, precision=prec_rank)))
+    else:
+        ranked = sorted(cands, key=lambda c: cost(m, k, n, g, c, spec))
     overrides = {"backend": base}
     if op == "wgrad_fp8":
         overrides["wgrad_precision"] = "fp8"

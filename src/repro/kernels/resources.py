@@ -14,8 +14,11 @@ package actually declare:
   output tile, and one f32 accumulator scratch ``(bm, bn)``;
 * the quantizing-epilogue twin (``gmm_pallas_quant``): fp8 payload tile
   + ``(bm, bn/128)`` f32 scale tile instead of the wide output;
-* ragged wgrad: x ``(bm, bk)`` / dy ``(bm, bn)`` operand tiles (bf16, or
-  fp8 + their 1x128 scale rows), ``(bk, bn)`` f32 dw tile + accumulator;
+* ragged wgrad: x ``(bm, k_span*bk)`` / dy ``(bm, n_span*bn)`` operand
+  tiles (bf16, or fp8 + their 1x128 scale rows) — the multi-tile spans
+  keep each operand tile VMEM-resident across the sub-tiles of one
+  ``(k_span*bk, n_span*bn)`` output super-tile — plus that super-tile's
+  f32 dw block and accumulator;
 * tilewise quantize / fused act_quant: whole-K row blocks ``(bm, K)``
   (one input for quantize, gate AND up for the fused epilogue) plus the
   fp8 payload and f32 scale outputs.
@@ -42,7 +45,7 @@ from typing import Any, Dict, List, Optional, Tuple
 #: bump when the footprint formulas or budgets change: the autotune JSON
 #: cache namespaces its keys by this, so selections made under an older
 #: model (e.g. pre-pruning) are ignored rather than trusted
-RESOURCE_MODEL_VERSION = 2
+RESOURCE_MODEL_VERSION = 3
 
 QUANT_BLOCK = 128   # 1x128 / 128x128 scale granularity (must agree with
                     # plan/ref/quantization — REPRO-R06 checks the set)
@@ -120,6 +123,15 @@ def config_blocks(config: Any) -> "Tuple[int, int, int]":
     return (int(config.block_m), int(config.block_n), int(config.block_k))
 
 
+def config_spans(config: Any) -> "Tuple[int, int]":
+    """``(n_span, k_span)`` multi-tile wgrad spans from a KernelConfig-like
+    object or a plain dict; absent fields mean the single-tile schedule."""
+    if isinstance(config, dict):
+        return (int(config.get("n_span", 1)), int(config.get("k_span", 1)))
+    return (int(getattr(config, "n_span", 1)),
+            int(getattr(config, "k_span", 1)))
+
+
 def _totals(pipelined: "Dict[str, int]",
             scratch: "Dict[str, int]") -> "Dict[str, Any]":
     buffers = {**{name: b * PIPELINE_BUFFERS for name, b in pipelined.items()},
@@ -136,21 +148,30 @@ def _totals(pipelined: "Dict[str, int]",
 
 def gemm_footprint(block_m: int, block_n: int, block_k: int, *,
                    k: int, n: int, out_itemsize: int = 2,
-                   quant_output: bool = False) -> "Dict[str, Any]":
+                   quant_output: bool = False,
+                   precision: str = "fp8") -> "Dict[str, Any]":
     """Grouped-GEMM per-program VMEM residency under the kernel's actual
     BlockSpecs.  The S_A/S_B scale fetches are *whole rows/blocks* per
     M-tile (shape-dependent: ``ceil(K/128)`` columns), so the footprint
     grows with K even at fixed tile geometry.  ``quant_output`` models
     the fused quantizing epilogue: the wide output tile is replaced by
-    the fp8 payload + its ``(bm, bn/128)`` f32 scale tile."""
+    the fp8 payload + its ``(bm, bn/128)`` f32 scale tile.
+    ``precision="bf16"`` models the true-bf16 kernel (``gmm_pallas_bf16``):
+    2-byte operand tiles and no scale buffers at all."""
     kb = _ceil_div(k, QUANT_BLOCK)
     nb = _ceil_div(n, QUANT_BLOCK)
-    pipelined = {
-        "a_tile": tile_bytes(block_m, block_k, 1),
-        "s_a_row": tile_bytes(block_m, kb, 4),
-        "b_tile": tile_bytes(block_k, block_n, 1),
-        "s_b_block": tile_bytes(kb, nb, 4),
-    }
+    if precision == "bf16":
+        pipelined = {
+            "a_tile": tile_bytes(block_m, block_k, 2),
+            "b_tile": tile_bytes(block_k, block_n, 2),
+        }
+    else:
+        pipelined = {
+            "a_tile": tile_bytes(block_m, block_k, 1),
+            "s_a_row": tile_bytes(block_m, kb, 4),
+            "b_tile": tile_bytes(block_k, block_n, 1),
+            "s_b_block": tile_bytes(kb, nb, 4),
+        }
     if quant_output:
         pipelined["out_payload"] = tile_bytes(block_m, block_n, 1)
         pipelined["out_scales"] = tile_bytes(
@@ -162,22 +183,29 @@ def gemm_footprint(block_m: int, block_n: int, block_k: int, *,
 
 
 def wgrad_footprint(block_m: int, block_n: int, block_k: int, *,
-                    k: int, n: int,
-                    precision: str = "bf16") -> "Dict[str, Any]":
+                    k: int, n: int, precision: str = "bf16",
+                    n_span: int = 1, k_span: int = 1) -> "Dict[str, Any]":
     """Ragged-contraction (wgrad) per-program residency: x/dy operand
-    tiles (bf16, or fp8 + their whole 1x128 scale rows), the ``(bk, bn)``
-    f32 dw output tile, and its accumulator scratch."""
+    tiles (bf16, or fp8 + their whole 1x128 scale rows), the f32 dw
+    output block, and its accumulator scratch.  The multi-tile spans
+    widen every block: one program owns a ``(k_span*bk, n_span*bn)``
+    output super-tile and holds the matching ``(bm, k_span*bk)`` x and
+    ``(bm, n_span*bn)`` dy operand tiles VMEM-resident across its
+    sub-tiles — that residency is exactly what the wider footprint pays
+    for the ``k_span``/``n_span``-fold fetch reduction."""
     fp8 = precision == "fp8"
     it = 1 if fp8 else 2
+    wk = block_k * k_span
+    wn = block_n * n_span
     pipelined = {
-        "x_tile": tile_bytes(block_m, block_k, it),
-        "dy_tile": tile_bytes(block_m, block_n, it),
-        "dw_tile": tile_bytes(block_k, block_n, 4),
+        "x_tile": tile_bytes(block_m, wk, it),
+        "dy_tile": tile_bytes(block_m, wn, it),
+        "dw_tile": tile_bytes(wk, wn, 4),
     }
     if fp8:
         pipelined["s_x_row"] = tile_bytes(block_m, _ceil_div(k, QUANT_BLOCK), 4)
         pipelined["s_dy_row"] = tile_bytes(block_m, _ceil_div(n, QUANT_BLOCK), 4)
-    scratch = {"acc_f32": tile_bytes(block_k, block_n, 4)}
+    scratch = {"acc_f32": tile_bytes(wk, wn, 4)}
     return _totals(pipelined, scratch)
 
 
@@ -205,24 +233,30 @@ def quantize_footprint(block_m: int, *, k: int, m: Optional[int] = None,
 
 def footprint(family: str, config: Any, *, m: int, k: int, n: int,
               out_itemsize: int = 2,
-              wgrad_precision: Optional[str] = None) -> "Dict[str, Any]":
+              wgrad_precision: Optional[str] = None,
+              gemm_precision: Optional[str] = None) -> "Dict[str, Any]":
     """Per-program VMEM footprint of ``family`` under ``config`` at shape
     ``(m, k, n)``.  ``config`` is a KernelConfig-like object or a plain
     ``{"block_m": ..}`` dict.  Returns ``{"buffers", "total",
     "total_single"}`` — ``total`` is double-buffered (the pipelined
-    steady state), ``total_single`` the unpipelined floor."""
+    steady state), ``total_single`` the unpipelined floor.
+    ``gemm_precision="bf16"`` selects the true-bf16 kernel's operand
+    buffers; the wgrad family reads the config's multi-tile spans."""
     bm, bn, bk = config_blocks(config)
     if family in ("gemm", "gemm_quant"):
         return gemm_footprint(bm, bn, bk, k=k, n=n,
                               out_itemsize=out_itemsize,
-                              quant_output=family == "gemm_quant")
+                              quant_output=family == "gemm_quant",
+                              precision=gemm_precision or "fp8")
     if family == "wgrad":
         prec = wgrad_precision
         if prec is None:
             prec = (config.get("wgrad_precision", "bf16")
                     if isinstance(config, dict)
                     else getattr(config, "wgrad_precision", "bf16"))
-        return wgrad_footprint(bm, bn, bk, k=k, n=n, precision=prec)
+        ns, ks = config_spans(config)
+        return wgrad_footprint(bm, bn, bk, k=k, n=n, precision=prec,
+                               n_span=ns, k_span=ks)
     if family in ("quantize", "act_quant"):
         return quantize_footprint(bm, k=k, m=m, fused=family == "act_quant")
     raise ValueError(f"no footprint model for operator family {family!r}; "
@@ -254,23 +288,30 @@ def alignment_issues(config: Any) -> "List[Tuple[str, str]]":
 
 
 def degeneracy_issues(config: Any, *, m: int, k: int, n: int,
-                      elementwise: bool = False) -> "List[str]":
+                      elementwise: bool = False,
+                      n_span: int = 1, k_span: int = 1) -> "List[str]":
     """Grid-degeneracy hazards at a concrete shape: a tile wider than the
     operand it walks (zero or fractional grid steps), or an M tile so
     tall the grid degenerates to one mostly-empty visit (``block_m >=
     2*M`` — the half-size tile covers the same rows in the same number of
     visits at half the fetch).  Elementwise kernels clamp their tile
-    height to M, so only the GEMM-shaped families carry the M hazard."""
+    height to M, so only the GEMM-shaped families carry the M hazard.
+    The wgrad caller passes its multi-tile spans: the grid steps by whole
+    ``(k_span*bk, n_span*bn)`` super-tiles, so a span that outgrows the
+    operand is degenerate even when the base tile fits."""
     bm, bn, bk = config_blocks(config)
+    bn, bk = bn * n_span, bk * k_span
+    span_n = f" * n_span={n_span}" if n_span > 1 else ""
+    span_k = f" * k_span={k_span}" if k_span > 1 else ""
     out = []
     if elementwise:
         return out
     if n and bn > n:
-        out.append(f"block_n={bn} is wider than the operand (N={n}): the "
-                   f"N grid has zero full steps")
+        out.append(f"block_n{span_n}={bn} is wider than the operand "
+                   f"(N={n}): the N grid has zero full steps")
     if k and bk > k:
-        out.append(f"block_k={bk} is wider than the operand (K={k}): the "
-                   f"K grid has zero full steps")
+        out.append(f"block_k{span_k}={bk} is wider than the operand "
+                   f"(K={k}): the K grid has zero full steps")
     if m and bm >= 2 * m and bm > 8:
         out.append(f"block_m={bm} is degenerate for M={m}: one visit "
                    f"covers every row with >=50% of the fetched A rows "
@@ -280,7 +321,8 @@ def degeneracy_issues(config: Any, *, m: int, k: int, n: int,
 
 def infeasible_reason(family: str, config: Any, m: int, k: int, n: int, *,
                       vmem_bytes: float,
-                      wgrad_precision: Optional[str] = None
+                      wgrad_precision: Optional[str] = None,
+                      gemm_precision: Optional[str] = None
                       ) -> "Optional[str]":
     """One-line reason this ``(family, config, shape)`` triple can never
     run well (or at all) on a device with ``vmem_bytes`` of VMEM, or
@@ -289,11 +331,14 @@ def infeasible_reason(family: str, config: Any, m: int, k: int, n: int, *,
     for code, msg in alignment_issues(config):
         return f"misaligned ({code}): {msg}"
     elementwise = family in ("quantize", "act_quant")
+    ns, ks = config_spans(config) if family == "wgrad" else (1, 1)
     for msg in degeneracy_issues(config, m=m, k=k, n=n,
-                                 elementwise=elementwise):
+                                 elementwise=elementwise,
+                                 n_span=ns, k_span=ks):
         return f"degenerate grid: {msg}"
     fp = footprint(family, config, m=m, k=k, n=n,
-                   wgrad_precision=wgrad_precision)
+                   wgrad_precision=wgrad_precision,
+                   gemm_precision=gemm_precision)
     if fp["total"] > vmem_bytes:
         return (f"VMEM footprint {fp['total']} B (double-buffered) exceeds "
                 f"the {int(vmem_bytes)} B budget")

@@ -13,14 +13,22 @@ only on ``(group_sizes, M, block_m)``, so the same :class:`TilePlan` built
 once per routing decision serves gate/up/down forwards, both dgrads, and
 every wgrad.  What changes is the role of a visit:
 
-  * the grid walks ``(K tiles, N tiles, visits)`` with the visit axis
-    innermost; visit t touches M-tile ``m_tile_ids[t]`` on behalf of group
-    ``group_ids[t]``;
+  * the grid walks ``(K super-tiles, N super-tiles, visits)`` with the
+    visit axis innermost; visit t touches M-tile ``m_tile_ids[t]`` on
+    behalf of group ``group_ids[t]``;
   * instead of a masked *store* of an output row tile, each visit performs
-    a masked *accumulation* into the group's dense ``[block_k, block_n]``
-    output tile: rows of the M-tile owned by other groups (or beyond
-    ``sum(group_sizes)``) are zeroed before the transposed dot, so
-    boundary tiles contribute exactly their owned rows;
+    a masked *accumulation* into the group's dense ``[k_span*block_k,
+    n_span*block_n]`` output super-tile: rows of the M-tile owned by other
+    groups (or beyond ``sum(group_sizes)``) are zeroed before the
+    transposed dot, so boundary tiles contribute exactly their owned rows;
+  * the multi-tile spans are the VMEM-residency lever: one grid cell
+    fetches its ``(block_m, k_span*block_k)`` x tile and ``(block_m,
+    n_span*block_n)`` dy tile ONCE and sweeps every ``(block_k, block_n)``
+    sub-tile of the super-tile from those resident copies — at span 1 the
+    x tile is re-fetched from HBM on every N step and dy on every K step
+    (the old schedule, still the exact per-cell accumulation this kernel
+    reproduces bitwise: the sub-tile dots have the same shapes, operand
+    values and visit order regardless of span);
   * consecutive visits of one group share the output block (``group_ids``
     is non-decreasing), so Pallas keeps it resident in VMEM across the
     group's M-tiles and flushes once per group — the accumulation analogue
@@ -109,22 +117,27 @@ def _zero_empty_groups(dw, plan, out_dtype):
 
 def _run_ragged_contraction(kernel_body, operands, in_specs, group_sizes, *,
                             m, k, n, num_groups, block_m, block_n, block_k,
-                            out_dtype, interpret, plan):
+                            out_dtype, interpret, plan,
+                            n_span=1, k_span=1):
     """Shared driver of both wgrad precisions: M=0 short-circuit,
-    plan-or-build, the (K tiles, N tiles, visits) grid, the pallas_call
-    scaffold (dense [G, K, N] output, f32 accumulator scratch, parallel/
-    parallel/arbitrary semantics), and the empty-group epilogue.  The
-    precision variants differ only in their operand list + BlockSpecs and
-    the kernel body; everything scheduling-related lives HERE once."""
+    plan-or-build, the (K super-tiles, N super-tiles, visits) grid, the
+    pallas_call scaffold (dense [G, K, N] output, f32 super-tile
+    accumulator scratch, parallel/parallel/arbitrary semantics), and the
+    empty-group epilogue.  The precision variants differ only in their
+    operand list + BlockSpecs and the kernel body; everything
+    scheduling-related lives HERE once."""
     if m == 0:
         return jnp.zeros((num_groups, k, n), out_dtype)
     if plan is None:
         plan = make_tile_plan(group_sizes, m, block_m=block_m,
                               num_groups=num_groups)
-    grid = (k // block_k, n // block_n, plan.max_visits)
+    wk = block_k * k_span
+    wn = block_n * n_span
+    grid = (k // wk, n // wn, plan.max_visits)
     kernel = functools.partial(
         kernel_body, block_m=block_m, block_k=block_k, block_n=block_n,
-        max_visits=plan.max_visits, out_dtype=out_dtype)
+        max_visits=plan.max_visits, out_dtype=out_dtype,
+        n_span=n_span, k_span=k_span)
     dw = pl.pallas_call(
         kernel,
         grid_spec=pltpu.PrefetchScalarGridSpec(
@@ -132,9 +145,9 @@ def _run_ragged_contraction(kernel_body, operands, in_specs, group_sizes, *,
             grid=grid,
             in_specs=in_specs,
             out_specs=pl.BlockSpec(
-                (1, block_k, block_n),
+                (1, wk, wn),
                 lambda k_i, n_i, t, go, gi, mi: (gi[t], k_i, n_i)),
-            scratch_shapes=[pltpu.VMEM((block_k, block_n), jnp.float32)],
+            scratch_shapes=[pltpu.VMEM((wk, wn), jnp.float32)],
         ),
         out_shape=jax.ShapeDtypeStruct((num_groups, k, n), out_dtype),
         compiler_params=compat.tpu_compiler_params(
@@ -145,11 +158,38 @@ def _run_ragged_contraction(kernel_body, operands, in_specs, group_sizes, *,
     return _zero_empty_groups(dw, plan, out_dtype)
 
 
+def _span_accumulate(acc_ref, x, dy, *, block_k, block_n, n_span, k_span):
+    """Accumulate every (block_k, block_n) sub-tile dot of one visit into
+    the f32 super-tile accumulator.  The sub-tile dots are EXACTLY the
+    single-tile kernel's per-(k, n)-cell dots — same operand shapes, same
+    values, same per-cell f32 addition order across visits — assembled
+    into one super-tile update, so any span is bitwise-equal to span 1.
+    ``x``/``dy`` are the visit's masked f32 operand tiles, ``(block_m,
+    k_span*block_k)`` and ``(block_m, n_span*block_n)``, already resident
+    in VMEM — the static sub-tile loop re-slices them instead of
+    re-fetching from HBM."""
+    rows = []
+    for kk in range(k_span):
+        xs = x[:, kk * block_k:(kk + 1) * block_k]
+        cells = [
+            jax.lax.dot_general(
+                xs, dy[:, nn * block_n:(nn + 1) * block_n],
+                dimension_numbers=(((0,), (0,)), ((), ())),
+                preferred_element_type=jnp.float32)
+            for nn in range(n_span)
+        ]
+        rows.append(cells[0] if n_span == 1
+                    else jnp.concatenate(cells, axis=1))
+    update = rows[0] if k_span == 1 else jnp.concatenate(rows, axis=0)
+    acc_ref[...] += update
+
+
 def _gmm_wgrad_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
                       x_ref, dy_ref,                     # VMEM in
                       out_ref,                           # VMEM out
                       acc_ref,                           # scratch
-                      *, block_m, block_k, block_n, max_visits, out_dtype):
+                      *, block_m, block_k, block_n, max_visits, out_dtype,
+                      n_span, k_span):
     first, last, owned = _visit_bookkeeping(
         group_offsets_ref, group_ids_ref, m_tile_ids_ref,
         block_m=block_m, max_visits=max_visits)
@@ -160,12 +200,12 @@ def _gmm_wgrad_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
 
     # mask BOTH operands: rows beyond M (the block-padded tail of the last
     # tile) or beyond sum(group_sizes) may hold garbage/NaN, and 0 * NaN
-    # would still poison the accumulation
-    x = jnp.where(owned, x_ref[...].astype(jnp.float32), 0.0)    # (bm, bk)
-    dy = jnp.where(owned, dy_ref[...].astype(jnp.float32), 0.0)  # (bm, bn)
-    acc_ref[...] += jax.lax.dot_general(
-        x, dy, dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    # would still poison the accumulation.  One mask covers the whole
+    # fetched span tile — the sub-tile loop slices the resident copy.
+    x = jnp.where(owned, x_ref[...].astype(jnp.float32), 0.0)    # (bm, wk)
+    dy = jnp.where(owned, dy_ref[...].astype(jnp.float32), 0.0)  # (bm, wn)
+    _span_accumulate(acc_ref, x, dy, block_k=block_k, block_n=block_n,
+                     n_span=n_span, k_span=k_span)
 
     @pl.when(last)
     def _store():
@@ -175,13 +215,14 @@ def _gmm_wgrad_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("num_groups", "block_m", "block_n", "block_k",
-                     "out_dtype", "interpret"))
+                     "out_dtype", "interpret", "n_span", "k_span"))
 def gmm_pallas_wgrad(x: jax.Array, dy: jax.Array, group_sizes: jax.Array, *,
                      num_groups: int | None = None,
                      block_m: int = 128, block_n: int = 128,
                      block_k: int = 128,
                      out_dtype: Any = jnp.float32, interpret: bool = False,
-                     plan: TilePlan | None = None):
+                     plan: TilePlan | None = None,
+                     n_span: int = 1, k_span: int = 1):
     """Padding-free ragged-contraction grouped GEMM (wgrad orientation).
 
     x:  [M, K] float — concatenated groups, arbitrary (ragged) M^g,
@@ -195,6 +236,13 @@ def gmm_pallas_wgrad(x: jax.Array, dy: jax.Array, group_sizes: jax.Array, *,
         When given, its ``block_m`` governs the contraction tiling and the
         ``block_m`` argument is ignored.  The usual TilePlan contract
         applies: it must have been built from these ``group_sizes``.
+    n_span/k_span: multi-tile schedule — one grid cell owns a
+        ``(k_span*block_k, n_span*block_n)`` output super-tile and keeps
+        its x/dy operand tiles VMEM-resident across the sub-tiles, so x
+        is fetched once per ``n_span`` N steps and dy once per ``k_span``
+        K steps.  Bitwise-equal to span 1 (the per-cell dots and their
+        accumulation order are unchanged); K must divide by
+        ``block_k*k_span`` and N by ``block_n*n_span``.
     returns [G, K, N] out_dtype with ``dw[g] = x_g^T @ dy_g`` in f32
         accumulation; groups with zero rows come back exactly zero.
     """
@@ -208,23 +256,26 @@ def gmm_pallas_wgrad(x: jax.Array, dy: jax.Array, group_sizes: jax.Array, *,
     if plan is not None:
         block_m = plan.block_m
         plan.check_against(m, block_m, num_groups)
-    KernelConfig(block_m=block_m, block_n=block_n,
-                 block_k=block_k).validate(m, k, n, family="wgrad")
+    KernelConfig(block_m=block_m, block_n=block_n, block_k=block_k,
+                 n_span=n_span, k_span=k_span).validate(m, k, n,
+                                                        family="wgrad")
 
+    wk = block_k * k_span
+    wn = block_n * n_span
     in_specs = [
         # x tile: globally block-aligned copy of the visit's M-tile,
-        # K-slice
-        pl.BlockSpec((block_m, block_k),
+        # K-span slice (resident across the super-tile's N sub-steps)
+        pl.BlockSpec((block_m, wk),
                      lambda k_i, n_i, t, go, gi, mi: (mi[t], k_i)),
-        # dy tile: same M-tile, N-slice
-        pl.BlockSpec((block_m, block_n),
+        # dy tile: same M-tile, N-span slice
+        pl.BlockSpec((block_m, wn),
                      lambda k_i, n_i, t, go, gi, mi: (mi[t], n_i)),
     ]
     return _run_ragged_contraction(
         _gmm_wgrad_kernel, (x, dy), in_specs, group_sizes,
         m=m, k=k, n=n, num_groups=num_groups, block_m=block_m,
         block_n=block_n, block_k=block_k, out_dtype=out_dtype,
-        interpret=interpret, plan=plan)
+        interpret=interpret, plan=plan, n_span=n_span, k_span=k_span)
 
 
 # ---------------------------------------------------------------------------
@@ -236,7 +287,7 @@ def _gmm_wgrad_fp8_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
                           out_ref,                          # VMEM out
                           acc_ref,                          # scratch
                           *, block_m, block_k, block_n, max_visits,
-                          out_dtype):
+                          out_dtype, n_span, k_span):
     k_i = pl.program_id(0)
     n_i = pl.program_id(1)
     first, last, owned = _visit_bookkeeping(
@@ -247,24 +298,26 @@ def _gmm_wgrad_fp8_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
     def _zero_acc():
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # per-row 1x128 tile scales for this visit's K-slice / N-slice (whole
-    # scale rows travel on the M-tile like the forward's S_A over-fetch)
+    # per-row 1x128 tile scales for this visit's K-span / N-span slice
+    # (whole scale rows travel on the M-tile like the forward's S_A
+    # over-fetch; the span widens the slice, not the fetch)
     kq = block_k // QUANT_BLOCK
     nq = block_n // QUANT_BLOCK
-    sx = jax.lax.dynamic_slice(sx_ref[...], (0, k_i * kq), (block_m, kq))
-    sdy = jax.lax.dynamic_slice(sdy_ref[...], (0, n_i * nq), (block_m, nq))
-    sx_full = jnp.repeat(sx, QUANT_BLOCK, axis=1)       # (bm, bk)
-    sdy_full = jnp.repeat(sdy, QUANT_BLOCK, axis=1)     # (bm, bn)
+    sx = jax.lax.dynamic_slice(sx_ref[...], (0, k_i * k_span * kq),
+                               (block_m, k_span * kq))
+    sdy = jax.lax.dynamic_slice(sdy_ref[...], (0, n_i * n_span * nq),
+                                (block_m, n_span * nq))
+    sx_full = jnp.repeat(sx, QUANT_BLOCK, axis=1)       # (bm, wk)
+    sdy_full = jnp.repeat(sdy, QUANT_BLOCK, axis=1)     # (bm, wn)
 
     # dequantize-on-visit with the scale-multiply folded into the masked
     # prologue: one jnp.where zeroes unowned rows (whose fp8 payload AND
     # scale rows may be garbage — 0 * NaN would poison the accumulation)
-    # and rescales owned ones, then the transposed dot accumulates in f32
+    # and rescales owned ones, then the sub-tile dots accumulate in f32
     x = jnp.where(owned, x_ref[...].astype(jnp.float32) * sx_full, 0.0)
     dy = jnp.where(owned, dy_ref[...].astype(jnp.float32) * sdy_full, 0.0)
-    acc_ref[...] += jax.lax.dot_general(
-        x, dy, dimension_numbers=(((0,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
+    _span_accumulate(acc_ref, x, dy, block_k=block_k, block_n=block_n,
+                     n_span=n_span, k_span=k_span)
 
     @pl.when(last)
     def _store():
@@ -274,7 +327,7 @@ def _gmm_wgrad_fp8_kernel(group_offsets_ref, group_ids_ref, m_tile_ids_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("num_groups", "block_m", "block_n", "block_k",
-                     "out_dtype", "interpret"))
+                     "out_dtype", "interpret", "n_span", "k_span"))
 def gmm_pallas_wgrad_fp8(x_fp8: jax.Array, s_x: jax.Array,
                          dy_fp8: jax.Array, s_dy: jax.Array,
                          group_sizes: jax.Array, *,
@@ -283,7 +336,8 @@ def gmm_pallas_wgrad_fp8(x_fp8: jax.Array, s_x: jax.Array,
                          block_k: int = 128,
                          out_dtype: Any = jnp.float32,
                          interpret: bool = False,
-                         plan: TilePlan | None = None):
+                         plan: TilePlan | None = None,
+                         n_span: int = 1, k_span: int = 1):
     """Padding-free ragged-contraction grouped GEMM with fp8 operands.
 
     x_fp8:  [M, K]  fp8 e4m3 — the forward's quantized activation (the
@@ -296,6 +350,9 @@ def gmm_pallas_wgrad_fp8(x_fp8: jax.Array, s_x: jax.Array,
     plan:   optional precomputed :class:`TilePlan` — the SAME plan every
             other GEMM of this routing decision used; its ``block_m``
             governs the contraction tiling when given.
+    n_span/k_span: multi-tile schedule (see :func:`gmm_pallas_wgrad`) —
+            the scale rows stay resident with their operand tile, so the
+            span cuts the scale-row re-fetch too.
     returns [G, K, N] out_dtype with ``dw[g] = x_g^T @ dy_g`` where each
             visit dequantizes its owned rows (scale-multiply in the masked
             prologue) before the f32-accumulated transposed dot; groups
@@ -322,18 +379,22 @@ def gmm_pallas_wgrad_fp8(x_fp8: jax.Array, s_x: jax.Array,
         block_m = plan.block_m
         plan.check_against(m, block_m, num_groups)
     KernelConfig(block_m=block_m, block_n=block_n, block_k=block_k,
-                 wgrad_precision="fp8").validate(m, k, n, family="wgrad")
+                 wgrad_precision="fp8", n_span=n_span,
+                 k_span=k_span).validate(m, k, n, family="wgrad")
 
+    wk = block_k * k_span
+    wn = block_n * n_span
     in_specs = [
-        # x tile: the visit's M-tile, K-slice (fp8 payload)
-        pl.BlockSpec((block_m, block_k),
+        # x tile: the visit's M-tile, K-span slice (fp8 payload, resident
+        # across the super-tile's N sub-steps)
+        pl.BlockSpec((block_m, wk),
                      lambda k_i, n_i, t, go, gi, mi: (mi[t], k_i)),
         # S_x: whole scale row per M-tile (forward-style over-fetch,
         # padded to the 128-lane VMEM tile)
         pl.BlockSpec((block_m, kb),
                      lambda k_i, n_i, t, go, gi, mi: (mi[t], 0)),
-        # dy tile: same M-tile, N-slice (fp8 payload)
-        pl.BlockSpec((block_m, block_n),
+        # dy tile: same M-tile, N-span slice (fp8 payload)
+        pl.BlockSpec((block_m, wn),
                      lambda k_i, n_i, t, go, gi, mi: (mi[t], n_i)),
         # S_dy: whole scale row per M-tile
         pl.BlockSpec((block_m, nb),
@@ -343,4 +404,4 @@ def gmm_pallas_wgrad_fp8(x_fp8: jax.Array, s_x: jax.Array,
         _gmm_wgrad_fp8_kernel, (x_fp8, s_x, dy_fp8, s_dy), in_specs,
         group_sizes, m=m, k=k, n=n, num_groups=num_groups, block_m=block_m,
         block_n=block_n, block_k=block_k, out_dtype=out_dtype,
-        interpret=interpret, plan=plan)
+        interpret=interpret, plan=plan, n_span=n_span, k_span=k_span)

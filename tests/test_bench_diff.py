@@ -1,0 +1,92 @@
+"""``scripts/bench_diff.py``: regression gate over two BENCH snapshots.
+
+Loaded via importlib (``scripts/`` is deliberately not a package — the
+tool must stay a stdlib-only single file so the jax-free CI step can run
+it)."""
+import importlib.util
+import io
+import json
+import pathlib
+
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff",
+    pathlib.Path(__file__).resolve().parents[1] / "scripts" / "bench_diff.py")
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+def _snap(tmp_path, name, rows, **meta):
+    p = tmp_path / name
+    p.write_text(json.dumps({"date": "2026-08-08", "device": "cpu",
+                             "rows": rows, **meta}))
+    return str(p)
+
+
+def _row(name, us=None, backend=None, measured=None, **extra):
+    row = {"name": name, **extra}
+    if us is not None:
+        row["us_per_call"] = us
+    if backend is not None:
+        row["backend"] = backend
+    if measured is not None:
+        row["measured"] = measured
+    return row
+
+
+def test_pass_within_threshold(tmp_path):
+    old = _snap(tmp_path, "old.json",
+                [_row("a", 100.0, measured=True),
+                 _row("b", 50.0, measured=True)])
+    new = _snap(tmp_path, "new.json",
+                [_row("a", 105.0, measured=True),
+                 _row("b", 40.0, measured=True)])  # improvement
+    buf = io.StringIO()
+    assert bench_diff.diff(old, new, 0.10, out=buf) == 0
+    out = buf.getvalue()
+    assert "improved b" in out and "REGRESSION" not in out
+
+
+def test_regression_detected(tmp_path):
+    old = _snap(tmp_path, "old.json", [_row("a", 100.0, measured=True)])
+    new = _snap(tmp_path, "new.json", [_row("a", 150.0, measured=True)])
+    buf = io.StringIO()
+    assert bench_diff.diff(old, new, 0.10, out=buf) == 1
+    assert "REGRESSION a" in buf.getvalue()
+
+
+def test_unmeasured_rows_skipped(tmp_path):
+    buf = io.StringIO()
+    # derived-only rows (cost-model columns) never fail the diff
+    old = _snap(tmp_path, "old.json",
+                [_row("a", 100.0, measured=True),
+                 _row("d", measured=False, operand_bytes=123)])
+    new = _snap(tmp_path, "new.json",
+                [_row("a", 101.0, measured=True),
+                 _row("d", measured=False, operand_bytes=999)])
+    assert bench_diff.diff(old, new, 0.10, out=buf) == 0
+
+
+def test_backend_change_skipped(tmp_path):
+    old = _snap(tmp_path, "old.json",
+                [_row("a", 100.0, backend="xla_ragged", measured=True)])
+    new = _snap(tmp_path, "new.json",
+                [_row("a", 900.0, backend="pallas_interpret", measured=True)])
+    buf = io.StringIO()
+    assert bench_diff.diff(old, new, 0.10, out=buf) == 0
+    assert "SKIP a: backend changed" in buf.getvalue()
+
+
+def test_pre_protocol_rows_use_time_presence(tmp_path):
+    # the 2026-08-08 seed snapshot has no `measured`/`backend` keys: any
+    # row carrying us_per_call must still be compared
+    old = _snap(tmp_path, "old.json", [_row("a", 100.0), _row("d")])
+    new = _snap(tmp_path, "new.json",
+                [_row("a", 150.0, measured=True), _row("d", measured=False)])
+    assert bench_diff.diff(old, new, 0.10, out=io.StringIO()) == 1
+
+
+def test_disjoint_names_pass(tmp_path):
+    old = _snap(tmp_path, "old.json", [_row("gone", 10.0, measured=True)])
+    new = _snap(tmp_path, "new.json", [_row("fresh", 10.0, measured=True)])
+    assert bench_diff.diff(old, new, 0.10, out=io.StringIO()) == 0

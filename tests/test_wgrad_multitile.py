@@ -1,0 +1,190 @@
+"""Multi-tile VMEM-resident wgrad schedule: bitwise parity with the
+single-tile schedule in both precisions over ragged shapes, the span
+axes' validation/pool/autotune plumbing, the resource-model footprint
+growth, and the traffic model's strict byte reduction.
+
+Bitwise (not allclose) parity is the load-bearing claim: the multi-tile
+kernel assembles each visit's ``(k_span*bk, n_span*bn)`` update from the
+SAME-shape ``(bm, bk) x (bm, bn)`` dots the single-tile grid runs and
+applies it in one accumulator add, so the f32 accumulation order per
+(k, n) output cell is preserved exactly."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import dispatch, ref
+from repro.kernels import plan as plan_mod
+from repro.kernels import resources
+from repro.kernels.plan import KernelConfig
+from repro.kernels.wgrad_kernel import gmm_pallas_wgrad, gmm_pallas_wgrad_fp8
+
+# ragged: empty group + sum<M capacity tail; dims sized so spans 2 and 4
+# both divide (K=N=512, bk=bn=128)
+SIZES = [200, 0, 150, 100]
+M, K, N, G = 512, 512, 512, 4
+SPANS = [(2, 2), (4, 4), (2, 1), (1, 2), (4, 2)]
+
+
+def _bf16_inputs(seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.bfloat16)
+    dy = jnp.asarray(rng.standard_normal((M, N)), jnp.bfloat16)
+    return x, dy, jnp.asarray(SIZES, jnp.int32)
+
+
+def _fp8_inputs(seed=0):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.standard_normal((M, K)), jnp.float32)
+    dy = jnp.asarray(rng.standard_normal((M, N)), jnp.float32)
+    x8, sx = ref.quantize_tilewise_ref(x)
+    d8, sd = ref.quantize_tilewise_ref(dy)
+    return x8, sx, d8, sd, jnp.asarray(SIZES, jnp.int32)
+
+
+@pytest.mark.parametrize("n_span,k_span", SPANS)
+def test_multitile_bitwise_matches_single_tile_bf16(n_span, k_span):
+    x, dy, gs = _bf16_inputs()
+    single = gmm_pallas_wgrad(x, dy, gs, num_groups=G, interpret=True)
+    multi = gmm_pallas_wgrad(x, dy, gs, num_groups=G,
+                             n_span=n_span, k_span=k_span, interpret=True)
+    assert np.array_equal(np.asarray(single), np.asarray(multi)), \
+        f"span ({k_span},{n_span}) changed bf16 wgrad bits"
+
+
+@pytest.mark.parametrize("n_span,k_span", SPANS)
+def test_multitile_bitwise_matches_single_tile_fp8(n_span, k_span):
+    x8, sx, d8, sd, gs = _fp8_inputs()
+    single = gmm_pallas_wgrad_fp8(x8, sx, d8, sd, gs, num_groups=G,
+                                  interpret=True)
+    multi = gmm_pallas_wgrad_fp8(x8, sx, d8, sd, gs, num_groups=G,
+                                 n_span=n_span, k_span=k_span,
+                                 interpret=True)
+    assert np.array_equal(np.asarray(single), np.asarray(multi)), \
+        f"span ({k_span},{n_span}) changed fp8 wgrad bits"
+
+
+def test_multitile_matches_oracle():
+    x, dy, gs = _bf16_inputs()
+    multi = gmm_pallas_wgrad(x, dy, gs, num_groups=G,
+                             n_span=2, k_span=2, interpret=True)
+    want = dispatch.wgrad_xla_exact(x, dy, gs, num_groups=G)
+    np.testing.assert_allclose(np.asarray(multi), np.asarray(want),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_dispatch_routes_config_spans():
+    """`KernelConfig.n_span/k_span` reach the kernel through the wgrad
+    registry entries (same dispatch seam as every tile field)."""
+    x, dy, gs = _bf16_inputs()
+    cfg1 = KernelConfig(backend="pallas_interpret")
+    cfg2 = cfg1.with_(n_span=2, k_span=2)
+    out1 = dispatch.grouped_gemm_wgrad(x, dy, gs, config=cfg1)
+    out2 = dispatch.grouped_gemm_wgrad(x, dy, gs, config=cfg2)
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))
+
+
+def test_span_divisibility_validated():
+    x, dy, gs = _bf16_inputs()
+    with pytest.raises(ValueError, match="k_span"):
+        # K=512: block_k=128 * k_span=8 = 1024 does not divide
+        gmm_pallas_wgrad(x, dy, gs, num_groups=G, k_span=8, interpret=True)
+
+
+def test_span_field_validation():
+    with pytest.raises(ValueError, match="n_span"):
+        KernelConfig(n_span=0)
+    with pytest.raises(ValueError, match="k_span"):
+        KernelConfig(k_span=-2)
+
+
+def test_effective_blocks_and_compatible():
+    cfg = KernelConfig(n_span=2, k_span=4)
+    # spans only widen the wgrad family's effective tiles
+    assert cfg.effective_blocks("wgrad") == (128 * 4, 128 * 2)
+    assert cfg.effective_blocks("gemm") == (128, 128)
+    assert cfg.compatible(512, 256, family="wgrad")
+    assert not cfg.compatible(256, 256, family="wgrad")
+    assert cfg.compatible(256, 256, family="gemm")
+
+
+def test_config_span_roundtrip():
+    cfg = KernelConfig(n_span=2, k_span=4)
+    again = KernelConfig.from_dict(cfg.to_dict())
+    assert (again.n_span, again.k_span) == (2, 4)
+    # pre-span cache entries deserialize to spans=1
+    legacy = {k: v for k, v in cfg.to_dict().items()
+              if k not in ("n_span", "k_span")}
+    assert KernelConfig.from_dict(legacy).n_span == 1
+
+
+def test_pool_has_span_entries():
+    spans = {(c.n_span, c.k_span) for c in plan_mod.CONFIG_POOL}
+    assert (1, 1) in spans
+    assert any(s != (1, 1) for s in spans), \
+        "CONFIG_POOL lost its multi-tile wgrad span entries"
+    for c in plan_mod.DECODE_POOL:
+        assert (c.n_span, c.k_span) == (1, 1)
+
+
+def test_candidate_pool_family_filters_spans():
+    # wgrad at K=N=256 admits span-2 but not span-4 entries
+    wgrad = plan_mod.candidate_pool(256, 256, family="wgrad")
+    assert any(c.n_span == 2 for c in wgrad)
+    assert not any(c.n_span == 4 for c in wgrad)
+    # the gemm family never sees effective-tile widening
+    gemm = plan_mod.candidate_pool(256, 256, family="gemm")
+    assert all(c.compatible(256, 256) for c in gemm)
+
+
+def test_autotune_non_wgrad_ops_skip_span_entries(tmp_path):
+    cache = str(tmp_path / "cache.json")
+    cfg = plan_mod.autotune(256, 512, 512, 4, measure=False, op="gemm",
+                            cache_path=cache)
+    assert (cfg.n_span, cfg.k_span) == (1, 1)
+
+
+def test_autotune_wgrad_can_select_spans(tmp_path):
+    cache = str(tmp_path / "cache.json")
+    # cost-model-only ranking: the traffic model strictly prefers wider
+    # spans at equal block_m, so the pick must carry a span > 1
+    cfg = plan_mod.autotune(512, 512, 512, 4, measure=False, op="wgrad",
+                            cache_path=cache)
+    assert cfg.n_span > 1 or cfg.k_span > 1, \
+        f"wgrad cost model picked single-tile {cfg} over a span entry"
+    # the cached pick round-trips with its spans
+    again = plan_mod.autotune(512, 512, 512, 4, measure=False, op="wgrad",
+                              cache_path=cache)
+    assert (again.n_span, again.k_span) == (cfg.n_span, cfg.k_span)
+
+
+def test_wgrad_operand_bytes_strictly_fewer():
+    base = KernelConfig()
+    for prec in ("bf16", "fp8"):
+        single = plan_mod.wgrad_operand_bytes(M, K, N, G, base,
+                                              precision=prec)
+        span = plan_mod.wgrad_operand_bytes(
+            M, K, N, G, base.with_(n_span=2, k_span=2), precision=prec)
+        wider = plan_mod.wgrad_operand_bytes(
+            M, K, N, G, base.with_(n_span=4, k_span=4), precision=prec)
+        assert span < single, (prec, span, single)
+        assert wider < span, (prec, wider, span)
+
+
+def test_footprint_grows_with_spans():
+    fp1 = resources.wgrad_footprint(128, 128, 128, k=K, n=N,
+                                    precision="bf16")
+    fp2 = resources.wgrad_footprint(128, 128, 128, k=K, n=N,
+                                    precision="bf16", n_span=2, k_span=2)
+    assert fp2["total"] > fp1["total"]
+    # the whole span pool stays VMEM-feasible at the lint REF shape for
+    # both precisions under the v5e (16 MiB) budget
+    for cfg in plan_mod.CONFIG_POOL:
+        if cfg.n_span == 1 and cfg.k_span == 1:
+            continue
+        for prec in ("bf16", "fp8"):
+            reason = resources.infeasible_reason(
+                "wgrad", cfg, 8192, 4096, 4096,
+                vmem_bytes=resources.VMEM_BYTES["tpu v5e"],
+                wgrad_precision=prec)
+            assert reason is None, f"{cfg} ({prec}): {reason}"
